@@ -1,0 +1,93 @@
+"""Paper Figs. 13-14 (UC1 drug discovery): LAT design-space exploration of a
+MeasureOverlap-style kernel (sum of ligand-vs-pocket pairwise distances)
+over parallelism degree x pocket size, measuring time + modeled energy."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.autotune.dse import Lat
+from repro.autotune.margot import KnowledgeBase
+from repro.power.rapl import RAPLModel
+
+
+def _measure_overlap(ligand, pocket, chunk: int):
+    """Sum over ligand atoms of min distance to pocket atoms, chunked over
+    the pocket (the parallelism knob = number of chunks processed as one
+    vmapped batch = OpenMP threads analogue)."""
+    chunks = pocket.reshape(chunk, -1, 3)
+
+    def per_chunk(pc):
+        d = jnp.sum((ligand[:, None, :] - pc[None, :, :]) ** 2, -1)
+        return jnp.min(d, axis=1)
+
+    dmin = jnp.min(jax.vmap(per_chunk)(chunks), axis=0)
+    return jnp.sum(jnp.sqrt(dmin))
+
+
+def run(artifacts: str) -> list[str]:
+    model = RAPLModel()
+    rng = np.random.default_rng(0)
+    ligand = jnp.asarray(rng.normal(0, 1, (128, 3)), jnp.float32)
+    pockets = {n: jnp.asarray(rng.normal(0, 4, (n, 3)), jnp.float32)
+               for n in (5000, 7000, 10000, 12000, 50000)}  # paper's sizes
+
+    fns = {}
+
+    def time_metric(num_pocket_atoms, threads):
+        key = (num_pocket_atoms, threads)
+        if key not in fns:
+            fns[key] = jax.jit(lambda l, p: _measure_overlap(l, p, threads))
+        fn = fns[key]
+        pocket = pockets[num_pocket_atoms][: num_pocket_atoms - num_pocket_atoms % threads]
+        jax.block_until_ready(fn(ligand, pocket))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(ligand, pocket))
+        wall = time.perf_counter() - t0
+        return wall / threads  # ideal-parallel model (single CPU device)
+
+    def energy_metric(num_pocket_atoms, threads):
+        t = time_metric(num_pocket_atoms, threads)
+        return model.energy(utilization=0.7, freq=1.0, seconds=t) * threads
+
+    lat = (Lat("uc1_exploration")
+           .add_var("num_pocket_atoms", list(pockets))
+           .add_var_range("threads", 0, 5, 1, lambda x: 2 ** x))
+    lat.add_metric("time", time_metric)
+    lat.add_metric("energy", energy_metric)
+    lat.set_num_tests(2)
+    results = lat.tune()
+    lat.to_csv(os.path.join(artifacts, "docking_dse.csv"))
+
+    # Fig. 14: speedup/energy-improvement vs threads at the largest pocket
+    biggest = max(pockets)
+    base = next(r for r in results if r["knobs"] == {"num_pocket_atoms": biggest,
+                                                     "threads": 1})
+    curve = []
+    for th in (1, 2, 4, 8, 16):
+        r = next(x for x in results if x["knobs"] == {
+            "num_pocket_atoms": biggest, "threads": th})
+        curve.append({
+            "threads": th,
+            "speedup": base["metrics"]["time"][0] / r["metrics"]["time"][0],
+            "energy_improvement": base["metrics"]["energy"][0]
+            / r["metrics"]["energy"][0],
+        })
+    kb = KnowledgeBase.from_dse(results, ["num_pocket_atoms", "threads"],
+                                ["time", "energy"])
+    with open(os.path.join(artifacts, "docking_curve.json"), "w") as f:
+        json.dump(curve, f, indent=1)
+    for c in curve:
+        print(f"  threads={c['threads']:2d} speedup={c['speedup']:5.2f} "
+              f"energy_x={c['energy_improvement']:5.2f}")
+    best = curve[-1]
+    return [
+        f"docking_dse,{base['metrics']['time'][0]*1e6:.0f},"
+        f"kb_points={len(kb)};speedup@16={best['speedup']:.2f}",
+    ]

@@ -1,0 +1,89 @@
+"""Pallas kernel benches: interpret-mode correctness deltas + wall time of
+the XLA fast paths + analytic VMEM/arithmetic-intensity table (the TPU-side
+profile is structural; see DESIGN.md §7)."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.kernel import vmem_bytes
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rglru.ref import rglru_assoc, rglru_scan
+from repro.kernels.rwkv6.ref import wkv_chunked, wkv_scan
+
+
+def _time(fn, *args, reps=3):
+    out = jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps, out
+
+
+def run(artifacts: str) -> list[str]:
+    rows = []
+    report = {}
+
+    # flash attention: XLA blocked path wall time + kernel analytic profile
+    B, S, H, K, D = 2, 1024, 8, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, K, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, K, D), jnp.bfloat16)
+    ref_fn = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    t_ref, ref_out = _time(ref_fn, q, k, v)
+    out = flash_attention(q, k, v, causal=True, block_q=256, block_kv=256,
+                          interpret=True)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref_out.astype(jnp.float32))))
+    for bq, bkv in ((256, 256), (512, 512), (512, 1024)):
+        vb = vmem_bytes(bq, bkv, 128)
+        flops = 4 * bq * bkv * 128
+        ai = flops / vb
+        report[f"flash_{bq}x{bkv}"] = {
+            "vmem_bytes": vb, "fits_16MB_vmem": vb < 16 * 2**20,
+            "arithmetic_intensity": ai,
+        }
+    rows.append(f"flash_attention_ref,{t_ref*1e6:.0f},interp_err={err:.4f}")
+    print(f"  flash: ref {t_ref*1e3:.1f}ms, interpret err {err:.4f}; "
+          f"VMEM 512x512 = {vmem_bytes(512,512,128)/2**20:.1f}MiB")
+
+    # wkv: chunked (roofline path) vs sequential scan wall time
+    B, S, Hh, C = 2, 512, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    r_, k_, v_ = (jax.random.normal(ks[i], (B, S, Hh, C)) for i in range(3))
+    w_ = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, Hh, C))))
+    u_ = jax.random.normal(ks[4], (Hh, C))
+    s0 = jnp.zeros((B, Hh, C, C))
+    t_scan, y_scan = _time(jax.jit(lambda *a: wkv_scan(*a)[0]), r_, k_, v_, w_, u_, s0)
+    t_chunk, y_chunk = _time(jax.jit(lambda *a: wkv_chunked(*a)[0]), r_, k_, v_, w_, u_, s0)
+    err = float(jnp.max(jnp.abs(y_scan.astype(jnp.float32)
+                                - y_chunk.astype(jnp.float32))))
+    rows.append(f"wkv_chunked,{t_chunk*1e6:.0f},"
+                f"speedup_vs_scan={t_scan/t_chunk:.2f};err={err:.4f}")
+    print(f"  wkv: scan {t_scan*1e3:.1f}ms chunked {t_chunk*1e3:.1f}ms "
+          f"({t_scan/t_chunk:.1f}x) err={err:.1e}")
+
+    # rglru: associative scan vs sequential
+    B, S, Dd = 4, 2048, 256
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    a_ = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, Dd)))
+    b_ = jax.random.normal(ks[1], (B, S, Dd))
+    h0 = jax.random.normal(ks[2], (B, Dd))
+    t_seq, _ = _time(jax.jit(lambda *x: rglru_scan(*x)[0]), a_, b_, h0)
+    t_assoc, _ = _time(jax.jit(lambda *x: rglru_assoc(*x)[0]), a_, b_, h0)
+    rows.append(f"rglru_assoc,{t_assoc*1e6:.0f},"
+                f"speedup_vs_scan={t_seq/t_assoc:.2f}")
+    print(f"  rglru: scan {t_seq*1e3:.1f}ms assoc {t_assoc*1e3:.1f}ms "
+          f"({t_seq/t_assoc:.1f}x)")
+
+    with open(os.path.join(artifacts, "kernels.json"), "w") as f:
+        json.dump(report, f, indent=1)
+    return rows

@@ -1,0 +1,65 @@
+"""Paper §2.2 / Fig. 3 (HalfPrecisionOpenCL): generate precision-mix
+versions of the same kernel region, evaluate each at runtime for time and
+error vs the fp32 oracle — the data the autotuner consumes."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.program import Program
+from repro.core.strategies.precision import MixedPrecisionVersions
+from repro.core.weaver import weave
+from repro.nn.module import init_params
+
+
+def run(artifacts: str) -> list[str]:
+    program = Program.from_arch("yi-6b", reduced=True)
+    aspect = MixedPrecisionVersions(
+        ["*attn*", "*ffn*", "*embed*"], ["double", "float", "half"],
+        max_versions=31,  # the paper generated 31 OpenCL versions
+    )
+    woven = weave(program, [aspect])
+    model = program.model
+    B, S = 2, 32
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, S), 0,
+                                program.cfg.vocab)
+
+    def logits_for(state):
+        params = init_params(model, jax.random.PRNGKey(1), state.policies)
+        fwd = jax.jit(lambda p, t: model(p, {"tokens": t},
+                                         ctx=state.make_ctx(), mode="dense")[0])
+        out = fwd(params, tokens)  # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = fwd(params, tokens)
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / 3
+        return np.asarray(out, np.float32), dt
+
+    # oracle: everything "double" (fp32 on TPU terms)
+    oracle_state = woven.state.copy()
+    oracle_state.policies.override("*", "double")
+    ref, ref_dt = logits_for(oracle_state)
+
+    results = []
+    for name in list(woven.variants)[:31]:
+        out, dt = logits_for(woven.variants[name])
+        err = float(np.max(np.abs(out - ref)) / (np.max(np.abs(ref)) + 1e-9))
+        results.append({"version": name, "time_us": dt * 1e6,
+                        "rel_error": err, "speedup_vs_double": ref_dt / dt})
+    results.sort(key=lambda r: r["time_us"])
+    with open(os.path.join(artifacts, "precision_versions.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    for r in results[:5]:
+        print(f"  {r['version']:24s} {r['time_us']:9.0f}us err={r['rel_error']:.4f}")
+    best = results[0]
+    return [
+        f"precision_versions,{best['time_us']:.1f},"
+        f"n={len(results)};best={best['version']};err={best['rel_error']:.4f}",
+    ]

@@ -1,0 +1,73 @@
+"""§Roofline report generator: reads artifacts/dryrun/*.json (written by
+launch/dryrun.py) and renders the per-(arch x shape x mesh) table consumed
+by EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(suffix_filter: str | None = "") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        name = os.path.basename(path)[:-5]
+        parts = name.split("__")
+        suffix = parts[2].split("_", 2)[-1] if False else ""
+        with open(path) as f:
+            rec = json.load(f)
+        rec["_file"] = name
+        rec["_is_variant"] = not (name.endswith("pod_16x16")
+                                  or name.endswith("multipod_2x16x16"))
+        out.append(rec)
+    return out
+
+
+def table(records: list[dict], mesh: str = "pod_16x16",
+          variants: bool = False) -> str:
+    hdr = (f"| arch | shape | accum | compute s | memory s | collective s | "
+           f"bound | useful | roofline frac | HBM fit |\n"
+           f"|---|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for rec in records:
+        if rec.get("mesh") != mesh or rec.get("_is_variant", False) != variants:
+            continue
+        roof = rec.get("roofline", rec)
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec.get('accum_steps', 1)} | "
+            f"{roof['compute_s']:.3f} | {roof['memory_s']:.3f} | "
+            f"{roof['collective_s']:.3f} | {roof['bottleneck']} | "
+            f"{roof['useful_ratio']:.2f} | {roof['roofline_fraction']:.3f} | "
+            f"{'yes' if rec.get('hbm_fits_v5e') else 'NO'} |"
+        )
+    return "\n".join(lines)
+
+
+def run(artifacts: str) -> list[str]:
+    records = load_records()
+    base = [r for r in records if not r["_is_variant"]]
+    if not base:
+        print("  (no dry-run artifacts; run python -m repro.launch.dryrun --all)")
+        return ["roofline_report,0,cells=0"]
+    pod = [r for r in base if r["mesh"] == "pod_16x16"]
+    multi = [r for r in base if r["mesh"] == "multipod_2x16x16"]
+    fracs = [(r["roofline"]["roofline_fraction"], r["arch"], r["shape"])
+             for r in pod if "roofline" in r]
+    fracs.sort()
+    print(f"  {len(pod)} pod cells, {len(multi)} multipod cells")
+    if fracs:
+        print(f"  worst roofline fraction: {fracs[0][1]} x {fracs[0][2]} "
+              f"= {fracs[0][0]:.3f}")
+        print(f"  best : {fracs[-1][1]} x {fracs[-1][2]} = {fracs[-1][0]:.3f}")
+    md = (f"## Single-pod (16x16) baseline\n\n{table(records)}\n\n"
+          f"## Multi-pod (2x16x16)\n\n{table(records, 'multipod_2x16x16')}\n")
+    with open(os.path.join(artifacts, "roofline_table.md"), "w") as f:
+        f.write(md)
+    fits = sum(1 for r in pod if r.get("hbm_fits_v5e"))
+    return [
+        f"roofline_report,{len(pod)},fits_pod={fits}/{len(pod)};"
+        f"multipod_cells={len(multi)}",
+    ]

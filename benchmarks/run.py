@@ -1,0 +1,48 @@
+"""Benchmark harness — one entry per paper table/figure (deliverable d).
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark plus the richer
+per-benchmark artifacts under artifacts/bench/.
+
+  weaving            Tables 1-2   static/dynamic weaving metrics
+  precision_versions §2.2 Fig 3   N precision-mix versions + error/time
+  betweenness        Tables 4-5   BC runtimes F/FH/FHM/D/DH/DHM x shards
+  docking_dse        Figs 13-14   LAT exploration (parallelism x pocket)
+  navigation         Figs 17-19   mARGOt vs baseline QoS + NQI sweep
+  kernels            (kernels)    Pallas vs oracle + analytic VMEM/AI
+  roofline_report    §Roofline    table from dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+def main() -> None:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    from benchmarks import (
+        betweenness,
+        docking_dse,
+        kernels,
+        navigation_autotune,
+        precision_versions,
+        roofline_report,
+        weaving,
+    )
+
+    rows: list[str] = ["name,us_per_call,derived"]
+    for mod in (weaving, precision_versions, kernels, betweenness,
+                docking_dse, navigation_autotune, roofline_report):
+        print(f"== {mod.__name__} ==", flush=True)
+        rows.extend(mod.run(ARTIFACTS))
+    print("\n".join(rows))
+    with open(os.path.join(ARTIFACTS, "summary.csv"), "w") as f:
+        f.write("\n".join(rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""UC1 (paper §4): computer-accelerated drug discovery.
+
+A MeasureOverlap-style docking kernel is auto-parallelized, explored with
+LAT across (parallelism x pocket size), and the resulting knowledge base
+drives mARGOt at runtime as ligand batches stream through.
+
+    PYTHONPATH=src python examples/drug_discovery.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.autotune.dse import Lat
+from repro.autotune.margot import LE, Goal, KnowledgeBase, Margot, State
+
+
+def measure_overlap(ligand, pocket, chunks: int):
+    pc = pocket.reshape(chunks, -1, 3)
+    d = jax.vmap(lambda c: jnp.min(
+        jnp.sum((ligand[:, None] - c[None]) ** 2, -1), 1))(pc)
+    return jnp.sum(jnp.sqrt(jnp.min(d, 0)))
+
+
+def main():
+    rng = np.random.default_rng(0)
+    ligands = jnp.asarray(rng.normal(0, 1, (64, 96, 3)), jnp.float32)
+    pocket = jnp.asarray(rng.normal(0, 4, (8192, 3)), jnp.float32)
+    fns = {}
+
+    def time_for(chunks):
+        if chunks not in fns:
+            fns[chunks] = jax.jit(lambda l: measure_overlap(l, pocket, chunks))
+        fn = fns[chunks]
+        jax.block_until_ready(fn(ligands[0]))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(ligands[0]))
+        return (time.perf_counter() - t0) / chunks  # ideal-parallel model
+
+    # design-time DSE (paper Fig. 13)
+    lat = Lat("uc1").add_var("chunks", [1, 2, 4, 8, 16])
+    lat.add_metric("time", lambda chunks: time_for(chunks))
+    lat.set_num_tests(3)
+    lat.tune()
+    kb = KnowledgeBase.from_dse(lat.results, ["chunks"], ["time"])
+
+    # runtime autotuning: keep per-ligand latency under budget, minimize
+    # resources (chunks = nodes occupied)
+    budget_s = 2 * min(r["metrics"]["time"][0] for r in lat.results)
+    margot = Margot(kb, [State("sla", "time", maximize=False,
+                               constraints=[Goal("lat", "time", LE, budget_s)])])
+    done = 0
+    t0 = time.perf_counter()
+    for ligand in ligands:
+        op = margot.update()
+        score = jax.block_until_ready(
+            fns[op.knobs["chunks"]](ligand))
+        margot.observe("time", (time.perf_counter() - t0) / (done + 1))
+        done += 1
+    print(f"docked {done} ligands with chunks={margot.current.knobs['chunks']} "
+          f"(latency budget {budget_s*1e3:.2f} ms/ligand)")
+
+
+if __name__ == "__main__":
+    main()

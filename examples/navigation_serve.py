@@ -1,0 +1,55 @@
+"""UC2 (paper §5): self-adaptive navigation serving.
+
+The server answers routing-style requests with a (reduced) LM; memoization
+caches repeated routes (paper §2.4) and mARGOt trades decode quality
+(tokens generated = NQI analogue) against latency under load.
+
+    PYTHONPATH=src python examples/navigation_serve.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.autotune.margot import GE, LE, Goal, KnowledgeBase, Margot, OperatingPoint, State
+from repro.configs.base import SHAPES
+from repro.core.program import Program
+from repro.core.strategies.memoization import MemoizeStep
+from repro.launch.weave import default_weave
+from repro.runtime.server import Server, ServerConfig
+
+
+def main():
+    program = Program.from_arch("gemma-2b", kind="serve", reduced=True)
+    woven = default_weave(program, SHAPES["prefill_32k"], {},
+                          extra_aspects=[MemoizeStep(tsize=256)])
+
+    # knowledge: decode budget -> quality (NQI analogue) & latency
+    kb = KnowledgeBase([
+        OperatingPoint({"decode_tokens": n},
+                       {"quality": (min(10.0, 4.0 + n), 0.2),
+                        "latency": (0.02 * n + 0.05, 0.01)})
+        for n in (1, 2, 4, 6)
+    ])
+    margot = Margot(kb, [State("qos", "quality", True, [
+        Goal("lat", "latency", LE, 0.4)])])
+
+    server = Server(woven, ServerConfig(max_cache_len=32, decode_tokens=4),
+                    margot=margot)
+    rng = np.random.default_rng(0)
+    routes = [rng.integers(0, program.cfg.vocab, (1, 12), dtype=np.int32)
+              for _ in range(6)]
+    for i in range(12):  # repeated routes -> memo hits
+        op = margot.update()
+        out = server.serve(routes[i % len(routes)],
+                           decode_tokens=op.knobs["decode_tokens"])
+        margot.observe("latency", server.latencies[-1])
+    print(f"served {server.served}; memo hit rate "
+          f"{server.memo.hit_rate:.0%}; knob={margot.current.knobs}")
+
+
+if __name__ == "__main__":
+    main()

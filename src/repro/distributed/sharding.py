@@ -1,0 +1,157 @@
+"""Logical-axis sharding: map model logical axes to mesh axes (GSPMD).
+
+Rules are a plain dict {logical_axis: None | mesh_axis | (mesh_axes...)}
+woven by the parallelization aspects (core/strategies/parallelization.py).
+The default production layout (AutoShard) is Megatron-TP on
+vocab/heads/mlp × FSDP on embed over data × DP batch over (pod, data), with
+per-arch fallbacks for non-divisible head counts (KV replicated + sequence-
+sharded caches).
+
+Everything here is shape-aware: a dim smaller than its mesh-axis extent is
+left unsharded rather than relying on GSPMD padding for parameters.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.nn.module import Module, abstract_params, param_axes
+
+
+def _axes_tuple(v) -> tuple[str, ...]:
+    if v is None:
+        return ()
+    if isinstance(v, (tuple, list)):
+        return tuple(a for a in v if a)
+    return (v,)
+
+
+def _mesh_extent(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def logical_to_pspec(
+    axes: tuple[str | None, ...],
+    rules: Mapping[str, Any],
+    mesh: Mesh,
+    shape: tuple[int, ...] | None = None,
+) -> P | None:
+    """PartitionSpec for one tensor; None if nothing shards."""
+    entries: list[Any] = []
+    used: set[str] = set()
+    any_sharded = False
+    for i, logical in enumerate(axes):
+        mapped = _axes_tuple(rules.get(logical)) if logical else ()
+        mapped = tuple(a for a in mapped if a in mesh.shape and a not in used)
+        # shape-aware: drop trailing mesh axes until the dim divides
+        while mapped and shape is not None and (
+            shape[i] < _mesh_extent(mesh, mapped)
+            or shape[i] % _mesh_extent(mesh, mapped)
+        ):
+            mapped = mapped[:-1]
+        if mapped:
+            used.update(mapped)
+            entries.append(mapped if len(mapped) > 1 else mapped[0])
+            any_sharded = True
+        else:
+            entries.append(None)
+    if not any_sharded:
+        return None
+    return P(*entries)
+
+
+def param_shardings(model: Module, mesh: Mesh, rules: Mapping[str, Any]):
+    """NamedSharding pytree matching the params pytree."""
+    axes_tree = param_axes(model)
+    specs_tree = abstract_params(model)
+
+    def leaf(axes, sds):
+        spec = logical_to_pspec(axes, rules, mesh, sds.shape)
+        return NamedSharding(mesh, spec if spec is not None else P())
+
+    return jax.tree.map(leaf, axes_tree, specs_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, (str, type(None))) for a in x))
+
+
+# ---------------------------------------------------------------------------
+# Input sharding assignment (by leaf name)
+# ---------------------------------------------------------------------------
+
+_CACHE_LEAVES = {"k", "v", "ck", "cv"}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def input_shardings(spec_tree, mesh: Mesh, rules: Mapping[str, Any],
+                    *, stacked_layers: bool = True):
+    """Shardings for step inputs: tokens/labels/embeds/frames, caches, states.
+
+    Cache K/V tensors are (..., B, S, K, D): batch over the DP axes; KV heads
+    over model when the rule maps them, else the sequence dim over model
+    (sequence-sharded long-context cache for KV-poor archs).
+    """
+    batch = _axes_tuple(rules.get("batch"))
+    kvh = _axes_tuple(rules.get("kv_heads"))
+    kvs = _axes_tuple(rules.get("kv_seq"))
+    heads = _axes_tuple(rules.get("heads"))
+    embed = _axes_tuple(rules.get("embed_act", ()))
+
+    def assign(path, sds):
+        name = _leaf_name(path)
+        rank = len(sds.shape)
+        spec: list[Any] = [None] * rank
+
+        def put(dim: int, axes: tuple[str, ...]):
+            while axes:
+                extent = _mesh_extent(mesh, axes)
+                if sds.shape[dim] >= extent and sds.shape[dim] % extent == 0:
+                    spec[dim] = axes if len(axes) > 1 else axes[0]
+                    return
+                axes = axes[:-1]
+
+        if name in ("tokens", "labels", "positions"):
+            put(0, batch)
+        elif name in ("embeds", "frames", "enc"):
+            put(0, batch)
+        elif name in _CACHE_LEAVES and rank >= 4:
+            put(rank - 4, batch)
+            placed_kv = False
+            if kvh and sds.shape[rank - 2] % _mesh_extent(mesh, kvh) == 0 and \
+                    sds.shape[rank - 2] >= _mesh_extent(mesh, kvh):
+                put(rank - 2, kvh)
+                placed_kv = spec[rank - 2] is not None
+            if not placed_kv:
+                put(rank - 3, kvs)
+        elif name == "wkv" and rank >= 4:  # (L?, B, H, C, C)
+            put(rank - 4, batch)
+        elif name == "x_prev" and rank >= 2:
+            put(rank - 2, batch)
+        elif name in ("lru", "conv") and rank >= 2:
+            put(0 if rank == 2 else rank - 3, batch)
+        elif name in ("index", "pos"):
+            pass  # tiny metadata, replicated
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(assign, spec_tree)
+
+
+def validate_mesh_rules(mesh: Mesh, rules: Mapping[str, Any]) -> None:
+    for key, val in rules.items():
+        for a in _axes_tuple(val):
+            if a not in mesh.shape:
+                raise ValueError(f"rule {key!r} -> {val!r}: axis {a!r} not in mesh "
+                                 f"{dict(mesh.shape)}")

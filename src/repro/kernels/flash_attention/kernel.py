@@ -1,0 +1,163 @@
+"""Pallas TPU flash attention (forward): online-softmax over KV blocks.
+
+TPU mapping (DESIGN.md: adapt, don't port): the grid is
+(batch, q_heads, num_q_blocks, num_kv_blocks) with the KV dimension
+*innermost* — TPU grid steps on one core execute sequentially, so the fp32
+running max / denominator / accumulator live in VMEM scratch and persist
+across KV-block iterations (the TPU analogue of a CUDA thread-block's
+shared-memory state).  Block shapes are BlockSpec-tiled so each step's
+working set is (block_q x D) + 2 x (block_kv x D) + (block_q x block_kv)
+fp32 in VMEM, with block sizes kept at MXU-friendly multiples of 128.
+
+GQA is handled in the K/V index_map (kv_head = q_head // group), so no KV
+replication is ever materialized in HBM.  Causal and sliding-window masks
+are applied in-kernel; KV blocks that are fully masked for this q block
+skip their MXU work via pl.when (they still stream K/V in — the block-
+sparse grid-pruning variant is a recorded §Perf follow-up).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,  # VMEM blocks
+    o_ref,
+    m_scratch, l_scratch, acc_scratch,
+    *,
+    block_q: int,
+    block_kv: int,
+    kv_len: int,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    scale: float,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q_start = iq * block_q
+    k_start = ik * block_kv
+
+    # Block-level reachability: skip the MXU work for fully-masked KV blocks.
+    reachable = jnp.asarray(True)
+    if causal:
+        reachable = jnp.asarray(k_start <= q_start + block_q - 1)
+        if window is not None:
+            reachable = jnp.logical_and(
+                reachable, k_start + block_kv - 1 > q_start - window
+            )
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+        mask = kp < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, kp <= qp)
+            if window is not None:
+                mask = jnp.logical_and(mask, kp > qp - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scratch[...]  # (bq, 1)
+        l_prev = l_scratch[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new) * mask.astype(jnp.float32)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc_scratch[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scratch[...] = m_new
+        l_scratch[...] = l_new
+        acc_scratch[...] = acc
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scratch[...]
+        out = acc_scratch[...] / jnp.maximum(l, 1e-30)
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, K, T, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, D = q.shape
+    K, T = k.shape[1], k.shape[2]
+    assert H % K == 0, (H, K)
+    G = H // K
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, T)
+    assert S % block_q == 0 and T % block_kv == 0, (S, T, block_q, block_kv)
+    grid = (B, H, S // block_q, T // block_kv)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q,
+        block_kv=block_kv,
+        kv_len=T,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        scale=1.0 / np.sqrt(D),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_bytes(block_q: int, block_kv: int, head_dim: int, dtype_bytes: int = 2) -> int:
+    """Analytic VMEM working set (used by benchmarks/kernels.py)."""
+    blocks = (block_q + 2 * block_kv) * head_dim * dtype_bytes  # q + k + v
+    scratch = (block_q * (head_dim + 2)) * 4  # fp32 acc + m + l
+    scores = block_q * block_kv * 4  # fp32 s/p tile
+    return blocks + scratch + scores

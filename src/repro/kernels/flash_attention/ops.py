@@ -1,0 +1,141 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+Accepts model-layout tensors (B, S, H, D) / (B, T, K, D), handles the
+(B, H, S, D) kernel layout, interpret-mode fallback on non-TPU backends, and
+optional shard_map distribution: batch over the data(/pod) axes and q-heads
+over the model axis when divisible (KV heads are gathered per local q head
+inside each shard, so the kernel always runs a per-device dense problem).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(3, 4, 5, 6, 7, 8),
+)
+def _flash_core(q, k, v, causal, window, softcap, block_q, block_kv, interpret):
+    qt = jnp.swapaxes(q, 1, 2)  # (B,H,S,D)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_fwd(
+        qt, kt, vt,
+        causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+    return jnp.swapaxes(out, 1, 2)
+
+
+def _flash_core_fwd(q, k, v, causal, window, softcap, block_q, block_kv,
+                    interpret):
+    out = _flash_core(q, k, v, causal, window, softcap, block_q, block_kv,
+                      interpret)
+    return out, (q, k, v)
+
+
+def _flash_core_bwd(causal, window, softcap, block_q, block_kv, interpret,
+                    res, g):
+    """Backward via the reference formulation (recompute-from-inputs, the
+    flash-bwd memory posture); the fused Pallas backward kernel is a
+    recorded §Perf follow-up."""
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    q, k, v = res
+
+    def f(q, k, v):
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "block_q", "block_kv", "interpret",
+    ),
+)
+def _flash_local(q, k, v, *, causal, window, softcap, block_q, block_kv, interpret):
+    return _flash_core(q, k, v, causal, window, softcap, block_q, block_kv,
+                       interpret)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, K, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool | None = None,
+    mesh: jax.sharding.Mesh | None = None,
+    rules: Mapping[str, Any] | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _interpret_default()
+    call = functools.partial(
+        _flash_local,
+        causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+    if mesh is None:
+        return call(q, k, v)
+
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    rules = dict(rules or {})
+    batch_axes = tuple(
+        a for a in ("pod", "data")
+        if a in mesh.shape and rules.get("batch") and a in _as_tuple(rules.get("batch"))
+    )
+    model_ok = "model" in mesh.shape and H % mesh.shape["model"] == 0
+    head_spec = "model" if model_ok else None
+    q_spec = P(batch_axes or None, None, head_spec, None)
+    kv_spec = P(batch_axes or None, None, None, None)  # KV heads replicated over model
+
+    group = H // K
+
+    def body(q_l, k_l, v_l):
+        if model_ok:
+            h_loc = q_l.shape[2]
+            off = jax.lax.axis_index("model") * h_loc
+            idx = (off + jnp.arange(h_loc)) // group
+            k_l = jnp.take(k_l, idx, axis=2)
+            v_l = jnp.take(v_l, idx, axis=2)
+        return call(q_l, k_l, v_l)
+
+    shard = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(q_spec, kv_spec, kv_spec),
+        out_specs=q_spec,
+        check_vma=False,
+    )
+    return shard(q, k, v)
+
+
+def _as_tuple(x):
+    if x is None:
+        return ()
+    if isinstance(x, (list, tuple)):
+        return tuple(x)
+    return (x,)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for flash attention (GQA, causal/sliding-window, softcap)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, T, K, D)
+    v: jax.Array,  # (B, T, K, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, S, K, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, k.astype(jnp.float32)) / np.sqrt(D)
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the RG-LRU linear recurrence  h_t = a_t h_{t-1} + b_t.
+
+`rglru_scan` is the step-by-step oracle; `rglru_assoc` is the log-depth
+associative-scan form XLA compiles well (the roofline path).  Both take
+fp32 (a, b) of shape (B, S, D) and initial state (B, D), and return
+(h_seq (B,S,D), h_last (B,D)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array):
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    h_last, h_seq = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)),
+    )
+    return jnp.moveaxis(h_seq, 0, 1), h_last
+
+
+def rglru_assoc(a: jax.Array, b: jax.Array, h0: jax.Array):
+    """Associative scan over composed affine maps (a, b)∘(a', b')=(aa', a'b+b')."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    # Fold h0 into the first step: b_0' = a_0 h0 + b_0
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(prev, nxt):
+        a_p, b_p = prev
+        a_n, b_n = nxt
+        return a_p * a_n, b_p * a_n + b_n
+
+    a_cum, h_seq = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h_seq, h_seq[:, -1]

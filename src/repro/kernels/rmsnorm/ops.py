@@ -1,0 +1,25 @@
+"""Jit'd wrapper for fused RMSNorm."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def _rmsnorm_jit(x, w, *, eps, block_rows, interpret):
+    return rmsnorm_fwd(x, w, eps=eps, block_rows=block_rows, interpret=interpret)
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool | None = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _rmsnorm_jit(x, w, eps=eps, block_rows=block_rows, interpret=interpret)

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for the RWKV6 WKV recurrence.
+
+Per head (k-dim i, v-dim j), fp32 state S in R^{C x C}:
+
+    y_t[j] = sum_i r_t[i] * S_{t-1}[i,j]  +  (sum_i r_t[i] u[i] k_t[i]) * v_t[j]
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+
+`wkv_scan` is the sequential oracle.  `wkv_chunked` is the parallel chunked
+form (the XLA roofline path): within a chunk all pairwise decay factors are
+exponentials of *non-positive* log-decay differences, so the math is stable
+for any decay magnitude (no 1/cumprod blow-ups).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Arrays = jax.Array
+
+
+def wkv_scan(r, k, v, w, u, s0):
+    """r,k,v,w: (B,S,H,C); u: (H,C); s0: (B,H,C,C). Returns y (B,S,H,C), sT."""
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw  # each (B,H,C)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s)
+        coef = jnp.einsum("bhi,hi,bhi->bh", rt, uf, kt)
+        y = y + coef[..., None] * vt
+        s = wt[..., None] * s + kt[..., None] * vt[..., None, :]
+        return s, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (rf, kf, vf, wf))
+    s_last, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), s_last
+
+
+def wkv_chunked(r, k, v, w, u, s0, *, chunk: int = 32):
+    """Chunked parallel form; identical semantics to `wkv_scan`."""
+    B, S, H, C = r.shape
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        zeros = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    N = (S + pad) // L
+
+    def to_chunks(x):  # (B, N*L, H, C) -> (N, B, H, L, C)
+        return jnp.moveaxis(
+            x.astype(jnp.float32).reshape(B, N, L, H, C), (1, 3), (0, 2)
+        )
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    lw = jnp.log(jnp.maximum(wc, 1e-30))  # (N,B,H,L,C), <= 0
+    li = jnp.cumsum(lw, axis=3)
+    li_prev = jnp.pad(li, ((0, 0),) * 3 + ((1, 0), (0, 0)))[..., :-1, :]
+
+    causal = jnp.tril(jnp.ones((L, L), bool), k=-1)  # strictly lower: j < i
+
+    def one_chunk(s, xs):
+        rn, kn, vn, li_n, lip_n = xs  # (B,H,L,C) each
+        q_dec = rn * jnp.exp(lip_n)  # decay-weighted receptance (exp <= 1)
+        y_state = jnp.einsum("bhic,bhcj->bhij", q_dec, s)
+        # pairwise intra-chunk decays: exp(li_{i-1} - li_j) for j < i (<= 1)
+        diff = lip_n[:, :, :, None, :] - li_n[:, :, None, :, :]  # (B,H,L,L,C)
+        dmat = jnp.exp(jnp.minimum(diff, 0.0))
+        a = jnp.einsum("bhic,bhjc,bhijc->bhij", rn, kn, dmat)
+        a = jnp.where(causal, a, 0.0)
+        a_diag = jnp.einsum("bhic,hc,bhic->bhi", rn, uf, kn)
+        a = a + jnp.eye(L)[None, None] * a_diag[..., None]
+        y = y_state + jnp.einsum("bhij,bhjc->bhic", a, vn)
+        # state to next chunk: S' = diag(exp(li_L)) S + sum_j (k_j exp(li_L - li_j)) v_j^T
+        end = li_n[:, :, -1:, :]  # (B,H,1,C)
+        k_dec = kn * jnp.exp(jnp.minimum(end - li_n, 0.0))
+        s_new = jnp.exp(end[:, :, 0])[..., None] * s + jnp.einsum(
+            "bhjc,bhjv->bhcv", k_dec, vn
+        )
+        return s_new, y
+
+    s_last, ys = jax.lax.scan(one_chunk, s0.astype(jnp.float32), (rc, kc, vc, li, li_prev))
+    y = jnp.moveaxis(ys, (0, 2), (1, 3)).reshape(B, N * L, H, C)
+    return y[:, :S].astype(r.dtype), s_last

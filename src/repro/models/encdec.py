@@ -1,0 +1,226 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub:
+`input_specs` provides precomputed frame embeddings, per the assignment).
+
+Encoder: bidirectional attention blocks over frame embeddings + sinusoidal
+positions.  Decoder: causal self-attention + cross-attention to the encoder
+states + MLP.  Both stacks are scanned.  Decode mode carries a per-layer
+self cache and a per-layer cross K/V cache (computed once at prefill).
+
+Deviation noted in DESIGN.md: positions are sinusoidal (not learned) so the
+assigned 4k/32k sequence cells are well-defined beyond whisper's native
+1500-frame / 448-token limits; the backbone dims are exact whisper-small.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.attention import Attention, cache_spec
+from repro.nn.blocks import MLP, Embedding, LayerNorm, sinusoidal_positions
+from repro.nn.module import Ctx, Module, cast
+from repro.nn.stack import ScannedStack
+
+
+class EncoderBlock(Module):
+    kind = "block"
+
+    def __init__(self, name: str, cfg: ModelConfig):
+        self.name = name
+        self.norm1 = LayerNorm("norm1", cfg.d_model)
+        self.attn = Attention("attn", cfg.d_model, cfg.n_heads, cfg.kv_heads,
+                              cfg.resolved_head_dim, use_rope=False, mask="full")
+        self.norm2 = LayerNorm("norm2", cfg.d_model)
+        self.ffn = MLP("ffn", cfg.d_model, cfg.d_ff, activation="gelu", gated=False,
+                       bias=True)
+
+    def spec(self):
+        return {"norm1": self.norm1, "attn": self.attn, "norm2": self.norm2,
+                "ffn": self.ffn}
+
+    def __call__(self, params, x, *, ctx: Ctx, mode="dense", cache=None,
+                 positions=None):
+        with ctx.scope(self.name):
+            h = self.norm1(params["norm1"], x, ctx=ctx)
+            h = ctx.constrain(h, ("batch", "seq_act", "embed"))
+            h, _ = self.attn(params["attn"], h, ctx=ctx, positions=positions,
+                             mode="dense")
+            x = x + h
+            h = self.norm2(params["norm2"], x, ctx=ctx)
+            h = ctx.constrain(h, ("batch", "seq_act", "embed"))
+            x = x + self.ffn(params["ffn"], h, ctx=ctx)
+            return x, None
+
+
+class DecoderXBlock(Module):
+    kind = "block"
+
+    def __init__(self, name: str, cfg: ModelConfig):
+        self.name = name
+        self.norm1 = LayerNorm("norm1", cfg.d_model)
+        self.self_attn = Attention("self_attn", cfg.d_model, cfg.n_heads,
+                                   cfg.kv_heads, cfg.resolved_head_dim,
+                                   use_rope=False, mask="causal")
+        self.norm_x = LayerNorm("norm_x", cfg.d_model)
+        self.cross_attn = Attention("cross_attn", cfg.d_model, cfg.n_heads,
+                                    cfg.kv_heads, cfg.resolved_head_dim,
+                                    use_rope=False, mask="full", cross=True)
+        self.norm2 = LayerNorm("norm2", cfg.d_model)
+        self.ffn = MLP("ffn", cfg.d_model, cfg.d_ff, activation="gelu", gated=False,
+                       bias=True)
+
+    def spec(self):
+        return {"norm1": self.norm1, "self_attn": self.self_attn,
+                "norm_x": self.norm_x, "cross_attn": self.cross_attn,
+                "norm2": self.norm2, "ffn": self.ffn}
+
+    def __call__(self, params, x, *, ctx: Ctx, mode="dense", cache=None,
+                 positions=None, kv_src=None):
+        with ctx.scope(self.name):
+            self_cache = cache.get("self") if cache is not None else None
+            cross_cache = cache.get("cross") if cache is not None else None
+            h = self.norm1(params["norm1"], x, ctx=ctx)
+            h = ctx.constrain(h, ("batch", "seq_act", "embed"))
+            h, self_new = self.self_attn(
+                params["self_attn"], h,
+                ctx=ctx, positions=positions, mode=mode, cache=self_cache,
+            )
+            x = x + h
+            h = self.norm_x(params["norm_x"], x, ctx=ctx)
+            h = ctx.constrain(h, ("batch", "seq_act", "embed"))
+            h, cross_new = self.cross_attn(
+                params["cross_attn"], h,
+                ctx=ctx, cache=cross_cache, kv_src=kv_src,
+            )
+            x = x + h
+            h = self.norm2(params["norm2"], x, ctx=ctx)
+            h = ctx.constrain(h, ("batch", "seq_act", "embed"))
+            x = x + self.ffn(params["ffn"], h, ctx=ctx)
+            new_cache = None
+            if mode != "dense":
+                new_cache = {"self": self_new, "cross": cross_new}
+            return x, new_cache
+
+
+class EncDecLM(Module):
+    kind = "model"
+
+    def __init__(self, cfg: ModelConfig):
+        self.name = cfg.name.replace("-", "_")
+        self.cfg = cfg
+        enc_layers = cfg.enc_layers or cfg.num_layers
+        self.embed = Embedding("embed", cfg.vocab, cfg.d_model)
+        self.encoder = ScannedStack("encoder", EncoderBlock("block", cfg), enc_layers)
+        self.enc_norm = LayerNorm("enc_norm", cfg.d_model)
+        self.decoder = ScannedStack("decoder", DecoderXBlock("block", cfg),
+                                    cfg.num_layers)
+        self.final_norm = LayerNorm("final_norm", cfg.d_model)
+
+    def spec(self):
+        return {
+            "embed": self.embed,
+            "encoder": self.encoder,
+            "enc_norm": self.enc_norm,
+            "decoder": self.decoder,
+            "final_norm": self.final_norm,
+        }
+
+    def encode(self, params, frames, *, ctx: Ctx):
+        """frames: (B, T, d_model) stub frame embeddings."""
+        B, T, _ = frames.shape
+        pos = sinusoidal_positions(jnp.arange(T), self.cfg.d_model)
+        x = cast(frames, ctx.policy().compute_dtype) + cast(pos, ctx.policy().compute_dtype)
+        x = ctx.constrain(x, ("batch", "res_seq", "embed"))
+        x, _ = self.encoder(params["encoder"], x, ctx=ctx, mode="dense")
+        return self.enc_norm(params["enc_norm"], x, ctx=ctx)
+
+    def __call__(self, params, inputs: dict, *, ctx: Ctx, mode: str = "dense",
+                 cache: dict | None = None):
+        cfg = self.cfg
+        tokens = inputs["tokens"]
+        B, S = tokens.shape
+
+        if ctx.extra.get("skip_trunk"):  # roofline outer-component mode
+            enc = None
+        elif cache is not None and "enc" in cache and mode == "decode":
+            enc = cache["enc"]
+        else:
+            enc = self.encode(params, inputs["frames"], ctx=ctx)
+
+        positions = inputs.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x = self.embed(params["embed"], tokens, ctx=ctx)
+        x = x + cast(sinusoidal_positions(positions, cfg.d_model), x.dtype)
+        x = ctx.constrain(x, ("batch", "res_seq", "embed"))
+
+        if ctx.extra.get("skip_trunk"):
+            new_dec_cache = None
+        else:
+            dec_cache = cache.get("decoder") if cache is not None else None
+            x, new_dec_cache = self.decoder(
+                params["decoder"], x, ctx=ctx, mode=mode, cache=dec_cache,
+                positions=positions, block_kwargs={"kv_src": enc},
+            )
+        if mode == "prefill":
+            x = x[:, -1:]
+        x = self.final_norm(params["final_norm"], x, ctx=ctx)
+        logits = self.embed.attend(params["embed"], x, ctx=ctx)
+        logits = ctx.constrain(logits, ("batch", "res_seq", "vocab"))
+        if mode == "dense":
+            return logits, None
+        return logits, {"decoder": new_dec_cache, "enc": enc}
+
+    def component_blocks(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        K, hd = cfg.kv_heads, cfg.resolved_head_dim
+        sds = jax.ShapeDtypeStruct
+        dec_cache = {
+            "self": cache_spec(batch, cache_len, K, hd),
+            "cross": {
+                "ck": sds((batch, cache_len, K, hd), jnp.bfloat16),
+                "cv": sds((batch, cache_len, K, hd), jnp.bfloat16),
+            },
+        }
+        kv_src = sds((batch, cache_len, cfg.d_model), jnp.bfloat16)
+        return [
+            ("enc_block", self.encoder.block, cfg.enc_layers or cfg.num_layers,
+             None, {}),
+            ("dec_block", self.decoder.block, cfg.num_layers, dec_cache,
+             {"kv_src": kv_src}),
+        ]
+
+    def cache_specs(self, batch: int, cache_len: int, enc_len: int | None = None):
+        cfg = self.cfg
+        enc_len = enc_len or cache_len
+        L = cfg.num_layers
+        K, hd = cfg.kv_heads, cfg.resolved_head_dim
+
+        def stk(tree):
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((L, *s.shape), s.dtype), tree
+            )
+
+        sds = jax.ShapeDtypeStruct
+        per_layer = {
+            "self": cache_spec(batch, cache_len, K, hd),
+            "cross": {
+                "ck": sds((batch, enc_len, K, hd), jnp.bfloat16),
+                "cv": sds((batch, enc_len, K, hd), jnp.bfloat16),
+            },
+        }
+        return {
+            "decoder": stk(per_layer),
+            "enc": sds((batch, enc_len, cfg.d_model), jnp.bfloat16),
+        }
+
+    def init_cache(self, batch: int, cache_len: int, *, index: int = 0,
+                   enc_len: int | None = None):
+        specs = self.cache_specs(batch, cache_len, enc_len)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+        cache["decoder"]["self"]["index"] = jnp.full((self.cfg.num_layers,), index,
+                                                     jnp.int32)
+        return cache

@@ -1,0 +1,356 @@
+"""Decoder LM family: dense / MoE / VLM / hybrid (Griffin) / SSM (RWKV6).
+
+One composable model class (`TransformerLM`) assembles per-family blocks:
+
+  dense / moe / vlm : [norm -> attention -> +res ; norm -> MLP|MoE -> +res] xL
+                      (scan-over-layers in weavable groups)
+  hybrid            : recurrentgemma 1:2 pattern (rec, rec, local-attn),
+                      unrolled (heterogeneous blocks)
+  ssm               : RWKV6 time-mix + channel-mix blocks (scan)
+
+Modes: "dense" (train), "prefill" (returns last-token logits + KV cache),
+"decode" (one token against the cache).  Caches are plain pytrees with a
+leading per-layer dim produced/consumed by lax.scan.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.attention import Attention, cache_spec
+from repro.nn.blocks import MLP, Embedding, LayerNorm, Linear, RMSNorm
+from repro.nn.moe import MoEMLP
+from repro.nn.module import Ctx, Module, cast
+from repro.nn.rglru import RecurrentBlock
+from repro.nn.rwkv import ChannelMix, TimeMix, rwkv_state_spec
+from repro.nn.stack import ScannedStack
+
+
+def _make_norm(name: str, cfg: ModelConfig):
+    if cfg.norm_type == "layernorm":
+        return LayerNorm(name, cfg.d_model)
+    return RMSNorm(name, cfg.d_model, plus_one=cfg.norm_plus_one)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+class DecoderBlock(Module):
+    kind = "block"
+
+    def __init__(self, name: str, cfg: ModelConfig, *, mask: str = "causal",
+                 window: int | None = None):
+        self.name = name
+        self.cfg = cfg
+        self.norm1 = _make_norm("norm1", cfg)
+        self.attn = Attention(
+            "attn", cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.resolved_head_dim,
+            bias=cfg.qkv_bias, use_rope=cfg.use_rope, rope_theta=cfg.rope_theta,
+            mask=mask, window=window, softcap=cfg.attn_softcap,
+        )
+        self.norm2 = _make_norm("norm2", cfg)
+        if cfg.family == "moe":
+            self.ffn: Module = MoEMLP(
+                "ffn", cfg.d_model, cfg.d_ff, num_experts=cfg.num_experts,
+                top_k=cfg.top_k, activation=cfg.activation,
+            )
+        else:
+            self.ffn = MLP(
+                "ffn", cfg.d_model, cfg.d_ff, activation=cfg.activation,
+                gated=cfg.gated_mlp,
+            )
+
+    def spec(self):
+        return {"norm1": self.norm1, "attn": self.attn, "norm2": self.norm2,
+                "ffn": self.ffn}
+
+    def __call__(self, params, x, *, ctx: Ctx, mode="dense", cache=None,
+                 positions=None):
+        with ctx.scope(self.name):
+            h = self.norm1(params["norm1"], x, ctx=ctx)
+            # single gather point for the sequence-parallel residual (the
+            # Megatron-SP "g" operator): one AG feeds qkv, not one each
+            h = ctx.constrain(h, ("batch", "seq_act", "embed"))
+            h, new_cache = self.attn(params["attn"], h, ctx=ctx, positions=positions,
+                                     mode=mode, cache=cache)
+            x = x + h
+            h = self.norm2(params["norm2"], x, ctx=ctx)
+            h = ctx.constrain(h, ("batch", "seq_act", "embed"))
+            h = self.ffn(params["ffn"], h, ctx=ctx)
+            x = x + h
+            return x, new_cache
+
+
+class RecBlock(Module):
+    """Hybrid temporal-mixing block (RG-LRU) + MLP."""
+
+    kind = "block"
+
+    def __init__(self, name: str, cfg: ModelConfig):
+        self.name = name
+        self.cfg = cfg
+        lru = cfg.lru_width or cfg.d_model
+        self.norm1 = _make_norm("norm1", cfg)
+        self.rec = RecurrentBlock("rec", cfg.d_model, lru, cfg.n_heads)
+        self.norm2 = _make_norm("norm2", cfg)
+        self.ffn = MLP("ffn", cfg.d_model, cfg.d_ff, activation=cfg.activation,
+                       gated=cfg.gated_mlp)
+
+    def spec(self):
+        return {"norm1": self.norm1, "rec": self.rec, "norm2": self.norm2,
+                "ffn": self.ffn}
+
+    def __call__(self, params, x, *, ctx: Ctx, mode="dense", cache=None,
+                 positions=None):
+        with ctx.scope(self.name):
+            h = self.norm1(params["norm1"], x, ctx=ctx)
+            h, new_state = self.rec(params["rec"], h, ctx=ctx, state=cache, mode=mode)
+            x = x + h
+            h = self.norm2(params["norm2"], x, ctx=ctx)
+            x = x + self.ffn(params["ffn"], h, ctx=ctx)
+            if mode == "dense":
+                new_state = None
+            return x, new_state
+
+
+class RWKVBlock(Module):
+    kind = "block"
+
+    def __init__(self, name: str, cfg: ModelConfig):
+        self.name = name
+        self.cfg = cfg
+        self.ln1 = LayerNorm("ln1", cfg.d_model)
+        self.time_mix = TimeMix("time_mix", cfg.d_model, cfg.rwkv_head_dim)
+        self.ln2 = LayerNorm("ln2", cfg.d_model)
+        self.channel_mix = ChannelMix("channel_mix", cfg.d_model, cfg.d_ff)
+
+    def spec(self):
+        return {"ln1": self.ln1, "time_mix": self.time_mix, "ln2": self.ln2,
+                "channel_mix": self.channel_mix}
+
+    def __call__(self, params, x, *, ctx: Ctx, mode="dense", cache=None,
+                 positions=None):
+        with ctx.scope(self.name):
+            t_state = cache["time"] if cache is not None else None
+            c_state = cache["channel"] if cache is not None else None
+            h, t_new = self.time_mix(params["time_mix"],
+                                     self.ln1(params["ln1"], x, ctx=ctx),
+                                     ctx=ctx, state=t_state, mode=mode)
+            x = x + h
+            h, c_new = self.channel_mix(params["channel_mix"],
+                                        self.ln2(params["ln2"], x, ctx=ctx),
+                                        ctx=ctx, state=c_state, mode=mode)
+            x = x + h
+            new_cache = {"time": t_new, "channel": c_new}
+            if mode == "dense":
+                new_cache = None
+            return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class TransformerLM(Module):
+    kind = "model"
+
+    def __init__(self, cfg: ModelConfig):
+        self.name = cfg.name.replace("-", "_")
+        self.cfg = cfg
+        self.embed = Embedding("embed", cfg.vocab, cfg.d_model,
+                               scale_by_dim=cfg.embed_scale)
+        self.final_norm = _make_norm("final_norm", cfg)
+        self.head = (
+            None
+            if cfg.tie_embeddings
+            else Linear("head", cfg.d_model, cfg.vocab, axes=("embed", "vocab"),
+                        out_axes=("batch", "seq_act", "vocab"))
+        )
+        self.ln0 = LayerNorm("ln0", cfg.d_model) if cfg.family == "ssm" else None
+
+        self.trunk: list[Module] = []
+        if cfg.family == "hybrid":
+            pat = cfg.block_pattern or ("rec", "rec", "attn")
+            for i in range(cfg.num_layers):
+                kind_i = pat[i % len(pat)]
+                if kind_i == "attn":
+                    self.trunk.append(
+                        DecoderBlock(f"layer{i:02d}", cfg, mask="local",
+                                     window=cfg.local_window)
+                    )
+                else:
+                    self.trunk.append(RecBlock(f"layer{i:02d}", cfg))
+        else:
+            mask = "sliding" if cfg.attn_window else "causal"
+            for gi, n in enumerate(cfg.groups()):
+                if cfg.family == "ssm":
+                    block: Module = RWKVBlock("block", cfg)
+                else:
+                    block = DecoderBlock("block", cfg, mask=mask,
+                                         window=cfg.attn_window)
+                self.trunk.append(ScannedStack(f"blocks{gi}", block, n))
+
+    def spec(self):
+        s: dict[str, Any] = {"embed": self.embed}
+        if self.ln0 is not None:
+            s["ln0"] = self.ln0
+        for part in self.trunk:
+            s[part.name] = part
+        s["final_norm"] = self.final_norm
+        if self.head is not None:
+            s["head"] = self.head
+        return s
+
+    # -- forward -----------------------------------------------------------------
+
+    def __call__(self, params, inputs: dict, *, ctx: Ctx, mode: str = "dense",
+                 cache: dict | None = None):
+        cfg = self.cfg
+        tokens = inputs["tokens"]
+        B = tokens.shape[0]
+        x = self.embed(params["embed"], tokens, ctx=ctx)
+        if cfg.family == "vlm" and "embeds" in inputs:
+            emb = cast(inputs["embeds"], x.dtype)
+            x = jnp.concatenate([emb, x], axis=1)
+        if self.ln0 is not None:
+            x = self.ln0(params["ln0"], x, ctx=ctx)
+        x = ctx.constrain(x, ("batch", "res_seq", "embed"))
+
+        S = x.shape[1]
+        positions = inputs.get("positions")
+        if positions is None:
+            if mode == "decode":
+                raise ValueError("decode mode requires explicit positions")
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        new_caches: dict[str, Any] = {}
+        remat_unrolled = (
+            mode == "dense"
+            and str(ctx.extra.get("remat", "full")) != "none"
+            and cfg.family == "hybrid"
+        )
+        if not ctx.extra.get("skip_trunk"):  # roofline outer-component mode
+            for part in self.trunk:
+                part_cache = None if cache is None else cache.get(part.name)
+                if remat_unrolled and not isinstance(part, ScannedStack):
+                    # unrolled hybrid blocks need per-block remat too
+                    def call(p, h, _part=part):
+                        out, c = _part(p, h, ctx=ctx, mode=mode,
+                                       cache=None, positions=positions)
+                        return out
+                    x = jax.checkpoint(
+                        call, policy=jax.checkpoint_policies.nothing_saveable
+                    )(params[part.name], x)
+                    c = None
+                else:
+                    x, c = part(params[part.name], x, ctx=ctx, mode=mode,
+                                cache=part_cache, positions=positions)
+                new_caches[part.name] = c
+
+        if mode == "prefill":
+            x = x[:, -1:]
+        x = self.final_norm(params["final_norm"], x, ctx=ctx)
+        if self.head is not None:
+            logits = self.head(params["head"], x, ctx=ctx)
+        else:
+            logits = self.embed.attend(params["embed"], x, ctx=ctx)
+        logits = ctx.constrain(logits, ("batch", "res_seq", "vocab"))
+        if mode == "dense":
+            return logits, None
+        return logits, new_caches
+
+    # -- roofline components ---------------------------------------------------
+
+    def component_blocks(self, batch: int, cache_len: int):
+        """Distinct trunk block types for compositional roofline costing:
+        [(name, block_module, count, per_layer_cache_spec, kwargs)]."""
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            rec = [p for p in self.trunk if isinstance(p, RecBlock)]
+            att = [p for p in self.trunk if isinstance(p, DecoderBlock)]
+            out = []
+            if rec:
+                out.append(("rec_block", rec[0], len(rec),
+                            RecurrentBlock.state_spec(batch, cfg.lru_width or cfg.d_model),
+                            {}))
+            if att:
+                W = min(cfg.local_window, cache_len)
+                out.append(("attn_block", att[0], len(att),
+                            cache_spec(batch, W, cfg.kv_heads, cfg.resolved_head_dim,
+                                       ring=cfg.local_window < cache_len), {}))
+            return out
+        layer_spec = self._layer_cache_spec(batch, cache_len)
+        return [
+            (part.name, part.block, part.n_layers, layer_spec, {})
+            for part in self.trunk
+            if isinstance(part, ScannedStack)
+        ]
+
+    # -- caches -------------------------------------------------------------------
+
+    def _layer_cache_spec(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return rwkv_state_spec(batch, cfg.d_model, cfg.rwkv_head_dim)
+        window = cfg.attn_window
+        ring = window is not None and window < cache_len
+        length = min(window, cache_len) if window else cache_len
+        return cache_spec(batch, length, cfg.kv_heads, cfg.resolved_head_dim,
+                          ring=ring)
+
+    def cache_specs(self, batch: int, cache_len: int) -> dict:
+        """ShapeDtypeStruct cache pytree (leading per-layer dim per group)."""
+        cfg = self.cfg
+
+        def stack(tree, n):
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), tree
+            )
+
+        out: dict[str, Any] = {}
+        if cfg.family == "hybrid":
+            for part in self.trunk:
+                if isinstance(part, RecBlock):
+                    out[part.name] = RecurrentBlock.state_spec(
+                        batch, cfg.lru_width or cfg.d_model
+                    )
+                else:
+                    W = min(cfg.local_window, cache_len)
+                    ring = cfg.local_window < cache_len
+                    out[part.name] = cache_spec(
+                        batch, W, cfg.kv_heads, cfg.resolved_head_dim, ring=ring
+                    )
+            return out
+        layer_spec = self._layer_cache_spec(batch, cache_len)
+        for part, n in zip(self.trunk, cfg.groups()):
+            out[part.name] = stack(layer_spec, n)
+        return out
+
+    def init_cache(self, batch: int, cache_len: int, *, index: int = 0) -> dict:
+        """Concrete zero cache (tests/examples); index = #valid tokens."""
+        specs = self.cache_specs(batch, cache_len)
+
+        def mk(s: jax.ShapeDtypeStruct):
+            return jnp.zeros(s.shape, s.dtype)
+
+        cache = jax.tree.map(mk, specs)
+
+        def fix_meta(tree):
+            if isinstance(tree, dict):
+                if "index" in tree:
+                    tree = dict(tree)
+                    tree["index"] = jnp.full_like(tree["index"], index)
+                    if "pos" in tree:
+                        tree["pos"] = jnp.full_like(tree["pos"], -1)
+                    return tree
+                return {k: fix_meta(v) for k, v in tree.items()}
+            return tree
+
+        return fix_meta(cache)

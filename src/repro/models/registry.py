@@ -1,0 +1,145 @@
+"""Architecture registry: configs, reduced smoke configs, model builders and
+per-(arch x shape) input specs for the dry-run."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+ARCHS = {
+    "yi-6b": "repro.configs.yi_6b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "whisper-small": "repro.configs.whisper_small",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[name]).CONFIG
+
+
+def reduced_config(name: str) -> ModelConfig:
+    """Family-preserving reduced config for CPU smoke tests."""
+    cfg = get_config(name)
+    kw: dict[str, Any] = dict(
+        num_layers=2, d_model=64, n_heads=4, kv_heads=max(1, min(cfg.kv_heads, 2)),
+        head_dim=16, d_ff=128, vocab=512, layer_groups=(),
+    )
+    if cfg.family == "moe":
+        kw.update(num_experts=4, top_k=2)
+    if cfg.family == "hybrid":
+        kw.update(num_layers=3, lru_width=64, local_window=16, n_heads=4,
+                  head_dim=16, kv_heads=1)
+    if cfg.family == "ssm":
+        kw.update(rwkv_head_dim=16, n_heads=4, kv_heads=4)
+    if cfg.family == "encdec":
+        kw.update(enc_layers=2)
+    if cfg.family == "vlm":
+        kw.update(num_image_tokens=8)
+    if cfg.attn_window:
+        kw.update(attn_window=16)
+    return cfg.replace(name=cfg.name + "-reduced", **kw)
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+
+        return EncDecLM(cfg)
+    from repro.models.lm import TransformerLM
+
+    return TransformerLM(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; never allocate)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig | str) -> dict[str, Any]:
+    """Returns {"inputs": ..., "cache": ... (decode only)} SDS pytrees.
+
+    train : tokens/labels (B, S)  [+frames/embeds for stub frontends]
+    prefill: tokens (B, S)        [+frames/embeds]
+    decode : tokens (B, 1), positions (B, 1), cache with seq_len entries
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    sds = jax.ShapeDtypeStruct
+    B, S = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+
+    def text_inputs(seq, with_labels):
+        d: dict[str, Any] = {"tokens": sds((B, seq), jnp.int32)}
+        if with_labels:
+            d["labels"] = sds((B, seq), jnp.int32)
+        return d
+
+    if cfg.family == "encdec":
+        if shape.kind == "train":
+            inp = text_inputs(S, True)
+            inp["frames"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+            return {"inputs": inp, "cache": None}
+        if shape.kind == "prefill":
+            inp = text_inputs(S, False)
+            inp["frames"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+            return {"inputs": inp, "cache": None}
+        inp = {"tokens": sds((B, 1), jnp.int32), "positions": sds((B, 1), jnp.int32)}
+        return {"inputs": inp, "cache": model.cache_specs(B, S, enc_len=S)}
+
+    if cfg.family == "vlm":
+        P = cfg.num_image_tokens
+        if shape.kind == "train":
+            inp = text_inputs(S - P, True)
+            inp["embeds"] = sds((B, P, cfg.d_model), jnp.bfloat16)
+            return {"inputs": inp, "cache": None}
+        if shape.kind == "prefill":
+            inp = text_inputs(S - P, False)
+            inp["embeds"] = sds((B, P, cfg.d_model), jnp.bfloat16)
+            return {"inputs": inp, "cache": None}
+        inp = {"tokens": sds((B, 1), jnp.int32), "positions": sds((B, 1), jnp.int32)}
+        return {"inputs": inp, "cache": model.cache_specs(B, S)}
+
+    if shape.kind == "train":
+        return {"inputs": text_inputs(S, True), "cache": None}
+    if shape.kind == "prefill":
+        return {"inputs": text_inputs(S, False), "cache": None}
+    inp = {"tokens": sds((B, 1), jnp.int32), "positions": sds((B, 1), jnp.int32)}
+    return {"inputs": inp, "cache": model.cache_specs(B, S)}
+
+
+def cells(arch: str) -> list[str]:
+    """Supported (arch x shape) cells; long_500k only for sub-quadratic."""
+    return get_config(arch).supported_shapes()
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch in ARCHS:
+        for shape in cells(arch):
+            out.append((arch, shape))
+    return out
+
+
+def skipped_cells() -> list[tuple[str, str, str]]:
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape not in cfg.supported_shapes():
+                out.append((arch, shape, "full-attention arch: long_500k needs "
+                            "sub-quadratic attention (DESIGN.md §5)"))
+    return out

@@ -1,0 +1,435 @@
+"""Grouped-query attention with KV caches, sliding windows and impl weaving.
+
+Supports every attention flavour the assigned architectures need:
+  - GQA / MQA / MHA (kv_heads in {1..n_heads}),
+  - causal, bidirectional (encoder), sliding-window (mixtral), local
+    (recurrentgemma) masks, optional logit soft-capping (grok),
+  - QKV bias (qwen2), RoPE with configurable theta,
+  - cross-attention (whisper decoder),
+  - dense mode (train / prefill, optionally emitting a KV cache) and decode
+    mode (single new token against a linear or ring cache).
+
+The *implementation* (XLA einsum reference vs Pallas flash kernel) is chosen
+by the woven Ctx — this is the ANTAREX code-versioning / kernel-substitution
+aspect acting on the attention joinpoint.  The XLA path is also the roofline
+path (Pallas custom calls are opaque to cost_analysis; see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.blocks import apply_rope, rope_angles
+from repro.nn.module import Ctx, Module, ParamSpec, cast
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# KV caches (plain pytrees)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(batch: int, max_len: int, kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+    """Linear cache: slot s holds absolute position s."""
+    return {
+        "k": jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+        "index": jnp.zeros((), jnp.int32),  # number of valid tokens
+    }
+
+
+def init_ring_cache(batch: int, window: int, kv_heads: int, head_dim: int, dtype=jnp.bfloat16):
+    """Ring cache for windowed attention: slot = pos % window.
+
+    This is what makes `long_500k` decode O(window) for SWA/local archs.
+    """
+    return {
+        "k": jnp.zeros((batch, window, kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, window, kv_heads, head_dim), dtype),
+        "pos": jnp.full((window,), -1, jnp.int32),  # absolute position per slot
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_spec(batch, max_len, kv_heads, head_dim, dtype=jnp.bfloat16, *, ring=False):
+    """ShapeDtypeStruct pytree for dry-run input_specs."""
+    sds = jax.ShapeDtypeStruct
+    out = {
+        "k": sds((batch, max_len, kv_heads, head_dim), dtype),
+        "v": sds((batch, max_len, kv_heads, head_dim), dtype),
+        "index": sds((), jnp.int32),
+    }
+    if ring:
+        out["pos"] = sds((max_len,), jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Reference (XLA) attention math
+# ---------------------------------------------------------------------------
+
+
+def _mask_dense(q_pos, kv_pos, mask_kind: str, window: int | None):
+    """(..., S, T) boolean mask from absolute positions."""
+    qp = q_pos[..., :, None].astype(jnp.int32)
+    kp = kv_pos[..., None, :].astype(jnp.int32)
+    valid = kp >= 0
+    if mask_kind in ("causal", "sliding", "local"):
+        valid = valid & (kp <= qp)
+    if mask_kind in ("sliding", "local") and window is not None:
+        valid = valid & (kp > qp - window)
+    return valid
+
+
+def xla_attention(q, k, v, mask, *, softcap=None, accum_dtype=jnp.float32,
+                  constrain=None):
+    """q:(B,S,H,D) k,v:(B,T,K,D) mask:bool broadcastable to (B,K,G,S,T)."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.astype(accum_dtype).reshape(B, S, K, G, D)
+    kf = k.astype(accum_dtype)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, kf) / np.sqrt(D)
+    if constrain is not None:
+        scores = constrain(scores)
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(B, S, H, D)
+
+
+def xla_attention_blocked(
+    q, k, v, q_pos, kv_pos, *, mask_kind: str, window: int | None,
+    softcap=None, block: int = 1024, constrain=None,
+):
+    """Online-softmax attention, lax.scan over KV blocks ("flash in XLA").
+
+    Bounds live memory to one (B,K,G,S,block) score tile instead of the full
+    (B,K,G,S,T) tensor — the production path for long sequences when the
+    Pallas kernel is not woven (and the dry-run's memory-fit path).
+    """
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    block = min(block, T)
+    pad = (-T) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nb = (T + pad) // block
+    qf = (q.astype(jnp.float32) / np.sqrt(D)).reshape(B, S, K, G, D)
+    ks = jnp.moveaxis(k.reshape(B, nb, block, K, D), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nb, block, K, D), 1, 0)
+    ps = jnp.moveaxis(kv_pos.reshape(B, nb, block), 1, 0)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        k_b, v_b, p_b = blk
+        s = jnp.einsum("bskgd,btkd->bkgst", qf, k_b.astype(jnp.float32))
+        if constrain is not None:
+            s = constrain(s)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = _mask_dense(q_pos, p_b, mask_kind, window)  # (B, S, block)
+        mask = mask[:, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask.astype(jnp.float32)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha[..., 0][..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, v_b.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, S, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S, 1), jnp.float32)
+    a0 = jnp.zeros((B, K, G, S, D), jnp.float32)
+    if constrain is not None:
+        a0 = constrain(a0)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, ps))
+    out = acc / jnp.maximum(l, 1e-30)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H, D)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention module
+# ---------------------------------------------------------------------------
+
+
+class Attention(Module):
+    kind = "attention"
+
+    def __init__(
+        self,
+        name: str,
+        d_model: int,
+        n_heads: int,
+        kv_heads: int,
+        head_dim: int,
+        *,
+        bias: bool = False,
+        use_rope: bool = True,
+        rope_theta: float = 10000.0,
+        mask: str = "causal",  # causal | full | sliding | local
+        window: int | None = None,
+        softcap: float | None = None,
+        cross: bool = False,
+    ):
+        self.name = name
+        self.d_model = d_model
+        self.n_heads, self.kv_heads, self.head_dim = n_heads, kv_heads, head_dim
+        self.bias = bias
+        self.use_rope = use_rope
+        self.rope_theta = rope_theta
+        self.mask = mask
+        self.window = window
+        self.softcap = softcap
+        self.cross = cross
+        H, K, D = n_heads, kv_heads, head_dim
+        self.wq = ParamSpec((d_model, H * D), ("embed", "heads"), init="scaled", scale=d_model)
+        self.wk = ParamSpec((d_model, K * D), ("embed", "kv_heads"), init="scaled", scale=d_model)
+        self.wv = ParamSpec((d_model, K * D), ("embed", "kv_heads"), init="scaled", scale=d_model)
+        self.wo = ParamSpec((H * D, d_model), ("heads", "embed"), init="scaled", scale=H * D)
+
+    def spec(self):
+        s: dict[str, Any] = {"wq": self.wq, "wk": self.wk, "wv": self.wv, "wo": self.wo}
+        if self.bias:
+            s["bq"] = ParamSpec((self.n_heads * self.head_dim,), ("heads",), init="zeros")
+            s["bk"] = ParamSpec((self.kv_heads * self.head_dim,), ("kv_heads",), init="zeros")
+            s["bv"] = ParamSpec((self.kv_heads * self.head_dim,), ("kv_heads",), init="zeros")
+        return s
+
+    # -- projections -----------------------------------------------------------
+
+    def _proj(self, params, x, which: str, heads: int, policy):
+        w = cast(params[f"w{which}"], policy.compute_dtype)
+        y = jnp.dot(cast(x, policy.compute_dtype), w, preferred_element_type=policy.accum_dtype)
+        if self.bias and which in ("q", "k", "v"):
+            y = y + cast(params[f"b{which}"], policy.accum_dtype)
+        y = cast(y, policy.compute_dtype)
+        return y.reshape(*x.shape[:-1], heads, self.head_dim)
+
+    # -- main entry -------------------------------------------------------------
+
+    def __call__(
+        self,
+        params,
+        x,
+        *,
+        ctx: Ctx,
+        positions: jax.Array | None = None,
+        mode: str = "dense",  # dense | prefill | decode
+        cache: dict | None = None,
+        kv_src: jax.Array | None = None,  # cross-attention source (B,T,d)
+    ):
+        with ctx.scope(self.name):
+            policy = ctx.policy()
+            B, S, _ = x.shape
+            if positions is None:
+                positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+            q = self._proj(params, x, "q", self.n_heads, policy)
+            q = ctx.constrain(q, ("batch", "seq_act", "heads", None))
+
+            if self.cross:
+                out, new_cache = self._cross(params, q, ctx, policy, cache, kv_src)
+            elif mode == "decode":
+                out, new_cache = self._decode(params, q, x, positions, ctx, policy, cache)
+            else:
+                out, new_cache = self._dense(params, q, x, positions, ctx, policy, mode, cache)
+
+            wo = cast(params["wo"], policy.compute_dtype)
+            y = jnp.dot(
+                out.reshape(B, S, self.n_heads * self.head_dim),
+                wo,
+                preferred_element_type=policy.accum_dtype,
+            )
+            y = cast(y, policy.compute_dtype)
+            y = ctx.constrain(y, ("batch", "res_seq", "embed"))
+            ctx.tap("out_absmax", jnp.max(jnp.abs(y)))
+            return y, new_cache
+
+    # -- dense (train / prefill) -------------------------------------------------
+
+    def _dense(self, params, q, x, positions, ctx, policy, mode, cache):
+        B, S = q.shape[0], q.shape[1]
+        k = self._proj(params, x, "k", self.kv_heads, policy)
+        v = self._proj(params, x, "v", self.kv_heads, policy)
+        k = ctx.constrain(k, ("batch", "seq_act", "kv_heads", None))
+        v = ctx.constrain(v, ("batch", "seq_act", "kv_heads", None))
+        if self.use_rope:
+            sin, cos = rope_angles(positions, self.head_dim, self.rope_theta)
+            q = apply_rope(q, sin, cos)
+            k = apply_rope(k, sin, cos)
+
+        impl = ctx.impl("attention", "xla")
+        k_cache, v_cache = k, v  # cache stores true KV heads, pre-expansion
+        if impl == "proj_only":
+            # roofline component mode: keep the projection FLOPs (and the
+            # K/V gather collectives — tie k,v into the output so DCE keeps
+            # them), skip the S x T core (costed analytically — the Pallas
+            # kernel is opaque to cost_analysis anyway; DESIGN.md §7)
+            out = q + (jnp.mean(k, axis=2, keepdims=True)
+                       + jnp.mean(v, axis=2, keepdims=True)).astype(q.dtype)
+        elif impl == "pallas" and self._pallas_ok(S):
+            from repro.kernels.flash_attention.ops import flash_attention
+
+            out = flash_attention(
+                q, k, v,
+                causal=self.mask in ("causal", "sliding", "local"),
+                window=self.window if self.mask in ("sliding", "local") else None,
+                softcap=self.softcap,
+                block_q=int(ctx.extra.get("flash_block_q", 512)),
+                block_kv=int(ctx.extra.get("flash_block_kv", 512)),
+                mesh=ctx.mesh,
+                rules=ctx.rules,
+            )
+        else:
+            k, v, kv_axis = self._maybe_expand_kv(k, v, ctx)
+            constrain = self._score_constrain(ctx, kv_axis)
+            block = int(ctx.extra.get("xla_attn_block", 1024))
+            if S > 2 * block:  # long sequences: bounded-memory blocked path
+                out = xla_attention_blocked(
+                    q, k, v, positions, positions, mask_kind=self.mask,
+                    window=self.window, softcap=self.softcap, block=block,
+                    constrain=constrain,
+                )
+            else:
+                mask = _mask_dense(positions, positions, self.mask, self.window)
+                mask = mask[:, None, None]  # (B,1,1,S,T)
+                out = xla_attention(q, k, v, mask, softcap=self.softcap,
+                                    accum_dtype=policy.accum_dtype,
+                                    constrain=constrain)
+
+        new_cache = None
+        if mode == "prefill":
+            new_cache = self._build_cache(k_cache, v_cache, positions, ctx, policy)
+        return out, new_cache
+
+    def _maybe_expand_kv(self, k, v, ctx: Ctx):
+        """Megatron layout with GQA: replicate KV heads up to q-heads so the
+        scores' head dim is a single model-shardable axis (K x G cannot be
+        sharded across a dim split).  Returns (k, v, score_head_axis)."""
+        if (
+            ctx.extra.get("expand_kv")
+            and self.kv_heads != self.n_heads
+            and ctx.mesh is not None
+        ):
+            reps = self.n_heads // self.kv_heads
+            k = jnp.repeat(k, reps, axis=2)
+            v = jnp.repeat(v, reps, axis=2)
+            k = ctx.constrain(k, ("batch", "seq_act", "heads", None))
+            v = ctx.constrain(v, ("batch", "seq_act", "heads", None))
+            return k, v, "heads"
+        return k, v, "kv_heads"
+
+    def _score_constrain(self, ctx: Ctx, kv_axis: str):
+        if ctx.mesh is None:
+            return None
+
+        def constrain(t):  # (B, K, G, S, X)
+            return ctx.constrain(t, ("batch", kv_axis, None, "seq_act", None))
+
+        return constrain
+
+    def _pallas_ok(self, seq: int) -> bool:
+        if self.head_dim % 128 != 0 and self.head_dim not in (64, 256):
+            return False
+        return seq % 128 == 0 and self.n_heads % self.kv_heads == 0
+
+    def _build_cache(self, k, v, positions, ctx, policy):
+        """Prefill: pack computed K/V into a cache pytree for decode.
+
+        Linear caches are padded to ctx.extra["cache_max_len"] (default: no
+        growth room — the decode_32k dry-run cell semantics, where the one
+        new token occupies the final slot).
+        """
+        B, S = k.shape[0], k.shape[1]
+        if self.mask in ("sliding", "local") and self.window is not None and self.window < S:
+            W = self.window
+            k_w, v_w = k[:, -W:], v[:, -W:]
+            pos_w = positions[0, -W:]
+            slots = pos_w % W
+            kc = jnp.zeros((B, W, self.kv_heads, self.head_dim), k.dtype).at[:, slots].set(k_w)
+            vc = jnp.zeros((B, W, self.kv_heads, self.head_dim), v.dtype).at[:, slots].set(v_w)
+            pos = jnp.full((W,), -1, jnp.int32).at[slots].set(pos_w)
+            return {"k": kc, "v": vc, "pos": pos, "index": jnp.asarray(S, jnp.int32)}
+        max_len = int(ctx.extra.get("cache_max_len", S))
+        if max_len > S:
+            pad = ((0, 0), (0, max_len - S), (0, 0), (0, 0))
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        return {"k": k, "v": v, "index": jnp.asarray(S, jnp.int32)}
+
+    # -- decode (one token against a cache) ---------------------------------------
+
+    def _decode(self, params, q, x, positions, ctx, policy, cache):
+        assert cache is not None, "decode mode requires a cache"
+        B = q.shape[0]
+        k_new = self._proj(params, x, "k", self.kv_heads, policy)
+        v_new = self._proj(params, x, "v", self.kv_heads, policy)
+        if self.use_rope:
+            sin, cos = rope_angles(positions, self.head_dim, self.rope_theta)
+            q = apply_rope(q, sin, cos)
+            k_new = apply_rope(k_new, sin, cos)
+
+        idx = cache["index"]
+        ring = "pos" in cache
+        if ring:
+            W = cache["k"].shape[1]
+            slot = idx % W
+            k_all = cache["k"].at[:, slot].set(k_new[:, 0])
+            v_all = cache["v"].at[:, slot].set(v_new[:, 0])
+            pos = cache["pos"].at[slot].set(idx)
+            kv_pos = jnp.broadcast_to(pos, (B, W))
+            new_cache = {"k": k_all, "v": v_all, "pos": pos, "index": idx + 1}
+        else:
+            k_all = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, idx, axis=1)
+            v_all = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, idx, axis=1)
+            T = k_all.shape[1]
+            arange = jnp.arange(T, dtype=jnp.int32)
+            kv_pos = jnp.where(arange <= idx, arange, -1)
+            kv_pos = jnp.broadcast_to(kv_pos, (B, T))
+            new_cache = {"k": k_all, "v": v_all, "index": idx + 1}
+
+        k_all = ctx.constrain(k_all, ("batch", "kv_seq", "kv_heads", None))
+        v_all = ctx.constrain(v_all, ("batch", "kv_seq", "kv_heads", None))
+        k_c, v_c, kv_axis = self._maybe_expand_kv(k_all, v_all, ctx)
+        mask = _mask_dense(positions, kv_pos, self.mask, self.window)[:, None, None]
+
+        def constrain(t):  # (B, K, G, 1, T)
+            return ctx.constrain(t, ("batch", kv_axis, None, None, "kv_seq"))
+
+        out = xla_attention(q, k_c, v_c, mask, softcap=self.softcap,
+                            accum_dtype=policy.accum_dtype,
+                            constrain=constrain if ctx.mesh is not None else None)
+        return out, new_cache
+
+    # -- cross attention (whisper decoder) ----------------------------------------
+
+    def _cross(self, params, q, ctx, policy, cache, kv_src):
+        if cache is not None and "ck" in cache:
+            k, v = cache["ck"], cache["cv"]
+            new_cache = cache
+        else:
+            assert kv_src is not None, "cross-attention needs kv_src or cached K/V"
+            k = self._proj(params, kv_src, "k", self.kv_heads, policy)
+            v = self._proj(params, kv_src, "v", self.kv_heads, policy)
+            new_cache = {"ck": k, "cv": v}
+        B, S = q.shape[0], q.shape[1]
+        T = k.shape[1]
+        mask = jnp.ones((B, 1, 1, S, T), bool)
+        out = xla_attention(q, k, v, mask, softcap=self.softcap,
+                            accum_dtype=policy.accum_dtype)
+        return out, new_cache

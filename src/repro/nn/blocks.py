@@ -1,0 +1,322 @@
+"""Core neural blocks: linear/embedding/norms/MLP variants/RoPE.
+
+Every block reads its dtype policy from the woven Ctx (ANTAREX precision
+aspects), applies logical-axis sharding constraints on activations, and can
+emit monitoring taps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.module import Ctx, Module, ParamSpec, cast
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+
+class Linear(Module):
+    """y = x @ w (+ b); w: (d_in, d_out) with logical axes."""
+
+    kind = "linear"
+
+    def __init__(
+        self,
+        name: str,
+        d_in: int,
+        d_out: int,
+        *,
+        axes: tuple[str | None, str | None],
+        bias: bool = False,
+        out_axes: tuple[str | None, ...] | None = None,
+        init_scale: float | None = None,
+    ):
+        self.name = name
+        self.d_in, self.d_out = d_in, d_out
+        self.axes = axes
+        self.bias = bias
+        self.out_axes = out_axes
+        self.init_scale = init_scale
+
+    def spec(self):
+        s: dict[str, Any] = {
+            "w": ParamSpec(
+                (self.d_in, self.d_out),
+                self.axes,
+                init="scaled",
+                scale=self.init_scale or self.d_in,
+            )
+        }
+        if self.bias:
+            s["b"] = ParamSpec((self.d_out,), (self.axes[1],), init="zeros")
+        return s
+
+    def __call__(self, params, x, *, ctx: Ctx):
+        with ctx.scope(self.name):
+            policy = ctx.policy()
+            w = params["w"]
+            if policy.quantized:
+                w, scale = _quantize_int8(w)
+                y = _int8_matmul(cast(x, policy.compute_dtype), w, scale, policy)
+            else:
+                w = cast(w, policy.compute_dtype)
+                y = jnp.dot(
+                    cast(x, policy.compute_dtype),
+                    w,
+                    preferred_element_type=policy.accum_dtype,
+                )
+            if self.bias:
+                y = y + cast(params["b"], policy.accum_dtype)
+            y = cast(y, policy.compute_dtype)
+            if self.out_axes is not None:
+                y = ctx.constrain(y, self.out_axes)
+            ctx.tap("out_absmax", jnp.max(jnp.abs(y)))
+            return y
+
+
+def _quantize_int8(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-output-channel int8 quantization (paper's 'fixed')."""
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _int8_matmul(x, wq, scale, policy):
+    y = jnp.dot(
+        x.astype(policy.compute_dtype),
+        wq.astype(policy.compute_dtype),
+        preferred_element_type=policy.accum_dtype,
+    )
+    return y * scale.astype(policy.accum_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding (tied head supported by models calling `attend`)
+# ---------------------------------------------------------------------------
+
+
+class Embedding(Module):
+    kind = "embedding"
+
+    def __init__(self, name: str, vocab: int, dim: int, *, scale_by_dim: bool = False):
+        self.name = name
+        self.vocab, self.dim = vocab, dim
+        self.scale_by_dim = scale_by_dim  # gemma multiplies by sqrt(dim)
+
+    def spec(self):
+        return {
+            "table": ParamSpec(
+                (self.vocab, self.dim), ("vocab", "embed"), init="embedding", scale=0.02
+            )
+        }
+
+    def __call__(self, params, tokens, *, ctx: Ctx):
+        with ctx.scope(self.name):
+            policy = ctx.policy()
+            table = cast(params["table"], policy.compute_dtype)
+            x = jnp.take(table, tokens, axis=0)
+            if self.scale_by_dim:
+                x = x * jnp.asarray(np.sqrt(self.dim), policy.compute_dtype)
+            return ctx.constrain(x, ("batch", "res_seq", "embed"))
+
+    def attend(self, params, x, *, ctx: Ctx):
+        """Logits = x @ table.T (tied output head)."""
+        with ctx.scope(self.name):
+            policy = ctx.policy()
+            table = cast(params["table"], policy.compute_dtype)
+            logits = jnp.dot(
+                cast(x, policy.compute_dtype),
+                table.T,
+                preferred_element_type=policy.accum_dtype,
+            )
+            return ctx.constrain(logits, ("batch", "res_seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Norms (fp32 params + fp32 math — standard for stability)
+# ---------------------------------------------------------------------------
+
+
+class RMSNorm(Module):
+    kind = "norm"
+
+    def __init__(self, name: str, dim: int, *, eps: float = 1e-6, plus_one: bool = False):
+        self.name = name
+        self.dim, self.eps = dim, eps
+        self.plus_one = plus_one  # gemma parameterizes weight as (1 + w)
+
+    def spec(self):
+        init = "zeros" if self.plus_one else "ones"
+        return {"w": ParamSpec((self.dim,), ("embed",), init=init, dtype=jnp.float32)}
+
+    def __call__(self, params, x, *, ctx: Ctx):
+        with ctx.scope(self.name):
+            policy = ctx.policy()
+            xf = x.astype(jnp.float32)
+            var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+            y = xf * jax.lax.rsqrt(var + self.eps)
+            w = params["w"] + 1.0 if self.plus_one else params["w"]
+            y = y * w
+            ctx.tap("rms", jnp.sqrt(jnp.mean(var)))
+            return cast(y, policy.compute_dtype)
+
+
+class LayerNorm(Module):
+    kind = "norm"
+
+    def __init__(self, name: str, dim: int, *, eps: float = 1e-5):
+        self.name = name
+        self.dim, self.eps = dim, eps
+
+    def spec(self):
+        return {
+            "w": ParamSpec((self.dim,), ("embed",), init="ones", dtype=jnp.float32),
+            "b": ParamSpec((self.dim,), ("embed",), init="zeros", dtype=jnp.float32),
+        }
+
+    def __call__(self, params, x, *, ctx: Ctx):
+        with ctx.scope(self.name):
+            policy = ctx.policy()
+            xf = x.astype(jnp.float32)
+            mean = jnp.mean(xf, axis=-1, keepdims=True)
+            var = jnp.var(xf, axis=-1, keepdims=True)
+            y = (xf - mean) * jax.lax.rsqrt(var + self.eps) * params["w"] + params["b"]
+            return cast(y, policy.compute_dtype)
+
+
+class GroupNorm(Module):
+    """Per-head group norm (RWKV6 time-mixing output norm)."""
+
+    kind = "norm"
+
+    def __init__(self, name: str, num_groups: int, dim: int, *, eps: float = 1e-5):
+        self.name = name
+        self.num_groups, self.dim, self.eps = num_groups, dim, eps
+
+    def spec(self):
+        return {
+            "w": ParamSpec((self.dim,), ("embed",), init="ones", dtype=jnp.float32),
+            "b": ParamSpec((self.dim,), ("embed",), init="zeros", dtype=jnp.float32),
+        }
+
+    def __call__(self, params, x, *, ctx: Ctx):
+        with ctx.scope(self.name):
+            policy = ctx.policy()
+            shape = x.shape
+            xf = x.astype(jnp.float32).reshape(*shape[:-1], self.num_groups, -1)
+            mean = jnp.mean(xf, axis=-1, keepdims=True)
+            var = jnp.var(xf, axis=-1, keepdims=True)
+            y = ((xf - mean) * jax.lax.rsqrt(var + self.eps)).reshape(shape)
+            y = y * params["w"] + params["b"]
+            return cast(y, policy.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu2":  # nemotron squared-ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+class MLP(Module):
+    """Gated (llama/gemma) or plain (whisper/nemotron) feed-forward."""
+
+    kind = "mlp"
+
+    def __init__(
+        self,
+        name: str,
+        d_model: int,
+        d_ff: int,
+        *,
+        activation: str = "silu",
+        gated: bool = True,
+        bias: bool = False,
+    ):
+        self.name = name
+        self.d_model, self.d_ff = d_model, d_ff
+        self.activation, self.gated, self.bias = activation, gated, bias
+        self.wi = Linear(
+            "wi", d_model, d_ff, axes=("embed", "mlp"), bias=bias,
+            out_axes=("batch", "seq_act", "mlp"),
+        )
+        self.wg = (
+            Linear("wg", d_model, d_ff, axes=("embed", "mlp"), bias=bias,
+                   out_axes=("batch", "seq_act", "mlp"))
+            if gated
+            else None
+        )
+        self.wo = Linear(
+            "wo", d_ff, d_model, axes=("mlp", "embed"), bias=bias,
+            out_axes=("batch", "res_seq", "embed"),
+        )
+
+    def spec(self):
+        s: dict[str, Any] = {"wi": self.wi, "wo": self.wo}
+        if self.wg is not None:
+            s["wg"] = self.wg
+        return s
+
+    def __call__(self, params, x, *, ctx: Ctx):
+        with ctx.scope(self.name):
+            h = self.wi(params["wi"], x, ctx=ctx)
+            if self.wg is not None:
+                g = self.wg(params["wg"], x, ctx=ctx)
+                h = _act(self.activation, g) * h
+            else:
+                h = _act(self.activation, h)
+            return self.wo(params["wo"], h, ctx=ctx)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (functional)
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions: int32[...]; returns (sin, cos) of shape positions.shape + (head_dim//2,)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); sin/cos: (..., seq, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :]  # broadcast over heads
+    c = cos[..., None, :]
+    out = jnp.concatenate(
+        [x1.astype(jnp.float32) * c - x2.astype(jnp.float32) * s,
+         x2.astype(jnp.float32) * c + x1.astype(jnp.float32) * s],
+        axis=-1,
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, dim: int) -> jax.Array:
+    """Whisper-style sinusoidal embeddings for arbitrary positions."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (np.log(10000.0) / max(half - 1, 1)))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,89 @@
+"""Dtype policies — the substrate of the ANTAREX precision-tuning aspects.
+
+A `DTypePolicy` is the TPU analogue of the paper's double/float/half/fixed
+choice: storage (param) dtype, compute dtype (MXU input) and accumulation
+dtype.  The `PolicyResolver` holds an ordered list of (glob-pattern, policy)
+entries; the *last* matching pattern wins, so aspects append overrides —
+exactly the paper's "change the type of the declarations inside this
+function" with path patterns standing in for AST selection.
+
+"fixed point" from the paper maps to int8 storage with fp32 scales
+(`quantized=True`), dequantized on load — the TPU-native reduced-precision
+representation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Any
+
+import jax.numpy as jnp
+
+_DTYPES = {
+    "float32": jnp.float32,
+    "bfloat16": jnp.bfloat16,
+    "float16": jnp.float16,
+    "int8": jnp.int8,
+}
+
+
+def parse_dtype(d: Any):
+    if isinstance(d, str):
+        return _DTYPES[d]
+    return d
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    accum_dtype: Any = jnp.float32
+    quantized: bool = False  # int8 weights + per-channel fp32 scales
+
+    @staticmethod
+    def make(name: str) -> "DTypePolicy":
+        """Named policies mirroring the paper's precision levels.
+
+        double -> f32 everywhere;  float -> bf16 compute / f32 params;
+        half   -> bf16 params+compute;  fixed -> int8 weights (emulated).
+        """
+        if name in ("double", "f32", "float32"):
+            return DTypePolicy(jnp.float32, jnp.float32, jnp.float32)
+        if name in ("float", "mixed", "bf16_mixed"):
+            return DTypePolicy(jnp.float32, jnp.bfloat16, jnp.float32)
+        if name in ("half", "bf16", "bfloat16"):
+            return DTypePolicy(jnp.bfloat16, jnp.bfloat16, jnp.float32)
+        if name in ("fixed", "int8"):
+            return DTypePolicy(jnp.bfloat16, jnp.bfloat16, jnp.float32, quantized=True)
+        raise ValueError(f"unknown policy name {name!r}")
+
+
+class PolicyResolver:
+    """Ordered (pattern, policy) table; last match wins."""
+
+    def __init__(self, entries: list[tuple[str, DTypePolicy]] | None = None):
+        self.entries: list[tuple[str, DTypePolicy]] = list(entries or [])
+
+    @staticmethod
+    def default(base: str = "half") -> "PolicyResolver":
+        return PolicyResolver([("*", DTypePolicy.make(base))])
+
+    def override(self, pattern: str, policy: DTypePolicy | str) -> "PolicyResolver":
+        if isinstance(policy, str):
+            policy = DTypePolicy.make(policy)
+        self.entries.append((pattern, policy))
+        return self
+
+    def resolve(self, path: str) -> DTypePolicy:
+        found = DTypePolicy()
+        for pattern, policy in self.entries:
+            if fnmatch.fnmatch(path, pattern):
+                found = policy
+        return found
+
+    def copy(self) -> "PolicyResolver":
+        return PolicyResolver(list(self.entries))
+
+    def __repr__(self):
+        return f"PolicyResolver({self.entries!r})"

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts feed-forward (mixtral / grok style: 8 experts, top-2).
+
+Dispatch is the classic Mesh-TensorFlow capacity-based einsum formulation:
+tokens are grouped (one group per batch row), each token's top-k experts get
+a one-hot (expert, capacity-slot) assignment, and dispatch/combine are dense
+einsums — the formulation GSPMD partitions well on TPU.  Tokens overflowing
+an expert's capacity are dropped (standard; capacity_factor knob controls
+the trade-off and is exposed to the ANTAREX autotuner).
+
+With 8 experts against a 16-way model axis, expert parallelism does not
+divide; the woven default layout replicates experts and applies tensor
+parallelism *inside* each expert (mlp -> model axis).  See DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.module import Ctx, Module, ParamSpec, cast
+
+
+class MoEMLP(Module):
+    kind = "moe"
+
+    def __init__(
+        self,
+        name: str,
+        d_model: int,
+        d_ff: int,
+        *,
+        num_experts: int,
+        top_k: int = 2,
+        capacity_factor: float = 1.25,
+        activation: str = "silu",
+    ):
+        self.name = name
+        self.d_model, self.d_ff = d_model, d_ff
+        self.num_experts, self.top_k = num_experts, top_k
+        self.capacity_factor = capacity_factor
+        self.activation = activation
+
+    def spec(self):
+        E, dm, dff = self.num_experts, self.d_model, self.d_ff
+        return {
+            "router": ParamSpec((dm, E), ("embed", None), init="scaled", scale=dm),
+            "wi": ParamSpec((E, dm, dff), ("experts", "embed", "mlp"), init="scaled", scale=dm),
+            "wg": ParamSpec((E, dm, dff), ("experts", "embed", "mlp"), init="scaled", scale=dm),
+            "wo": ParamSpec((E, dff, dm), ("experts", "mlp", "embed"), init="scaled", scale=dff),
+        }
+
+    def __call__(self, params, x, *, ctx: Ctx):
+        with ctx.scope(self.name):
+            policy = ctx.policy()
+            B, S, dm = x.shape
+            E, K = self.num_experts, self.top_k
+            cf = float(ctx.extra.get("moe_capacity_factor", self.capacity_factor))
+            # Bounded dispatch groups: the one-hot dispatch/combine einsums
+            # cost O(tokens x E x C x d) with C ∝ group size — grouping by
+            # the full sequence (32k prefill!) made dispatch dominate expert
+            # compute 20:1.  Fixed-size sequence groups bound the overhead
+            # (knob: moe_group_size; §Perf mixtral iteration).
+            grp = int(ctx.extra.get("moe_group_size", 2048))
+            grp = max(1, min(grp, S))
+            while S % grp:
+                grp -= 1
+            n_groups = S // grp
+            C = max(int(np.ceil(grp * K * cf / E)), 1)
+
+            xc = cast(x, policy.compute_dtype)
+            if n_groups > 1:
+                xc = xc.reshape(B * n_groups, grp, dm)
+            Bg, Sg = xc.shape[0], grp
+            # --- routing (fp32 for stable softmax/top-k) ---
+            logits = jnp.einsum(
+                "bsd,de->bse", xc, cast(params["router"], policy.compute_dtype),
+                preferred_element_type=jnp.float32,
+            )
+            gates = jax.nn.softmax(logits, axis=-1)  # (Bg,Sg,E)
+            topg, tope = jax.lax.top_k(gates, K)  # (Bg,Sg,K)
+            topg = topg / jnp.sum(topg, axis=-1, keepdims=True)
+
+            # --- capacity assignment: rank of each (token,k) within its expert ---
+            onehot = jax.nn.one_hot(tope, E, dtype=jnp.float32)  # (Bg,Sg,K,E)
+            flat = onehot.reshape(Bg, Sg * K, E)
+            ranks = (jnp.cumsum(flat, axis=1) - flat).reshape(Bg, Sg, K, E)
+            rank = jnp.sum(ranks * onehot, axis=-1)  # (B,S,K)
+            keep = rank < C
+            ctx.tap("moe_drop_frac", 1.0 - jnp.mean(keep.astype(jnp.float32)))
+
+            gate_kept = jnp.where(keep, topg, 0.0)
+            slot_oh = jax.nn.one_hot(rank.astype(jnp.int32), C, dtype=jnp.float32)
+            # combine[b,s,e,c] = sum_k gate * onehot_e * onehot_c
+            combine = jnp.einsum("bske,bskc->bsec", onehot * gate_kept[..., None], slot_oh)
+            dispatch = (combine > 0).astype(policy.compute_dtype)  # (B,S,E,C)
+            combine = combine.astype(policy.compute_dtype)
+
+            # --- dispatch -> expert compute -> combine ---
+            expert_in = jnp.einsum("bsec,bsd->ebcd", dispatch, xc)
+            wi = cast(params["wi"], policy.compute_dtype)
+            wg = cast(params["wg"], policy.compute_dtype)
+            wo = cast(params["wo"], policy.compute_dtype)
+            h = jnp.einsum("ebcd,edf->ebcf", expert_in, wi,
+                           preferred_element_type=policy.accum_dtype)
+            g = jnp.einsum("ebcd,edf->ebcf", expert_in, wg,
+                           preferred_element_type=policy.accum_dtype)
+            if self.activation == "silu":
+                h = jax.nn.silu(cast(g, policy.compute_dtype)) * cast(h, policy.compute_dtype)
+            else:
+                h = jax.nn.gelu(cast(g, policy.compute_dtype), approximate=True) * cast(
+                    h, policy.compute_dtype
+                )
+            h = ctx.constrain(h, ("experts", "batch", None, "mlp"))
+            out_e = jnp.einsum("ebcf,efd->ebcd", h, wo,
+                               preferred_element_type=policy.accum_dtype)
+            out = jnp.einsum("ebcd,bsec->bsd", cast(out_e, policy.compute_dtype),
+                             combine.astype(policy.compute_dtype))
+            if n_groups > 1:
+                out = out.reshape(B, S, dm)
+            out = ctx.constrain(out, ("batch", "res_seq", "embed"))
+            return cast(out, policy.compute_dtype)
+
+    def active_params_per_token(self) -> int:
+        """Parameters touched per token (router + top_k experts) for MODEL_FLOPS."""
+        per_expert = self.d_model * self.d_ff * 3
+        return self.d_model * self.num_experts + self.top_k * per_expert

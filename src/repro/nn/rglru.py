@@ -1,0 +1,201 @@
+"""RecurrentGemma / Griffin recurrent block: temporal conv + RG-LRU.
+
+RG-LRU (Real-Gated Linear Recurrent Unit, arXiv:2402.19427):
+    r_t = sigmoid(BlockDiag_a(x_t))          (recurrence gate)
+    i_t = sigmoid(BlockDiag_x(x_t))          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t    (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses a parallel form (associative scan or the Pallas blocked
+kernel, woven by Ctx); decode is the O(1) single-step update — this is what
+makes the `long_500k` cell run for this architecture.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.blocks import Linear
+from repro.nn.module import Ctx, Module, ParamSpec, cast
+
+RGLRU_C = 8.0
+
+
+class BlockDiagonalLinear(Module):
+    kind = "linear"
+
+    def __init__(self, name: str, dim: int, num_blocks: int):
+        self.name = name
+        self.dim, self.num_blocks = dim, num_blocks
+        assert dim % num_blocks == 0
+        self.block = dim // num_blocks
+
+    def spec(self):
+        nb, bs = self.num_blocks, self.block
+        return {
+            "w": ParamSpec((nb, bs, bs), (None, None, None), init="scaled", scale=bs),
+            "b": ParamSpec((nb, bs), (None, None), init="zeros"),
+        }
+
+    def __call__(self, params, x, *, ctx: Ctx):
+        with ctx.scope(self.name):
+            policy = ctx.policy()
+            shape = x.shape
+            # fp32 math: these are recurrence gates (small block-diag matmuls);
+            # batched bf16->f32 dots are also unsupported by the CPU backend.
+            xb = x.astype(jnp.float32).reshape(*shape[:-1], self.num_blocks, self.block)
+            w = params["w"].astype(jnp.float32)
+            y = jnp.einsum("...ni,nij->...nj", xb, w)
+            y = y + params["b"].astype(jnp.float32)
+            return cast(y, policy.compute_dtype).reshape(shape)
+
+
+class RGLRU(Module):
+    kind = "rglru"
+
+    def __init__(self, name: str, dim: int, num_heads: int):
+        self.name = name
+        self.dim, self.num_heads = dim, num_heads
+        self.gate_a = BlockDiagonalLinear("gate_a", dim, num_heads)
+        self.gate_x = BlockDiagonalLinear("gate_x", dim, num_heads)
+
+    def spec(self):
+        return {
+            "lam": ParamSpec((self.dim,), ("embed",), init="normal", scale=0.5,
+                             dtype=jnp.float32),
+            "gate_a": self.gate_a,
+            "gate_x": self.gate_x,
+        }
+
+    def _coeffs(self, params, x, ctx):
+        """Per-step a_t (decay) and b_t (gated input), fp32."""
+        r = jax.nn.sigmoid(self.gate_a(params["gate_a"], x, ctx=ctx).astype(jnp.float32))
+        i = jax.nn.sigmoid(self.gate_x(params["gate_x"], x, ctx=ctx).astype(jnp.float32))
+        log_a = -RGLRU_C * jax.nn.softplus(params["lam"]) * r
+        a = jnp.exp(log_a)
+        mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+        b = mult * (i * x.astype(jnp.float32))
+        return a, b
+
+    def __call__(self, params, x, *, ctx: Ctx, state: jax.Array | None = None,
+                 mode: str = "dense"):
+        """x: (B,S,D). Returns (y, final_state). state: (B,D) fp32."""
+        with ctx.scope(self.name):
+            policy = ctx.policy()
+            B, S, D = x.shape
+            a, b = self._coeffs(params, x, ctx)
+            if state is None:
+                state = jnp.zeros((B, D), jnp.float32)
+
+            if mode == "decode":  # S == 1: one fused step
+                h = a[:, 0] * state + b[:, 0]
+                return cast(h[:, None], policy.compute_dtype), h
+
+            impl = ctx.impl("rglru", "assoc")
+            if impl == "pallas":
+                from repro.kernels.rglru.ops import rglru_pallas
+
+                h_seq, h_last = rglru_pallas(a, b, state)
+            elif impl == "scan":
+                from repro.kernels.rglru.ref import rglru_scan
+
+                h_seq, h_last = rglru_scan(a, b, state)
+            else:
+                from repro.kernels.rglru.ref import rglru_assoc
+
+                h_seq, h_last = rglru_assoc(a, b, state)
+            return cast(h_seq, policy.compute_dtype), h_last
+
+
+class Conv1D(Module):
+    """Causal depthwise temporal conv (width 4), with decode state."""
+
+    kind = "conv"
+
+    def __init__(self, name: str, dim: int, width: int = 4):
+        self.name = name
+        self.dim, self.width = dim, width
+
+    def spec(self):
+        return {
+            "w": ParamSpec((self.width, self.dim), (None, "embed"), init="scaled",
+                           scale=self.width),
+            "b": ParamSpec((self.dim,), ("embed",), init="zeros"),
+        }
+
+    def __call__(self, params, x, *, ctx: Ctx, state: jax.Array | None = None,
+                 mode: str = "dense"):
+        """x: (B,S,D); state: (B,width-1,D). Returns (y, new_state)."""
+        with ctx.scope(self.name):
+            policy = ctx.policy()
+            B, S, D = x.shape
+            w = cast(params["w"], policy.compute_dtype)
+            xc = cast(x, policy.compute_dtype)
+            W = self.width
+            if state is None:
+                state = jnp.zeros((B, W - 1, D), xc.dtype)
+            full = jnp.concatenate([cast(state, xc.dtype), xc], axis=1)  # (B, S+W-1, D)
+            y = sum(full[:, i : i + S] * w[i] for i in range(W))
+            y = y + cast(params["b"], policy.compute_dtype)
+            new_state = full[:, -(W - 1):]
+            return y, new_state
+
+
+class RecurrentBlock(Module):
+    """Griffin temporal-mixing block: (linear->conv->RG-LRU) * gelu(linear) -> linear."""
+
+    kind = "recurrent"
+
+    def __init__(self, name: str, d_model: int, lru_width: int, num_heads: int,
+                 conv_width: int = 4):
+        self.name = name
+        self.d_model, self.lru_width = d_model, lru_width
+        self.num_heads = num_heads
+        self.proj_x = Linear("proj_x", d_model, lru_width, axes=("embed", "heads"),
+                             out_axes=("batch", "seq_act", "heads"))
+        self.proj_y = Linear("proj_y", d_model, lru_width, axes=("embed", "heads"),
+                             out_axes=("batch", "seq_act", "heads"))
+        self.conv = Conv1D("conv", lru_width, conv_width)
+        self.rglru = RGLRU("rglru", lru_width, num_heads)
+        self.proj_out = Linear("proj_out", lru_width, d_model, axes=("heads", "embed"),
+                               out_axes=("batch", "res_seq", "embed"))
+
+    def spec(self):
+        return {
+            "proj_x": self.proj_x,
+            "proj_y": self.proj_y,
+            "conv": self.conv,
+            "rglru": self.rglru,
+            "proj_out": self.proj_out,
+        }
+
+    def init_state(self, batch: int):
+        return {
+            "conv": jnp.zeros((batch, self.conv.width - 1, self.lru_width), jnp.bfloat16),
+            "lru": jnp.zeros((batch, self.lru_width), jnp.float32),
+        }
+
+    @staticmethod
+    def state_spec(batch: int, lru_width: int, conv_width: int = 4):
+        sds = jax.ShapeDtypeStruct
+        return {
+            "conv": sds((batch, conv_width - 1, lru_width), jnp.bfloat16),
+            "lru": sds((batch, lru_width), jnp.float32),
+        }
+
+    def __call__(self, params, x, *, ctx: Ctx, state: dict | None = None,
+                 mode: str = "dense"):
+        with ctx.scope(self.name):
+            y = jax.nn.gelu(self.proj_y(params["proj_y"], x, ctx=ctx), approximate=True)
+            h = self.proj_x(params["proj_x"], x, ctx=ctx)
+            conv_state = state["conv"] if state is not None else None
+            lru_state = state["lru"] if state is not None else None
+            h, new_conv = self.conv(params["conv"], h, ctx=ctx, state=conv_state, mode=mode)
+            h, new_lru = self.rglru(params["rglru"], h, ctx=ctx, state=lru_state, mode=mode)
+            out = self.proj_out(params["proj_out"], h * y, ctx=ctx)
+            new_state = {"conv": new_conv, "lru": new_lru}
+            return out, new_state

@@ -1,0 +1,136 @@
+"""Scan-over-layers stack: O(1) HLO size in depth, weavable per group.
+
+`ScannedStack` stacks a homogeneous block's parameters with a leading
+"layers" axis and applies them with `lax.scan`, optionally under
+`jax.checkpoint` (the woven remat policy).  Decode caches / recurrent states
+ride along as per-layer scan inputs/outputs.
+
+Joinpoint view: the stack exposes its *template* block (one joinpoint stands
+for all layers in the group).  Models that need per-layer-group weaving
+split the trunk into several ScannedStack groups (see configs.layer_groups).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Ctx, Module, ParamSpec, _walk_spec
+
+REMAT_POLICIES = {
+    "none": None,  # no remat
+    "full": "nothing_saveable",
+    "dots": "dots_saveable",
+    "dots_no_batch": "dots_with_no_batch_dims_saveable",
+}
+
+
+def _stack_specs(tree: Any, n: int) -> Any:
+    """Add a leading (n, ...) 'layers' dim to every ParamSpec leaf."""
+
+    def leaf(spec: ParamSpec, path: str) -> ParamSpec:
+        return ParamSpec(
+            shape=(n, *spec.shape),
+            axes=("layers", *spec.axes),
+            init=spec.init,
+            scale=spec.scale,
+            dtype=spec.dtype,
+        )
+
+    return _walk_spec(tree, "", leaf)
+
+
+class ScannedStack(Module):
+    kind = "stack"
+
+    def __init__(self, name: str, block: Module, n_layers: int):
+        self.name = name
+        self.block = block
+        self.n_layers = n_layers
+
+    def spec(self):
+        return {self.block.name: _stack_specs(self.block, self.n_layers)}
+
+    def walk(self, prefix: str = "") -> Iterator[tuple[str, Module]]:
+        path = f"{prefix}/{self.name}" if prefix else self.name
+        yield path, self
+        yield from self.block.walk(path)
+
+    def __call__(
+        self,
+        params,
+        x,
+        *,
+        ctx: Ctx,
+        mode: str = "dense",
+        cache: Any = None,  # per-layer pytree with leading n_layers dim
+        positions=None,
+        block_kwargs: dict | None = None,
+    ):
+        with ctx.scope(self.name):
+            stacked = params[self.block.name]
+            block_kwargs = dict(block_kwargs or {})
+
+            # Taps inside a scan body would leak tracers — disable within.
+            saved_taps = ctx.taps_enabled
+            ctx.taps_enabled = []
+
+            # Pin each iteration's layer params to their sharded layout so
+            # GSPMD keeps FSDP all-gathers *inside* the loop (otherwise XLA
+            # hoists a loop-invariant gather of the whole stacked params —
+            # bf16_params/TP bytes of HBM, fatal for the >=70B trains).
+            layer_shardings = None
+            if ctx.mesh is not None and ctx.rules:
+                from repro.distributed.sharding import param_shardings
+
+                layer_shardings = param_shardings(self.block, ctx.mesh, ctx.rules)
+
+            remat_name = str(ctx.extra.get("remat", "full" if mode == "dense" else "none"))
+            use_remat = mode == "dense" and remat_name != "none"
+
+            def body(carry, layer_in):
+                h = carry
+                if use_remat and remat_name == "full":
+                    # name the (bf16) boundary so save_only_these_names keeps
+                    # exactly this tensor — without it, partial-eval saves a
+                    # post-upcast fp32 copy of the residual per layer (2x the
+                    # boundary memory; observed on the 72B train cell)
+                    from jax.ad_checkpoint import checkpoint_name
+
+                    h = checkpoint_name(h, "layer_boundary")
+                layer_params, layer_cache = layer_in
+                if layer_shardings is not None:
+                    layer_params = jax.tree.map(
+                        jax.lax.with_sharding_constraint, layer_params,
+                        layer_shardings,
+                    )
+                out, new_cache = self.block(
+                    layer_params, h, ctx=ctx, mode=mode, cache=layer_cache,
+                    positions=positions, **block_kwargs,
+                )
+                # per-layer precision mixes may upcast the block output; the
+                # scan carry dtype is pinned by the embedding policy
+                return out.astype(carry.dtype), new_cache
+
+            if use_remat:
+                if remat_name == "full":
+                    policy = jax.checkpoint_policies.save_only_these_names(
+                        "layer_boundary"
+                    )
+                else:
+                    policy_name = REMAT_POLICIES.get(remat_name, "nothing_saveable")
+                    policy = (
+                        getattr(jax.checkpoint_policies, policy_name)
+                        if policy_name
+                        else None
+                    )
+                body = jax.checkpoint(body, policy=policy)
+
+            xs = (stacked, cache)
+            if cache is None:
+                xs = (stacked, None)
+            x_out, new_cache = jax.lax.scan(body, x, xs, length=self.n_layers)
+            ctx.taps_enabled = saved_taps
+            return x_out, new_cache

@@ -1,0 +1,18 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak: float = 3e-4, warmup: int = 100,
+                  total: int = 10000, floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * jnp.minimum(step / max(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def constant(step, *, peak: float = 3e-4, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), peak)

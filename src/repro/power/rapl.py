@@ -1,0 +1,35 @@
+"""Simulated RAPL-class power model for TPU v5e-class chips (paper §2.7).
+
+The container is CPU-only, so power is modeled, not measured: per-chip
+power = idle + dynamic * utilization * f^3 (classic DVFS cube law), with
+performance scaling ~f for compute-bound phases and ~1 for memory/IO-slack
+phases — exactly the slack the paper exploits ([28]: RAPL is application-
+agnostic and wastes power in IO/memory phases).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class RAPLModel:
+    idle_watts: float = 75.0
+    dynamic_watts: float = 125.0  # at util=1, f=1
+    peak_flops: float = 197e12  # bf16 / chip
+    f_min: float = 0.5
+    f_max: float = 1.0
+
+    def power(self, utilization: float, freq: float = 1.0) -> float:
+        utilization = min(max(utilization, 0.0), 1.0)
+        freq = min(max(freq, self.f_min), self.f_max)
+        return self.idle_watts + self.dynamic_watts * utilization * freq**3
+
+    def perf_scale(self, freq: float, compute_bound_frac: float = 1.0) -> float:
+        """Relative performance at frequency f: compute-bound scales with f,
+        memory/IO-bound phases don't (the application-aware opportunity)."""
+        freq = min(max(freq, self.f_min), self.f_max)
+        return compute_bound_frac * freq + (1.0 - compute_bound_frac)
+
+    def energy(self, utilization: float, freq: float, seconds: float) -> float:
+        return self.power(utilization, freq) * seconds

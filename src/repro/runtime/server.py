@@ -1,0 +1,112 @@
+"""Serving runtime: batched prefill+decode with mARGOt QoS adaptation.
+
+This is the UC2 (navigation) runtime shape: requests arrive with a prompt,
+the server prefils then decodes N tokens; the woven knobs (precision
+variant, decode budget, memoization on/off) are adapted by mARGOt against a
+quality index + latency/cost constraints — reproducing the paper's
+NQI-vs-cost trade-off (Figs. 17–19) in benchmarks/navigation_autotune.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.weaver import WovenProgram
+from repro.memo.table import MemoTable
+from repro.monitor.examon import ExamonBroker, get_default_broker
+from repro.monitor.sensors import apply_wrappers
+from repro.nn.module import init_params
+from repro.runtime.steps import build_decode_step, build_prefill_step
+from repro.versioning.libvc import LibVC
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    max_cache_len: int = 256
+    decode_tokens: int = 8
+    seed: int = 0
+
+
+class Server:
+    def __init__(self, woven: WovenProgram, cfg: ServerConfig, *, mesh=None,
+                 margot=None, broker: ExamonBroker | None = None,
+                 memo: MemoTable | None = None):
+        self.woven = woven
+        self.cfg = cfg
+        self.mesh = mesh
+        self.margot = margot
+        self.broker = broker or get_default_broker()
+        self.memo = memo if memo is not None else woven.state.extra.get("memo_table")
+        self.info: dict[str, Any] = {"task_name": woven.program.cfg.name, "knobs": {}}
+
+        def build(kind):
+            def builder(variant: str):
+                v = None if variant == "__default__" else variant
+                if kind == "prefill":
+                    fn = build_prefill_step(self.woven, mesh=self.mesh, variant=v)
+                else:
+                    fn = build_decode_step(self.woven, mesh=self.mesh, variant=v)
+                return jax.jit(fn)
+
+            return LibVC(builder, error_strategy="fallback")
+
+        self.prefill_vc = build("prefill")
+        self.decode_vc = build("decode")
+        self.params = init_params(woven.program.model, jax.random.PRNGKey(cfg.seed),
+                                  woven.state.policies)
+        self.served = 0
+        self.latencies: list[float] = []
+
+    def _variant(self) -> str | None:
+        if self.margot is None:
+            return None
+        op = self.margot.update()
+        self.info["knobs"].update(op.knobs)
+        return op.knobs.get("variant") or op.knobs.get("precision_mix")
+
+    def serve(self, tokens: np.ndarray, *, decode_tokens: int | None = None) -> np.ndarray:
+        """tokens: (B, S) prompt -> (B, N) generated ids (greedy)."""
+        n = decode_tokens or self.cfg.decode_tokens
+        key = ("serve", tokens.tobytes(), n)
+        if self.memo is not None and self.memo.running:
+            hit, out = self.memo.lookup(key)
+            if hit:
+                return out
+        t0 = time.perf_counter()
+        variant = self._variant()
+        state = self.woven.variant_state(
+            None if variant in (None, "__default__") else variant
+        )
+        state.extra["cache_max_len"] = self.cfg.max_cache_len
+
+        toks = jnp.asarray(tokens)
+        B, S = toks.shape
+        logits, cache = self.prefill_vc(variant, self.params, {"tokens": toks})
+        outs = []
+        pos = S
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        for _ in range(n):
+            outs.append(tok)
+            logits, cache = self.decode_vc(
+                variant, self.params,
+                {"tokens": tok, "positions": jnp.full((B, 1), pos, jnp.int32)},
+                cache,
+            )
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            pos += 1
+        result = np.asarray(jnp.concatenate(outs, axis=1))
+        dt = time.perf_counter() - t0
+        self.latencies.append(dt)
+        self.served += 1
+        self.broker.publish(f"serve/latency/@host{jax.process_index()}", dt)
+        if self.margot is not None:
+            self.margot.observe("latency", dt)
+        if self.memo is not None:
+            self.memo.update(key, result)
+        return result

@@ -1,0 +1,185 @@
+"""Step builders: woven program -> pure train / prefill / decode functions.
+
+This is where the separation of concerns pays off: the functions below read
+*only* the WeaveState (policies, impls, rules, extra) — every knob the
+ANTAREX aspects set lands here, and libVC compiles one executable per
+variant.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.weaver import WovenProgram
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+
+
+def _cross_entropy(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Mean token NLL + accuracy. logits (B,T,V) may cover more positions
+    than labels (VLM image prefix): align to the last T_label positions."""
+    T = labels.shape[1]
+    logits = logits[:, -T:].astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return jnp.mean(nll), acc
+
+
+def build_loss_fn(woven: WovenProgram, mesh=None, variant: str | None = None):
+    program = woven.program
+    state = woven.variant_state(variant)
+    model = program.model
+
+    def loss_fn(params, batch):
+        ctx = state.make_ctx(mesh=mesh)
+        logits, _ = model(params, batch, ctx=ctx, mode="dense")
+        loss, acc = _cross_entropy(logits, batch["labels"])
+        metrics = {"loss": loss, "accuracy": acc}
+        metrics.update(ctx.taps)
+        return loss, metrics
+
+    return loss_fn
+
+
+def build_train_step(woven: WovenProgram, *, mesh=None, variant: str | None = None,
+                     opt_cfg: AdamWConfig | None = None,
+                     lr_fn: Callable | None = None):
+    """Returns train_step(params, opt_state, batch, step) -> (params, opt, metrics).
+
+    Gradient accumulation (woven knob "accum_steps") scans microbatches with
+    the remat policy applied inside the model's layer scan; grads accumulate
+    fp32 in the params' sharding.
+    """
+    from repro.optim.schedule import warmup_cosine
+
+    state = woven.variant_state(variant)
+    opt_cfg = opt_cfg or AdamWConfig(
+        compression=bool(state.extra.get("grad_compression", False)),
+        state_dtype=str(state.extra.get("opt_state_dtype", "float32")),
+    )
+    lr_fn = lr_fn or warmup_cosine
+    accum = int(state.extra.get("accum_steps", 1))
+    loss_fn = build_loss_fn(woven, mesh, variant)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    # grad-accumulation carries must live in the params' sharding — an
+    # unconstrained zeros-init would be replicated (24 GB/device fp32 for a
+    # 6B model); GSPMD does not reliably back-propagate the layout.
+    grad_shardings = None
+    if mesh is not None:
+        from repro.distributed.sharding import param_shardings
+
+        grad_shardings = param_shardings(woven.program.model, mesh, state.rules)
+
+    def _sharded_zeros(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if grad_shardings is not None:
+            zeros = jax.tree.map(jax.lax.with_sharding_constraint, zeros,
+                                 grad_shardings)
+        return zeros
+
+    def train_step(params, opt_state, batch, step):
+        if accum > 1:
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape(accum, b // accum, *x.shape[1:])
+
+            micro = jax.tree.map(reshape, batch)
+
+            def body(carry, mb):
+                gsum = carry
+                (loss, metrics), grads = grad_fn(params, mb)
+                if grad_shardings is not None:  # e.g. embed grads come back
+                    grads = jax.tree.map(jax.lax.with_sharding_constraint,
+                                         grads, grad_shardings)  # unsharded
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads
+                )
+                if grad_shardings is not None:
+                    gsum = jax.tree.map(jax.lax.with_sharding_constraint,
+                                        gsum, grad_shardings)
+                return gsum, (loss, metrics)
+
+            gsum, (losses, metrics) = jax.lax.scan(body, _sharded_zeros(params), micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+            if grad_shardings is not None:
+                grads = jax.tree.map(jax.lax.with_sharding_constraint,
+                                     grads, grad_shardings)
+
+        lr = lr_fn(step)
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg, lr
+        )
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(woven: WovenProgram, *, mesh=None, variant: str | None = None):
+    program = woven.program
+    state = woven.variant_state(variant)
+    model = program.model
+
+    def prefill_step(params, inputs):
+        ctx = state.make_ctx(mesh=mesh)
+        logits, cache = model(params, inputs, ctx=ctx, mode="prefill")
+        return logits, cache
+
+    return prefill_step
+
+
+def build_decode_step(woven: WovenProgram, *, mesh=None, variant: str | None = None):
+    program = woven.program
+    state = woven.variant_state(variant)
+    model = program.model
+
+    def decode_step(params, inputs, cache):
+        ctx = state.make_ctx(mesh=mesh)
+        logits, new_cache = model(params, inputs, ctx=ctx, mode="decode", cache=cache)
+        return logits, new_cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Heuristics shared by launch + dryrun
+# ---------------------------------------------------------------------------
+
+
+def default_accum(cfg, shape_kind: str) -> int:
+    """Microbatching needed to bound live activations/logits on 16 GB HBM
+    (validated against dry-run memory_analysis; see EXPERIMENTS.md §Dry-run)."""
+    if shape_kind != "train":
+        return 1
+    if cfg.family in ("ssm", "hybrid"):
+        # dp_fsdp layout: the full global batch IS the 256/512-way DP degree;
+        # microbatching would starve the mesh (per-device batch < 1)
+        return 1
+    n = cfg.param_count()
+    if n >= 200e9:
+        return 32
+    if n >= 50e9:
+        return 16
+    return 8
+
+
+def model_flops_per_token(cfg) -> float:
+    """MODEL_FLOPS/token = 6·N_active (the §Roofline 'useful compute')."""
+    return 6.0 * cfg.active_param_count()
+
+
+def step_flops(cfg, shape) -> float:
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    f = model_flops_per_token(cfg) * tokens
+    if shape.kind != "train":
+        f /= 3.0  # forward only
+    return f

@@ -1,0 +1,183 @@
+"""Training runtime: the woven application's collect-analyse-decide-act loop.
+
+Composes every ANTAREX runtime service around the jitted train step:
+  - libVC holds one compiled executable per weave variant; the mARGOt
+    autotuner (if attached) picks the variant/knobs each adaptation window;
+  - woven step wrappers (ExaMon sensors, timers, power capping) run on the
+    host around each step;
+  - checkpointing is async + atomic, restart picks up the latest manifest,
+    SIGTERM triggers a final checkpoint (preemption), a watchdog guards
+    step deadlines, and heartbeats feed straggler detection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.weaver import WovenProgram
+from repro.data.pipeline import TokenPipeline
+from repro.distributed.fault import PreemptionHandler, Watchdog
+from repro.monitor.examon import ExamonBroker, get_default_broker
+from repro.monitor.sensors import apply_wrappers
+from repro.nn.module import init_params
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.steps import build_train_step, model_flops_per_token
+from repro.versioning.libvc import LibVC
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    watchdog_deadline_s: float = 300.0
+    keep_checkpoints: int = 3
+
+
+class Trainer:
+    def __init__(
+        self,
+        woven: WovenProgram,
+        pipeline: TokenPipeline,
+        cfg: TrainerConfig,
+        *,
+        mesh=None,
+        opt_cfg: AdamWConfig | None = None,
+        margot=None,
+        broker: ExamonBroker | None = None,
+        lr_fn: Callable | None = None,
+    ):
+        self.woven = woven
+        self.pipeline = pipeline
+        self.cfg = cfg
+        self.mesh = mesh
+        self.margot = margot
+        self.broker = broker or get_default_broker()
+        self.opt_cfg = opt_cfg or AdamWConfig(
+            compression=bool(woven.state.extra.get("grad_compression", False)),
+            state_dtype=str(woven.state.extra.get("opt_state_dtype", "float32")),
+        )
+        model_cfg = woven.program.cfg
+        self.info: dict[str, Any] = {
+            "task_name": model_cfg.name,
+            "tokens_per_step": pipeline.cfg.global_batch * pipeline.cfg.seq_len,
+            "flops_per_step": model_flops_per_token(model_cfg)
+            * pipeline.cfg.global_batch * pipeline.cfg.seq_len,
+            "knobs": dict(woven.knobs.defaults()) if len(woven.knobs) else {},
+        }
+
+        def builder(variant: str):
+            step = build_train_step(self.woven, mesh=self.mesh,
+                                    variant=None if variant == "__default__" else variant,
+                                    opt_cfg=self.opt_cfg, lr_fn=lr_fn)
+            jitted = jax.jit(step, donate_argnums=(0, 1))
+            return apply_wrappers(jitted, self.woven.state.step_wrappers, self.info)
+
+        self.libvc = LibVC(builder, error_strategy="fallback")
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+        self.history: list[dict] = []
+        self.restore_count = 0
+        self.preemption = PreemptionHandler(install=False)
+        self.watchdog_timeouts = 0
+
+    # -- state ------------------------------------------------------------------
+
+    def init_state(self) -> None:
+        self.params = init_params(self.woven.program.model,
+                                  jax.random.PRNGKey(self.cfg.seed),
+                                  self.woven.state.policies)
+        self.opt_state = adamw.init_state(self.params, self.opt_cfg)
+        self.step = 0
+
+    def _ckpt(self) -> Checkpointer | None:
+        if not self.cfg.ckpt_dir:
+            return None
+        return Checkpointer(self.cfg.ckpt_dir, keep=self.cfg.keep_checkpoints)
+
+    def save(self, blocking: bool = False) -> None:
+        ckpt = self._ckpt()
+        if ckpt is None or self.params is None:
+            return
+        tree = {"params": self.params, "opt": self.opt_state,
+                "data": {"step": np.asarray(self.pipeline.step)}}
+        ckpt.save(self.step, tree, meta={"arch": self.woven.program.cfg.name},
+                  blocking=blocking)
+
+    def maybe_restore(self) -> bool:
+        ckpt = self._ckpt()
+        if ckpt is None or ckpt.latest_step() is None:
+            return False
+        if self.params is None:
+            self.init_state()
+        template = {"params": self.params, "opt": self.opt_state,
+                    "data": {"step": np.asarray(0)}}
+        tree, manifest = ckpt.restore(template)
+        self.params = jax.tree.map(jnp.asarray, tree["params"])
+        self.opt_state = jax.tree.map(jnp.asarray, tree["opt"])
+        self.step = int(manifest["step"])
+        self.pipeline.load_state_dict(
+            {"step": int(tree["data"]["step"]), "seed": self.pipeline.cfg.seed}
+        )
+        self.restore_count += 1
+        return True
+
+    # -- loop -------------------------------------------------------------------
+
+    def run(self, steps: int | None = None) -> list[dict]:
+        steps = steps if steps is not None else self.cfg.steps
+        if self.params is None and not self.maybe_restore():
+            self.init_state()
+        watchdog = Watchdog(self.cfg.watchdog_deadline_s, self._on_timeout)
+        target = self.step + steps
+        while self.step < target:
+            if self.preemption.pending:
+                self.save(blocking=True)
+                break
+            variant = None
+            if self.margot is not None:
+                op = self.margot.update()
+                self.info["knobs"].update(op.knobs)
+                variant = op.knobs.get("variant") or op.knobs.get("precision_mix")
+            watchdog.beat()
+            batch = jax.tree.map(jnp.asarray, next(self.pipeline))
+            self.params, self.opt_state, metrics = self.libvc(
+                variant, self.params, self.opt_state, batch,
+                jnp.asarray(self.step, jnp.int32),
+            )
+            watchdog.cancel()
+            self.step += 1
+            host = {k: float(v) for k, v in metrics.items()
+                    if jnp.ndim(v) == 0}
+            host["step"] = self.step
+            host["step_time"] = self.info.get("last_step_time", 0.0)
+            self.history.append(host)
+            self.broker.publish(
+                f"fleet/heartbeat/@host{jax.process_index()}",
+                host["step_time"] or 1e-4,
+            )
+            if self.margot is not None and host.get("step_time"):
+                self.margot.observe("step_time", host["step_time"])
+            if self.cfg.ckpt_every and self.step % self.cfg.ckpt_every == 0:
+                self.save()
+            if self.cfg.log_every and self.step % self.cfg.log_every == 0:
+                print(f"step {self.step}: loss={host.get('loss', float('nan')):.4f} "
+                      f"t={host['step_time']*1e3:.1f}ms")
+        ckpt = self._ckpt()
+        if ckpt is not None:
+            ckpt.wait()
+        return self.history
+
+    def _on_timeout(self) -> None:
+        self.watchdog_timeouts += 1

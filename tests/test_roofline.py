@@ -1,0 +1,90 @@
+"""Roofline machinery: collective parsing (explicit + iota replica groups),
+wire accounting, term math, and the loop-body-once guard that motivates the
+compositional method (EXPERIMENTS.md §Roofline)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline import analysis
+from repro.roofline.hw import ICI_LINK_BW, PEAK_FLOPS_BF16
+
+
+HLO_SNIPPET = """
+  %ar = f32[1024,512]{1,0} all-reduce(f32[1024,512]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[2048,256]{1,0} all-gather(bf16[1024,256]{1,0} %y), replica_groups=[2,2]<=[4], dimensions={0}
+  %rs = f32[256,128]{1,0} reduce-scatter(f32[1024,128]{1,0} %z), replica_groups={{0,1,2,3}}, to_apply=%add
+  %done = f32[8]{0} all-reduce-done(f32[8]{0} %start)
+  %cp = bf16[64,64]{1,0} collective-permute(bf16[64,64]{1,0} %w), source_target_pairs={{0,1}}
+"""
+
+
+class TestCollectiveParsing:
+    def test_ops_and_wire_accounting(self):
+        stats = analysis.parse_collectives(HLO_SNIPPET)
+        assert stats.counts == {"all-reduce": 1, "all-gather": 1,
+                                "reduce-scatter": 1, "collective-permute": 1}
+        ar = 2 * (1024 * 512 * 4) * 3 / 4
+        ag = (2048 * 256 * 2) * 1 / 2  # iota group size 2
+        rs = (256 * 128 * 4) * 3
+        cp = 64 * 64 * 2
+        assert stats.by_op["all-reduce"] == pytest.approx(ar)
+        assert stats.by_op["all-gather"] == pytest.approx(ag)
+        assert stats.by_op["reduce-scatter"] == pytest.approx(rs)
+        assert stats.by_op["collective-permute"] == pytest.approx(cp)
+        assert stats.wire_bytes == pytest.approx(ar + ag + rs + cp)
+
+    def test_async_done_not_double_counted(self):
+        stats = analysis.parse_collectives(HLO_SNIPPET)
+        assert stats.counts.get("all-reduce", 0) == 1  # -done skipped
+
+    def test_tuple_results(self):
+        txt = ("%t = (f32[128,128]{1,0}, f32[64]{0}) all-reduce(...), "
+               "replica_groups={{0,1}}, to_apply=%add")
+        stats = analysis.parse_collectives(txt)
+        size = 128 * 128 * 4 + 64 * 4
+        assert stats.wire_bytes == pytest.approx(2 * size * 0.5)
+
+
+class TestRooflineMath:
+    def _roof(self, **kw):
+        base = dict(arch="a", shape="s", mesh="m", chips=256,
+                    flops_per_device=197e12, bytes_per_device=819e9,
+                    collective_bytes_per_device=50e9, collective_counts={},
+                    collective_by_op={}, model_flops=197e12 * 256 * 0.5,
+                    memory_per_device={"argument": 0, "output": 0, "temp": 0,
+                                       "alias": 0, "code": 0})
+        base.update(kw)
+        return analysis.Roofline(**base)
+
+    def test_terms_are_one_second_each(self):
+        r = self._roof()
+        assert r.compute_s == pytest.approx(1.0)
+        assert r.memory_s == pytest.approx(1.0)
+        assert r.collective_s == pytest.approx(1.0)
+        assert r.step_s == pytest.approx(1.0)
+        assert r.roofline_fraction == pytest.approx(0.5)
+
+    def test_bottleneck_selection(self):
+        r = self._roof(collective_bytes_per_device=500e9)
+        assert r.bottleneck == "collective"
+        r2 = self._roof(flops_per_device=197e13)
+        assert r2.bottleneck == "compute"
+
+    def test_useful_ratio(self):
+        r = self._roof(model_flops=197e12 * 256)
+        assert r.useful_ratio == pytest.approx(1.0)
+
+
+def test_xla_counts_loop_bodies_once():
+    """The empirical fact the compositional §Roofline method rests on."""
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    sds = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c = jax.jit(f).lower(sds, sds).compile()
+    flops = c.cost_analysis()["flops"]
+    one = 2 * 64 * 64 * 64
+    assert flops < 2 * one  # 10 iterations, counted once

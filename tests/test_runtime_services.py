@@ -1,0 +1,241 @@
+"""mARGOt autotuner, ExaMon broker, PowerCapper, memo tables, libVC, DSE."""
+
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.autotune.dse import Lat
+from repro.autotune.margot import (
+    GE, LE, Goal, KnowledgeBase, Margot, OperatingPoint, State,
+)
+from repro.memo.table import MemoTable
+from repro.monitor.examon import ExamonBroker, ExamonCollector
+from repro.power.capper import PowerCapper
+from repro.power.rapl import RAPLModel
+from repro.versioning.libvc import LibVC
+
+
+def _kb():
+    return KnowledgeBase([
+        OperatingPoint({"knob": "fast"}, {"throughput": (100.0, 5.0),
+                                          "error": (0.05, 0.01)}),
+        OperatingPoint({"knob": "accurate"}, {"throughput": (40.0, 2.0),
+                                              "error": (0.01, 0.002)}),
+        OperatingPoint({"knob": "balanced"}, {"throughput": (70.0, 3.0),
+                                              "error": (0.025, 0.005)}),
+    ])
+
+
+class TestMargot:
+    def test_constrained_selection(self):
+        state = State("s", "throughput", True,
+                      [Goal("err", "error", LE, 0.03)])
+        m = Margot(_kb(), [state])
+        op = m.update()
+        assert op.knobs["knob"] == "balanced"  # fastest satisfying error<=0.03
+
+    def test_relaxation_when_infeasible(self):
+        state = State("s", "throughput", True,
+                      [Goal("err", "error", LE, 0.001)])
+        m = Margot(_kb(), [state])
+        op = m.update()
+        assert op.knobs["knob"] == "accurate"  # min violation
+
+    def test_reactive_adaptation(self):
+        """Observed error 3x expectations -> tuner falls back to accurate."""
+        state = State("s", "throughput", True,
+                      [Goal("err", "error", LE, 0.03)])
+        m = Margot(_kb(), [state])
+        m.update()
+        for _ in range(8):
+            m.observe("error", 0.075)  # balanced now really gives 0.075
+        op = m.update()
+        assert op.knobs["knob"] == "accurate"
+        assert m.switches == 2
+
+    def test_state_switch(self):
+        s1 = State("quality", "throughput", True, [Goal("e", "error", LE, 0.03)])
+        s2 = State("speed", "throughput", True, [])
+        m = Margot(_kb(), [s1, s2], "quality")
+        assert m.update().knobs["knob"] == "balanced"
+        m.switch_state("speed")
+        assert m.update().knobs["knob"] == "fast"
+
+    def test_proactive_features(self):
+        kb_small = KnowledgeBase([OperatingPoint({"knob": "a"}, {"t": (1.0, 0)})])
+        kb_big = KnowledgeBase([OperatingPoint({"knob": "b"}, {"t": (1.0, 0)})])
+        m = Margot(_kb(), [State("s", "t", True)], feature_kbs={
+            (10.0,): kb_small, (1000.0,): kb_big})
+        assert m.update(features=(12.0,)).knobs["knob"] == "a"
+        assert m.update(features=(900.0,)).knobs["knob"] == "b"
+
+
+class TestExamon:
+    def test_pubsub_and_collector(self):
+        broker = ExamonBroker()
+        coll = ExamonCollector("c", "power/*").init(broker)
+        coll.start()
+        for i in range(10):
+            broker.publish("power/node0", float(i))
+        broker.publish("other/topic", 999.0)
+        assert coll.count() == 10
+        assert coll.get() == 9.0
+        assert coll.get_mean() == pytest.approx(4.5)
+        assert coll.get_max() == 9.0
+        coll.end()
+        broker.publish("power/node0", 123.0)
+        assert coll.count() == 10  # unsubscribed
+
+    def test_percentile(self):
+        broker = ExamonBroker()
+        coll = ExamonCollector("c", "t").init(broker)
+        coll.start()
+        for i in range(100):
+            broker.publish("t", float(i))
+        assert coll.get_percentile(95) == pytest.approx(95.0, abs=2)
+
+
+class TestPowerCapper:
+    def test_converges_under_cap(self):
+        model = RAPLModel()
+        capper = PowerCapper(cap_watts=300.0, model=model)
+        t1 = capper.register("train", priority=10)
+        t2 = capper.register("background", priority=1)
+        for _ in range(60):
+            for tid in (t1, t2):
+                f = capper.frequency(tid)
+                capper.report(tid, model.power(0.9, f))
+        assert capper.total_power() <= 300.0 * 1.05
+        snap = {s["name"]: s for s in capper.snapshot()}
+        # application-aware: high priority keeps higher frequency
+        assert snap["train"]["freq"] >= snap["background"]["freq"]
+
+    def test_agnostic_uniform(self):
+        model = RAPLModel()
+        capper = PowerCapper(cap_watts=300.0, model=model, agnostic=True)
+        t1 = capper.register("a", 10)
+        t2 = capper.register("b", 1)
+        for _ in range(60):
+            for tid in (t1, t2):
+                capper.report(tid, model.power(0.9, capper.frequency(tid)))
+        snap = {s["name"]: s for s in capper.snapshot()}
+        assert snap["a"]["freq"] == pytest.approx(snap["b"]["freq"], abs=0.051)
+
+
+class TestMemoTable:
+    def test_wrap_semantics(self):
+        calls = []
+
+        def f(x):
+            calls.append(x)
+            return x * 2
+
+        table = MemoTable(size=16)
+        g = table.wrap(f)
+        assert g(3) == 6 and g(3) == 6
+        assert calls == [3]
+        assert table.hit_rate == 0.5
+
+    def test_stop_run_toggle(self):
+        table = MemoTable()
+        g = table.wrap(lambda x: x + 1)
+        g(1)
+        g(1)
+        table.running = False
+        g(1)
+        assert table.hits == 1 and table.misses == 1  # third call bypassed
+
+    def test_approx_keys(self):
+        exact = MemoTable(approx_bits=0)
+        approx = MemoTable(approx_bits=18)
+        a, b = np.float32(1.0), np.float32(1.0 + 1e-4)
+        assert exact.key_of(a) != exact.key_of(b)
+        assert approx.key_of(a) == approx.key_of(b)
+
+    def test_eviction_and_no_replace(self):
+        t = MemoTable(size=2)
+        t.update("a", 1); t.update("b", 2); t.update("c", 3)
+        assert len(t) == 2
+        assert t.lookup("a")[0] is False  # LRU-evicted
+        t2 = MemoTable(size=1, replace=False)
+        t2.update("a", 1); t2.update("b", 2)
+        assert t2.lookup("a") == (True, 1)
+
+    def test_persistence(self, tmp_path):
+        p = str(tmp_path / "memo.pkl")
+        t = MemoTable(save_path=p)
+        t.update("k", 42)
+        t.save()
+        t2 = MemoTable(load_path=p)
+        assert t2.lookup("k") == (True, 42)
+
+    def test_full_offline(self):
+        t = MemoTable(full_offline=True)
+        t.update("k", 1)
+        assert t.lookup("k")[0] is False
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 50), st.integers(0, 100)),
+                    min_size=1, max_size=60))
+    def test_property_table_size_bounded_and_consistent(self, ops):
+        t = MemoTable(size=8)
+        shadow = {}
+        for k, v in ops:
+            t.update(k, v)
+            shadow[k] = v
+        assert len(t) <= 8
+        for k, v in shadow.items():
+            hit, got = t.lookup(k)
+            if hit:
+                assert got == shadow[k]
+
+
+class TestLibVC:
+    def test_compile_cache_and_dispatch(self):
+        builds = []
+
+        def builder(name):
+            builds.append(name)
+            return {"__default__": lambda x: x,
+                    "double": lambda x: 2 * x}[name]
+
+        vc = LibVC(builder)
+        assert vc(None, 5) == 5
+        assert vc("double", 5) == 10
+        assert vc("double", 7) == 14
+        assert builds == ["__default__", "double"]  # cached
+        assert vc.stats()["dispatch_counts"]["double"] == 2
+
+    def test_error_strategies(self):
+        def builder(name):
+            if name == "broken":
+                raise RuntimeError("nope")
+            return lambda x: x
+
+        vc = LibVC(builder, error_strategy="fallback")
+        assert vc("broken", 1) == 1  # fell back to default
+        vc2 = LibVC(builder, error_strategy="exit")
+        with pytest.raises(RuntimeError):
+            vc2("broken", 1)
+
+
+class TestLat:
+    def test_explore_and_csv(self, tmp_path):
+        lat = Lat("t").add_var("threads", [1, 2, 4]).add_var_range(
+            "size", 0, 2, 1, lambda x: 10 ** x)
+        lat.add_metric("time", lambda threads, size: size / threads)
+        lat.set_num_tests(2)
+        results = lat.tune()
+        assert len(results) == 6
+        p = tmp_path / "out.csv"
+        lat.to_csv(str(p))
+        assert p.read_text().count("\n") == 7
+
+    def test_feeds_knowledge_base(self):
+        lat = Lat("t").add_var("k", [1, 2])
+        lat.add_metric("speed", lambda k: float(k))
+        lat.tune()
+        kb = KnowledgeBase.from_dse(lat.results, ["k"], ["speed"])
+        assert len(kb) == 2

@@ -1,0 +1,144 @@
+"""ANTAREX DSL core: selectors, aspects, weaving metrics (paper Tables 1-2),
+variants, knobs."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core.program import Program
+from repro.core.strategies.kernels import BlockSizeAspect, KernelAspect
+from repro.core.strategies.memoization import find_memoizable
+from repro.core.strategies.parallelization import (
+    AccumAspect, AutoShard, RematAspect, ShardingAspect, validate_rules,
+)
+from repro.core.strategies.precision import (
+    ChangePrecision, CreateLowPrecVersion, MixedPrecisionVersions,
+)
+from repro.core.strategies.versioning import Multiversion, SpecializeCall
+from repro.core.weaver import Weaver, weave
+from repro.core.knob import Knob, KnobSpace
+
+
+@pytest.fixture
+def program():
+    return Program.from_arch("yi-6b", reduced=True)
+
+
+class TestSelectors:
+    def test_select_by_kind(self, program):
+        w = Weaver(program)
+        attn = w.select(kind="attention").all()
+        assert len(attn) == 1  # scanned template stands for all layers
+        assert attn[0].attr("n_heads") == 4
+
+    def test_select_by_path_and_predicate(self, program):
+        w = Weaver(program)
+        sel = w.select("*norm*").where(lambda jp: jp.kind == "norm")
+        assert len(sel.all()) >= 2
+
+    def test_step_joinpoints(self, program):
+        w = Weaver(program)
+        steps = w.select(kind="step").all()
+        assert {jp.attr("step") for jp in steps} == {"train_step", "serve_step"}
+
+
+class TestPrecisionAspects:
+    def test_change_precision_skips_norms(self, program):
+        woven = weave(program, [ChangePrecision("*", "half")])
+        # norms pin fp32 via ParamSpec dtype regardless of policy
+        policy = woven.state.policies.resolve("yi_6b/blocks0/block/attn/wq")
+        assert policy.param_dtype == jnp.bfloat16
+
+    def test_versions_and_filter(self, program):
+        aspect = MixedPrecisionVersions(
+            ["*attn*", "*ffn*"], ["float", "half"],
+            combination_filter=lambda combo: combo[0] == "half",
+            max_versions=3,
+        )
+        woven = weave(program, [aspect])
+        assert 0 < len(woven.variants) <= 3
+        assert "precision_mix" in woven.knobs
+
+    def test_create_float_version(self, program):
+        woven = weave(program, [CreateLowPrecVersion("*", "half", "_f")])
+        assert "f" in woven.variants
+
+
+class TestVersioning:
+    def test_multiversion_knob(self, program):
+        woven = weave(program, [
+            CreateLowPrecVersion("*", "half", "_f"),
+            Multiversion("version", time_versions=True),
+        ])
+        assert "version" in woven.knobs
+        assert "__default__" in woven.knobs["version"].values
+        assert len(woven.state.step_wrappers) == 1
+
+    def test_specialize_constants(self, program):
+        woven = weave(program, [SpecializeCall("fast", {"accum_steps": 4})])
+        assert woven.variants["fast"].extra["accum_steps"] == 4
+        assert "accum_steps" not in woven.state.extra  # default untouched
+
+
+class TestWeaveMetrics:
+    def test_tables_1_2_counters(self, program):
+        aspects = [
+            ChangePrecision("*", "half"),
+            RematAspect("full"),
+            AccumAspect(4),
+            KernelAspect("*attn*", "attention", "pallas"),
+        ]
+        woven = weave(program, aspects)
+        totals = woven.report.totals()
+        assert totals.selects > 0
+        assert totals.attributes > 0
+        assert totals.actions >= totals.inserts
+        assert totals.actions > len(aspects)
+        table = woven.report.table()
+        assert "ChangePrecision" in table and "TOTAL" in table
+
+    def test_analysis_exceeds_transformation(self, program):
+        """Paper §3: analysis work >> transformation work."""
+        woven = weave(program, [ChangePrecision("*", "half")])
+        t = woven.report.totals()
+        assert t.attributes >= t.inserts
+
+
+class TestParallelization:
+    def test_autoshard_megatron(self):
+        program = Program.from_arch("yi-6b")  # full config: 32 heads % 16 == 0
+        woven = weave(program, [AutoShard({"data": 16, "model": 16})])
+        assert woven.state.extra["layout"] == "megatron_tp"
+        assert woven.state.rules["heads"] == "model"
+        assert woven.state.extra["expand_kv"]  # kv=4 does not divide tp=16
+
+    def test_autoshard_fsdp_sp_for_mqa(self):
+        program = Program.from_arch("gemma-2b")  # 8 heads < 16
+        woven = weave(program, [AutoShard({"data": 16, "model": 16})])
+        assert woven.state.extra["layout"] == "fsdp_sp"
+        assert woven.state.rules["seq_act"] == "model"
+
+    def test_autoshard_dp_for_ssm(self):
+        program = Program.from_arch("rwkv6-3b")
+        woven = weave(program, [AutoShard({"data": 16, "model": 16})])
+        assert woven.state.extra["layout"] == "dp_fsdp"
+        assert "model" in woven.state.rules["batch"]
+
+    def test_nested_pragma_detection(self):
+        with pytest.raises(ValueError, match="nested parallelism"):
+            validate_rules({"batch": ("data",), "mlp": "data"})
+
+
+class TestKnobs:
+    def test_space_grid_and_neighbors(self):
+        space = KnobSpace([Knob("a", (1, 2)), Knob("b", ("x", "y", "z"), "y")])
+        assert len(space.grid()) == 6
+        point = space.defaults()
+        assert len(space.neighbors(point)) == 3
+        with pytest.raises(ValueError):
+            space.validate({"a": 99})
+
+
+def test_find_memoizable(program):
+    w = Weaver(program)
+    paths = find_memoizable(w)
+    assert any("embed" in p for p in paths)
