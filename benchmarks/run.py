@@ -1,28 +1,45 @@
 """Benchmark harness — one entry per paper table/figure (deliverable d).
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark plus the richer
-per-benchmark artifacts under artifacts/bench/.
+per-benchmark artifacts under artifacts/bench/ (including the kernel layer's
+BENCH_kernels.json: pruned-vs-dense grid + tuned-vs-default blocks).
 
   weaving            Tables 1-2   static/dynamic weaving metrics
   precision_versions §2.2 Fig 3   N precision-mix versions + error/time
   betweenness        Tables 4-5   BC runtimes F/FH/FHM/D/DH/DHM x shards
   docking_dse        Figs 13-14   LAT exploration (parallelism x pocket)
   navigation         Figs 17-19   mARGOt vs baseline QoS + NQI sweep
-  kernels            (kernels)    Pallas vs oracle + analytic VMEM/AI
+  kernels            (kernels)    Pallas pruning/tuning + analytic VMEM/AI
   roofline_report    §Roofline    table from dry-run artifacts
+
+Flags:
+  --quick       CI smoke mode: smaller shapes, fast module subset
+  --only NAMES  comma-separated module subset (e.g. --only kernels,weaving)
 """
 
 from __future__ import annotations
 
+import argparse
+import inspect
 import os
 import sys
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
+QUICK_MODULES = ("weaving", "kernels")
 
-def main() -> None:
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small shapes, fast module subset")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names to run")
+    args = ap.parse_args(argv)
+
     os.makedirs(ARTIFACTS, exist_ok=True)
     from benchmarks import (
         betweenness,
@@ -34,11 +51,31 @@ def main() -> None:
         weaving,
     )
 
+    modules = [weaving, precision_versions, kernels, betweenness,
+               docking_dse, navigation_autotune, roofline_report]
+    if args.only:
+        names = {n.strip() for n in args.only.split(",")}
+        modules = [m for m in modules
+                   if m.__name__.split(".")[-1] in names
+                   or m.__name__.split(".")[-1].split("_")[0] in names]
+        if not modules:
+            valid = ", ".join(m.__name__.split(".")[-1] for m in
+                              (weaving, precision_versions, kernels,
+                               betweenness, docking_dse, navigation_autotune,
+                               roofline_report))
+            ap.error(f"--only {args.only!r} matches no benchmark; "
+                     f"valid names: {valid}")
+    elif args.quick:
+        modules = [m for m in modules
+                   if m.__name__.split(".")[-1] in QUICK_MODULES]
+
     rows: list[str] = ["name,us_per_call,derived"]
-    for mod in (weaving, precision_versions, kernels, betweenness,
-                docking_dse, navigation_autotune, roofline_report):
+    for mod in modules:
         print(f"== {mod.__name__} ==", flush=True)
-        rows.extend(mod.run(ARTIFACTS))
+        kwargs = {}
+        if args.quick and "quick" in inspect.signature(mod.run).parameters:
+            kwargs["quick"] = True
+        rows.extend(mod.run(ARTIFACTS, **kwargs))
     print("\n".join(rows))
     with open(os.path.join(ARTIFACTS, "summary.csv"), "w") as f:
         f.write("\n".join(rows) + "\n")

@@ -1,0 +1,418 @@
+"""DSE-driven kernel block autotuning — closing the paper's Fig. 13–14 loop.
+
+The Lat DSE (paper §4.1) explores per-kernel block knobs, the results become
+a mARGOt `KnowledgeBase` (paper §2.5), and the best operating point persists
+in an on-disk cache keyed by the kernel's problem signature.  Entry points
+(`repro.kernels.*.ops`) and the weaver (`TunedKernelAspect`) consult the
+cache, so woven programs and the serving runtime pick tuned blocks
+automatically — the DSE output is literally "fed to the autotuner".
+
+Layout of the cache file (JSON):
+
+    {"<signature key>": {"knobs": {...best...},
+                         "metrics": {"latency_s": [mean, std], ...},
+                         "ops": [{"knobs": ..., "metrics": ...}, ...]}}
+
+Tuning is always *explicit* (benchmarks, launch tooling, tests); lookups on
+the hot path are cheap dict reads and never trigger measurement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+import uuid
+from typing import Any, Callable, Mapping
+
+from repro.autotune.dse import Lat
+from repro.autotune.margot import KnowledgeBase, OperatingPoint
+from repro.kernels.flash_attention.kernel import cdiv, vmem_bytes
+
+DEFAULT_VMEM_BUDGET = 16 * 2**20  # bytes per TPU core
+
+_DTYPE_BYTES = {
+    "float32": 4, "f32": 4, "bfloat16": 2, "bf16": 2, "float16": 2,
+    "int8": 1, "float8_e4m3fn": 1, "float8_e5m2": 1,
+}
+
+
+def dtype_bytes(dtype: Any) -> int:
+    name = getattr(dtype, "name", None) or str(dtype)
+    return _DTYPE_BYTES.get(name, 4)
+
+
+# ---------------------------------------------------------------------------
+# Signatures
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSignature:
+    """Everything that changes which block configuration is optimal."""
+
+    kernel: str               # flash_attention | rwkv6 | rglru | rmsnorm
+    shape: tuple[int, ...]    # problem shape (kernel-specific, see helpers)
+    dtype: str = "bfloat16"
+    causal: bool = False
+    window: int | None = None
+    gqa: int = 1              # q heads per kv head
+
+    def key(self) -> str:
+        shp = "x".join(str(s) for s in self.shape)
+        mask = "c" if self.causal else "f"
+        win = str(self.window) if self.window is not None else "-"
+        return f"{self.kernel}/{shp}/{self.dtype}/{mask}/w{win}/g{self.gqa}"
+
+
+def flash_signature(q_shape, kv_heads: int, dtype, *, causal: bool,
+                    window: int | None = None) -> KernelSignature:
+    """q_shape is the model layout (B, S, H, D)."""
+    B, S, H, D = q_shape
+    return KernelSignature(
+        kernel="flash_attention", shape=(B, S, H, kv_heads, D),
+        dtype=str(getattr(dtype, "name", dtype)), causal=causal,
+        window=window, gqa=H // max(kv_heads, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Design spaces + constraints
+# ---------------------------------------------------------------------------
+
+KERNEL_SPACES: dict[str, dict[str, tuple[int, ...]]] = {
+    "flash_attention": {
+        "block_q": (128, 256, 512, 1024),
+        "block_kv": (128, 256, 512, 1024),
+    },
+    "rwkv6": {"chunk": (16, 32, 64, 128)},
+    "rglru": {"block_d": (128, 256, 512, 1024), "chunk": (64, 128, 256)},
+    "rmsnorm": {"block_rows": (64, 128, 256, 512)},
+}
+
+
+def config_vmem_bytes(sig: KernelSignature, knobs: Mapping[str, int]) -> int:
+    """Analytic VMEM working set of one configuration (the LE constraint)."""
+    b = dtype_bytes(sig.dtype)
+    if sig.kernel == "flash_attention":
+        B, S, H, K, D = sig.shape
+        return vmem_bytes(
+            min(int(knobs["block_q"]), S), min(int(knobs["block_kv"]), S),
+            D, b, kv_dtype_bytes=b,
+        )
+    if sig.kernel == "rwkv6":
+        B, S, H, C = sig.shape
+        L = int(knobs["chunk"])
+        # 4 chunk blocks + pairwise decay (L,L,C) + state (C,C), fp32 math
+        return (4 * L * C + L * L * C + C * C) * 4
+    if sig.kernel == "rglru":
+        B, S, D = sig.shape
+        L, Db = int(knobs["chunk"]), int(knobs["block_d"])
+        return 3 * L * min(Db, D) * 4
+    if sig.kernel == "rmsnorm":
+        rows, d = sig.shape
+        return 2 * min(int(knobs["block_rows"]), rows) * d * 4
+    raise KeyError(sig.kernel)
+
+
+def design_space(sig: KernelSignature, *,
+                 vmem_budget: int = DEFAULT_VMEM_BUDGET) -> dict[str, list[int]]:
+    """Per-kernel knob values, pre-filtered so every value is feasible for
+    the signature's shape on its own (cross-knob VMEM feasibility is the
+    tuner's point-level constraint)."""
+    space = {k: list(v) for k, v in KERNEL_SPACES[sig.kernel].items()}
+    if sig.kernel == "flash_attention":
+        B, S, H, K, D = sig.shape
+        space["block_q"] = [v for v in space["block_q"] if v <= max(S, 128)]
+        space["block_kv"] = [v for v in space["block_kv"] if v <= max(S, 128)]
+    elif sig.kernel == "rwkv6":
+        S = sig.shape[1]
+        space["chunk"] = [v for v in space["chunk"] if v <= max(S, 16)]
+    elif sig.kernel == "rglru":
+        B, S, D = sig.shape
+        space["block_d"] = [v for v in space["block_d"] if v <= max(D, 128)]
+        space["chunk"] = [v for v in space["chunk"] if v <= max(S, 64)]
+    # drop single-knob values that can never fit the VMEM budget
+    for name in list(space):
+        feasible = []
+        for v in space[name]:
+            probe = {n: min(vals) for n, vals in space.items()}
+            probe[name] = v
+            if config_vmem_bytes(sig, probe) <= vmem_budget:
+                feasible.append(v)
+        space[name] = feasible or [min(space[name])]
+    return space
+
+
+# ---------------------------------------------------------------------------
+# Persistent cache
+# ---------------------------------------------------------------------------
+
+
+def default_cache_path() -> str:
+    return os.environ.get(
+        "REPRO_TUNER_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "kernel_tuner.json"),
+    )
+
+
+class TunerCache:
+    """Tiny JSON-backed store: signature key -> best knobs + DSE rows."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path or default_cache_path()
+        self._data: dict[str, dict] | None = None
+        self.hits = 0
+        self.misses = 0
+
+    def _load(self) -> dict[str, dict]:
+        if self._data is None:
+            try:
+                with open(self.path) as f:
+                    self._data = json.load(f)
+            except (OSError, ValueError):
+                self._data = {}
+        return self._data
+
+    def get(self, key: str) -> dict | None:
+        entry = self._load().get(key)
+        if entry is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return entry
+
+    def put(self, key: str, entry: dict) -> None:
+        data = self._load()
+        data[key] = entry
+        os.makedirs(os.path.dirname(os.path.abspath(self.path)), exist_ok=True)
+        # unique tmp per writer: concurrent puts must not interleave bytes
+        tmp = f"{self.path}.tmp.{os.getpid()}.{uuid.uuid4().hex[:8]}"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+
+# ---------------------------------------------------------------------------
+# The tuner
+# ---------------------------------------------------------------------------
+
+
+class KernelTuner:
+    """Lat DSE over kernel block knobs, constrained by the analytic VMEM
+    model, persisted through a TunerCache."""
+
+    def __init__(self, cache: TunerCache | str | None = None, *,
+                 vmem_budget: int = DEFAULT_VMEM_BUDGET):
+        if isinstance(cache, TunerCache):
+            self.cache = cache
+        else:
+            self.cache = TunerCache(cache)
+        self.vmem_budget = vmem_budget
+        self.tuned = 0  # DSE runs performed (cache misses that measured)
+
+    # -- lookup ----------------------------------------------------------------
+
+    def lookup(self, sig: KernelSignature) -> dict[str, int] | None:
+        entry = self.cache.get(sig.key())
+        if entry is None:
+            return None
+        return dict(entry["knobs"])
+
+    def knowledge_base(self, sig: KernelSignature) -> KnowledgeBase | None:
+        """Rebuild the mARGOt KnowledgeBase from the cached DSE rows."""
+        entry = self.cache.get(sig.key())
+        if entry is None:
+            return None
+        ops = [
+            OperatingPoint(
+                knobs=dict(row["knobs"]),
+                metrics={m: tuple(v) for m, v in row["metrics"].items()},
+            )
+            for row in entry.get("ops", [])
+        ]
+        return KnowledgeBase(ops)
+
+    # -- tuning ----------------------------------------------------------------
+
+    def tune(
+        self,
+        sig: KernelSignature,
+        measure: Callable[..., float] | None = None,
+        *,
+        sample: int | None = None,
+        num_tests: int = 1,
+        seed: int = 0,
+    ) -> dict[str, int]:
+        """Run the DSE and persist best knobs + the full operating-point set.
+
+        `measure(**knobs) -> latency_s` defaults to timing the real kernel on
+        inputs shaped like the signature (interpret mode off-TPU)."""
+        if measure is None:
+            measure = _default_measure(sig)
+        space = design_space(sig, vmem_budget=self.vmem_budget)
+
+        lat = Lat(sig.key()).set_num_tests(num_tests)
+        for name, values in space.items():
+            lat.add_var(name, values)
+        lat.add_metric("latency_s", measure)
+        lat.add_metric(
+            "vmem_bytes", lambda **knobs: config_vmem_bytes(sig, knobs)
+        )
+        results = lat.tune(sample=sample, seed=seed)
+
+        feasible = [
+            r for r in results
+            if r["metrics"]["vmem_bytes"][0] <= self.vmem_budget
+        ]
+        pool = feasible or results
+        best = min(pool, key=lambda r: r["metrics"]["latency_s"][0])
+        entry = {
+            "knobs": {k: v for k, v in best["knobs"].items()},
+            "metrics": {m: list(v) for m, v in best["metrics"].items()},
+            "ops": [
+                {"knobs": r["knobs"],
+                 "metrics": {m: list(v) for m, v in r["metrics"].items()}}
+                for r in results
+            ],
+        }
+        self.cache.put(sig.key(), entry)
+        self.tuned += 1
+        return dict(best["knobs"])
+
+    def get(self, sig: KernelSignature,
+            measure: Callable[..., float] | None = None,
+            **tune_kw) -> dict[str, int]:
+        """Cached best knobs, tuning on first miss."""
+        knobs = self.lookup(sig)
+        if knobs is not None:
+            return knobs
+        return self.tune(sig, measure, **tune_kw)
+
+
+# ---------------------------------------------------------------------------
+# Default measurement (the real kernel, small reps)
+# ---------------------------------------------------------------------------
+
+
+def _default_measure(sig: KernelSignature) -> Callable[..., float]:
+    import jax
+    import jax.numpy as jnp
+
+    dt = {"bfloat16": jnp.bfloat16, "float16": jnp.float16}.get(
+        sig.dtype, jnp.float32
+    )
+
+    if sig.kernel == "flash_attention":
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        B, S, H, K, D = sig.shape
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, S, H, D), dt)
+        k = jax.random.normal(ks[1], (B, S, K, D), dt)
+        v = jax.random.normal(ks[2], (B, S, K, D), dt)
+
+        def measure(**knobs):
+            fn = lambda: flash_attention(
+                q, k, v, causal=sig.causal, window=sig.window,
+                block_q=int(knobs["block_q"]), block_kv=int(knobs["block_kv"]),
+            )
+            jax.block_until_ready(fn())  # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            return time.perf_counter() - t0
+
+        return measure
+
+    if sig.kernel == "rwkv6":
+        from repro.kernels.rwkv6.ops import wkv_pallas
+
+        B, S, H, C = sig.shape
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        r, k, v = (jax.random.normal(ks[i], (B, S, H, C)) for i in range(3))
+        w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, C))))
+        u = jax.random.normal(ks[4], (H, C))
+        s0 = jnp.zeros((B, H, C, C))
+
+        def measure(**knobs):
+            fn = lambda: wkv_pallas(r, k, v, w, u, s0, chunk=int(knobs["chunk"]))[0]
+            jax.block_until_ready(fn())
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            return time.perf_counter() - t0
+
+        return measure
+
+    if sig.kernel == "rglru":
+        from repro.kernels.rglru.ops import rglru_pallas
+
+        B, S, D = sig.shape
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, D)))
+        b = jax.random.normal(ks[1], (B, S, D))
+        h0 = jax.random.normal(ks[2], (B, D))
+
+        def measure(**knobs):
+            fn = lambda: rglru_pallas(
+                a, b, h0, block_d=int(knobs["block_d"]), chunk=int(knobs["chunk"])
+            )[0]
+            jax.block_until_ready(fn())
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            return time.perf_counter() - t0
+
+        return measure
+
+    if sig.kernel == "rmsnorm":
+        from repro.kernels.rmsnorm.ops import rmsnorm
+
+        rows, d = sig.shape
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (rows, d), dt)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32)
+
+        def measure(**knobs):
+            fn = lambda: rmsnorm(x, w, block_rows=int(knobs["block_rows"]))
+            jax.block_until_ready(fn())
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            return time.perf_counter() - t0
+
+        return measure
+
+    raise KeyError(sig.kernel)
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default tuner (hot-path lookups)
+# ---------------------------------------------------------------------------
+
+_default_tuner: KernelTuner | None = None
+_default_tuner_path: str | None = None
+
+
+def default_tuner() -> KernelTuner:
+    """Singleton over the default cache path (re-created if REPRO_TUNER_CACHE
+    changes, so tests can redirect it)."""
+    global _default_tuner, _default_tuner_path
+    path = default_cache_path()
+    if _default_tuner is None or _default_tuner_path != path:
+        _default_tuner = KernelTuner(path)
+        _default_tuner_path = path
+    return _default_tuner
+
+
+def tuned_flash_blocks(q_shape, kv_heads: int, dtype, *, causal: bool,
+                       window: int | None = None) -> dict[str, int]:
+    """Non-failing hot-path lookup used by ops.py: {} when untuned."""
+    try:
+        sig = flash_signature(q_shape, kv_heads, dtype, causal=causal,
+                              window=window)
+        return default_tuner().lookup(sig) or {}
+    except Exception:  # pragma: no cover - never break the kernel call
+        return {}

@@ -19,6 +19,7 @@ import os
 import shutil
 import threading
 import time
+import uuid
 from typing import Any, Callable
 
 import jax
@@ -105,7 +106,9 @@ class Checkpointer:
     def _write(self, step: int, host: dict, manifest: dict) -> None:
         try:
             final = os.path.join(self.directory, f"ckpt_{step}")
-            tmp = f"{final}.tmp.{os.getpid()}"
+            # pid alone is not unique: two writers in one process (e.g. an
+            # async save overlapping a blocking one) must not share a tmp dir
+            tmp = f"{final}.tmp.{os.getpid()}.{uuid.uuid4().hex[:8]}"
             arrays = os.path.join(tmp, "arrays")
             os.makedirs(arrays, exist_ok=True)
             suffix = (

@@ -1,6 +1,12 @@
 """Kernel-substitution aspects: weave Pallas implementations (or block-size
 choices) onto compute joinpoints — the TPU analogue of the paper's compiler
--flag / code-variant selection (§2.3)."""
+-flag / code-variant selection (§2.3).
+
+`TunedKernelAspect` closes the DSE->autotuner loop at weave time: it builds
+the program's flash-attention signature, consults the persistent kernel-tuner
+cache (repro.autotune.kernel_tuner), and weaves the tuned block sizes in as
+extras — so a woven program automatically runs with DSE-selected blocks, and
+exposes them as knobs for mARGOt refinement."""
 
 from __future__ import annotations
 
@@ -35,3 +41,60 @@ class BlockSizeAspect(Aspect):
     def apply(self, weaver: Weaver) -> None:
         for key, val in self.sizes.items():
             weaver.set_extra(key, val)
+
+
+class TunedKernelAspect(Aspect):
+    """Weave DSE-tuned flash-attention block sizes from the tuner cache.
+
+    Looks up the (batch, seq, heads, kv_heads, head_dim, dtype, mask)
+    signature in the persistent cache; on a hit, sets the `flash_block_*`
+    extras and exposes block knobs (tuned value as default) for the dynamic
+    autotuner.  On a miss it leaves the defaults untouched — tuning itself
+    is explicit (benchmarks / launch tooling), never a weave side effect —
+    unless `tune_on_miss=True`.
+    """
+
+    name = "TunedKernelBlocks"
+
+    def __init__(self, batch: int, seq_len: int, *, dtype: str = "bfloat16",
+                 tuner=None, tune_on_miss: bool = False,
+                 expose_knobs: bool = True):
+        self.batch, self.seq_len, self.dtype = batch, seq_len, dtype
+        self.tuner = tuner
+        self.tune_on_miss = tune_on_miss
+        self.expose_knobs = expose_knobs
+
+    def signature(self, cfg):
+        from repro.autotune.kernel_tuner import flash_signature
+
+        return flash_signature(
+            (self.batch, self.seq_len, cfg.n_heads, cfg.resolved_head_dim),
+            cfg.kv_heads, self.dtype,
+            causal=True, window=cfg.attn_window,
+        )
+
+    def apply(self, weaver: Weaver) -> None:
+        from repro.autotune.kernel_tuner import default_tuner
+
+        attn_jps = weaver.select(kind="attention").all()
+        if not attn_jps:  # nothing to tune (ssm/recurrent-only programs)
+            return
+        for jp in attn_jps:
+            jp.attr("kind")
+        tuner = self.tuner or default_tuner()
+        sig = self.signature(weaver.program.cfg)
+        knobs = tuner.lookup(sig)
+        if knobs is None and self.tune_on_miss:
+            knobs = tuner.tune(sig)
+        if not knobs:
+            return
+        bq, bkv = int(knobs["block_q"]), int(knobs["block_kv"])
+        weaver.set_extra("flash_block_q", bq)
+        weaver.set_extra("flash_block_kv", bkv)
+        if self.expose_knobs:
+            from repro.autotune.kernel_tuner import KERNEL_SPACES
+
+            space = KERNEL_SPACES["flash_attention"]
+            for name, default in (("block_q", bq), ("block_kv", bkv)):
+                values = tuple(sorted(set(space[name]) | {default}))
+                weaver.add_knob(Knob(f"flash_{name}", values, default))

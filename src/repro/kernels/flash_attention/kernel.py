@@ -1,19 +1,37 @@
-"""Pallas TPU flash attention (forward): online-softmax over KV blocks.
+"""Pallas TPU flash attention (forward): online-softmax over KV blocks with
+block-sparse grid pruning.
 
 TPU mapping (DESIGN.md: adapt, don't port): the grid is
-(batch, q_heads, num_q_blocks, num_kv_blocks) with the KV dimension
-*innermost* — TPU grid steps on one core execute sequentially, so the fp32
-running max / denominator / accumulator live in VMEM scratch and persist
-across KV-block iterations (the TPU analogue of a CUDA thread-block's
-shared-memory state).  Block shapes are BlockSpec-tiled so each step's
-working set is (block_q x D) + 2 x (block_kv x D) + (block_q x block_kv)
-fp32 in VMEM, with block sizes kept at MXU-friendly multiples of 128.
+(batch, q_heads, num_q_blocks, kv_steps) with the KV dimension *innermost* —
+TPU grid steps on one core execute sequentially, so the fp32 running max /
+denominator / accumulator live in VMEM scratch and persist across KV-block
+iterations (the TPU analogue of a CUDA thread-block's shared-memory state).
+Block shapes are BlockSpec-tiled so each step's working set is
+(block_q x D) + 2 x (block_kv x D) + (block_q x block_kv) fp32 in VMEM, with
+block sizes kept at MXU-friendly multiples of 128.
+
+Grid pruning (the §Perf follow-up, now implemented): for causal and
+sliding-window masks most KV blocks are fully masked for a given q block, so
+the pruned path iterates only the reachable KV-block interval [lo(iq), hi(iq))
+per q block via an index-remapped KV dimension.  `kv_steps` is the *maximum*
+interval length over q blocks; q blocks with fewer reachable KV blocks clamp
+the remapped index to their last reachable block, and Pallas elides the DMA
+when the block index repeats, so fully-masked blocks are never streamed from
+HBM.  For window-W attention the whole grid shrinks to O(S·W/block_kv)
+instead of O(S²/block²) — overshoot steps do no DMA and no MXU work
+(`pl.when`).  The dense grid remains for non-causal attention and as an
+explicit `pruned=False` baseline for benchmarks.
 
 GQA is handled in the K/V index_map (kv_head = q_head // group), so no KV
-replication is ever materialized in HBM.  Causal and sliding-window masks
-are applied in-kernel; KV blocks that are fully masked for this q block
-skip their MXU work via pl.when (they still stream K/V in — the block-
-sparse grid-pruning variant is a recorded §Perf follow-up).
+replication is ever materialized in HBM.  Ragged shapes (`block ∤ S`) are
+handled by zero-padding Q/KV up to block multiples in the wrapper; the
+in-kernel `kp < kv_len` mask keeps padded KV out of the softmax and the
+padded output rows are sliced off.
+
+`kv_schedule` mirrors the index remapping in pure numpy so tests and benches
+can assert exactly which KV blocks a configuration streams.  `vmem_bytes` is
+the analytic VMEM working-set model used as the autotuner's capacity
+constraint (see repro.autotune.kernel_tuner).
 """
 
 from __future__ import annotations
@@ -29,7 +47,159 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Reachable KV-block interval per q block
+# ---------------------------------------------------------------------------
+
+
+def _kv_lo(iq, block_q: int, block_kv: int, window: int | None):
+    """First reachable KV block for q block `iq` (lowest kp = q_start-window+1).
+
+    Works on python ints and traced scalars (index_map arithmetic).
+    """
+    if window is None:
+        return iq * 0  # 0, but keeps tracer dtype when iq is traced
+    lo = (iq * block_q - (window - 1)) // block_kv
+    if isinstance(lo, int):
+        return max(0, lo)
+    return jnp.maximum(lo, 0)
+
+
+def _kv_hi(iq, block_q: int, block_kv: int, nk: int):
+    """One past the last reachable KV block (highest kp = q_start+block_q-1)."""
+    hi = (iq * block_q + block_q - 1) // block_kv + 1
+    if isinstance(hi, int):
+        return min(nk, hi)
+    return jnp.minimum(hi, nk)
+
+
+def kv_steps_for(
+    S: int, T: int, block_q: int, block_kv: int,
+    causal: bool, window: int | None,
+) -> int:
+    """Static innermost grid length for the pruned path: max reachable KV
+    blocks over all q blocks."""
+    nq, nk = cdiv(S, block_q), cdiv(T, block_kv)
+    if not causal:
+        return nk
+    steps = 0
+    for iq in range(nq):
+        lo = _kv_lo(iq, block_q, block_kv, window)
+        hi = _kv_hi(iq, block_q, block_kv, nk)
+        steps = max(steps, hi - lo)
+    return max(steps, 1)
+
+
+def block_fully_masked(
+    iq: int, ik: int, block_q: int, block_kv: int, *,
+    kv_len: int, causal: bool, window: int | None,
+) -> bool:
+    """True iff no (q, k) pair inside block (iq, ik) survives the mask —
+    the oracle the pruning tests/benches check the schedule against."""
+    q0, q1 = iq * block_q, iq * block_q + block_q - 1
+    k0 = ik * block_kv
+    k1 = min(ik * block_kv + block_kv - 1, kv_len - 1)
+    if k0 >= kv_len:
+        return True
+    if not causal:
+        return False
+    if k0 > q1:  # entirely above the diagonal
+        return True
+    if window is not None and k1 <= q0 - window:  # entirely out of window
+        return True
+    return False
+
+
+def kv_schedule(
+    S: int, T: int, block_q: int, block_kv: int, *,
+    causal: bool = True, window: int | None = None, pruned: bool = True,
+) -> list[list[int]]:
+    """Per-q-block list of KV block indices actually *streamed* from HBM.
+
+    Mirrors the kernel's index remapping: the pruned path walks
+    [lo, lo+kv_steps) with the index clamped to hi-1, and Pallas elides the
+    copy when the block index repeats — so clamped overshoot steps stream
+    nothing.  The dense path streams every KV block for every q block.
+    """
+    nq, nk = cdiv(S, block_q), cdiv(T, block_kv)
+    if not (causal and pruned):
+        return [list(range(nk)) for _ in range(nq)]
+    steps = kv_steps_for(S, T, block_q, block_kv, causal, window)
+    out: list[list[int]] = []
+    for iq in range(nq):
+        lo = _kv_lo(iq, block_q, block_kv, window)
+        hi = _kv_hi(iq, block_q, block_kv, nk)
+        row = []
+        for j in range(steps):
+            ik = min(lo + j, hi - 1)
+            if not row or row[-1] != ik:  # repeated index -> no DMA
+                row.append(ik)
+        out.append(row)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _attend_block(
+    q_ref, k_ref, v_ref, m_scratch, l_scratch, acc_scratch,
+    q_start, k_start, *,
+    block_q: int, block_kv: int, kv_len: int,
+    causal: bool, window: int | None, softcap: float | None, scale: float,
+):
+    """One online-softmax update for the (q_start, k_start) tile."""
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
+    kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
+    mask = kp < kv_len
+    if causal:
+        mask = jnp.logical_and(mask, kp <= qp)
+        if window is not None:
+            mask = jnp.logical_and(mask, kp > qp - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scratch[...]  # (bq, 1)
+    l_prev = l_scratch[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new) * mask.astype(jnp.float32)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scratch[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scratch[...] = m_new
+    l_scratch[...] = l_new
+    acc_scratch[...] = acc
+
+
+def _finalize(o_ref, m_scratch, l_scratch, acc_scratch):
+    l = l_scratch[...]
+    out = acc_scratch[...] / jnp.maximum(l, 1e-30)
+    o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+def _init_scratch(m_scratch, l_scratch, acc_scratch):
+    m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+    l_scratch[...] = jnp.zeros_like(l_scratch)
+    acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+
+def _flash_kernel_dense(
     q_ref, k_ref, v_ref,  # VMEM blocks
     o_ref,
     m_scratch, l_scratch, acc_scratch,
@@ -48,14 +218,13 @@ def _flash_kernel(
 
     @pl.when(ik == 0)
     def _init():
-        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
-        l_scratch[...] = jnp.zeros_like(l_scratch)
-        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+        _init_scratch(m_scratch, l_scratch, acc_scratch)
 
     q_start = iq * block_q
     k_start = ik * block_kv
 
-    # Block-level reachability: skip the MXU work for fully-masked KV blocks.
+    # Block-level reachability: skip the MXU work for fully-masked KV blocks
+    # (they still stream in on this path — the pruned kernel avoids that).
     reachable = jnp.asarray(True)
     if causal:
         reachable = jnp.asarray(k_start <= q_start + block_q - 1)
@@ -66,43 +235,76 @@ def _flash_kernel(
 
     @pl.when(reachable)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
-        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
-        v = v_ref[0, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        ) * scale  # (bq, bk)
-        if softcap is not None:
-            s = jnp.tanh(s / softcap) * softcap
-
-        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0)
-        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 1)
-        mask = kp < kv_len
-        if causal:
-            mask = jnp.logical_and(mask, kp <= qp)
-            if window is not None:
-                mask = jnp.logical_and(mask, kp > qp - window)
-        s = jnp.where(mask, s, NEG_INF)
-
-        m_prev = m_scratch[...]  # (bq, 1)
-        l_prev = l_scratch[...]
-        m_cur = jnp.max(s, axis=1, keepdims=True)
-        m_new = jnp.maximum(m_prev, m_cur)
-        p = jnp.exp(s - m_new) * mask.astype(jnp.float32)
-        alpha = jnp.exp(m_prev - m_new)
-        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
-        acc = acc_scratch[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        _attend_block(
+            q_ref, k_ref, v_ref, m_scratch, l_scratch, acc_scratch,
+            q_start, k_start,
+            block_q=block_q, block_kv=block_kv, kv_len=kv_len,
+            causal=causal, window=window, softcap=softcap, scale=scale,
         )
-        m_scratch[...] = m_new
-        l_scratch[...] = l_new
-        acc_scratch[...] = acc
 
     @pl.when(ik == nk - 1)
-    def _finalize():
-        l = l_scratch[...]
-        out = acc_scratch[...] / jnp.maximum(l, 1e-30)
-        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+    def _fin():
+        _finalize(o_ref, m_scratch, l_scratch, acc_scratch)
+
+
+def _flash_kernel_pruned(
+    q_ref, k_ref, v_ref,
+    o_ref,
+    m_scratch, l_scratch, acc_scratch,
+    *,
+    block_q: int,
+    block_kv: int,
+    kv_len: int,
+    nk: int,
+    causal: bool,
+    window: int | None,
+    softcap: float | None,
+    scale: float,
+):
+    """Index-remapped KV iteration: step j of q block iq visits KV block
+    min(lo(iq)+j, hi(iq)-1).  Steps past the interval repeat the last block
+    (no DMA) and skip all compute."""
+    iq = pl.program_id(2)
+    j = pl.program_id(3)
+    nj = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        _init_scratch(m_scratch, l_scratch, acc_scratch)
+
+    lo = _kv_lo(iq, block_q, block_kv, window)
+    hi = _kv_hi(iq, block_q, block_kv, nk)
+    ik = jnp.minimum(lo + j, hi - 1)
+
+    q_start = iq * block_q
+    k_start = ik * block_kv
+
+    @pl.when(j < hi - lo)
+    def _compute():
+        _attend_block(
+            q_ref, k_ref, v_ref, m_scratch, l_scratch, acc_scratch,
+            q_start, k_start,
+            block_q=block_q, block_kv=block_kv, kv_len=kv_len,
+            causal=causal, window=window, softcap=softcap, scale=scale,
+        )
+
+    @pl.when(j == nj - 1)
+    def _fin():
+        _finalize(o_ref, m_scratch, l_scratch, acc_scratch)
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    pad = (-x.shape[axis]) % multiple
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
 
 
 def flash_attention_fwd(
@@ -115,6 +317,7 @@ def flash_attention_fwd(
     softcap: float | None = None,
     block_q: int = 512,
     block_kv: int = 512,
+    pruned: bool = True,
     interpret: bool = False,
 ) -> jax.Array:
     B, H, S, D = q.shape
@@ -123,29 +326,52 @@ def flash_attention_fwd(
     G = H // K
     block_q = min(block_q, S)
     block_kv = min(block_kv, T)
-    assert S % block_q == 0 and T % block_kv == 0, (S, T, block_q, block_kv)
-    grid = (B, H, S // block_q, T // block_kv)
 
-    kernel = functools.partial(
-        _flash_kernel,
-        block_q=block_q,
-        block_kv=block_kv,
-        kv_len=T,
-        causal=causal,
-        window=window,
-        softcap=softcap,
-        scale=1.0 / np.sqrt(D),
-    )
-    return pl.pallas_call(
+    # Ragged shapes: zero-pad to block multiples; `kp < kv_len` masks the
+    # padded KV and the padded q rows are sliced off below.
+    q = _pad_to(q, 2, block_q)
+    k = _pad_to(k, 2, block_kv)
+    v = _pad_to(v, 2, block_kv)
+    Sp, Tp = q.shape[2], k.shape[2]
+    nq, nk = Sp // block_q, Tp // block_kv
+
+    use_pruned = pruned and causal
+    if use_pruned:
+        kv_steps = kv_steps_for(S, Tp, block_q, block_kv, causal, window)
+        grid = (B, H, nq, kv_steps)
+        kernel = functools.partial(
+            _flash_kernel_pruned,
+            block_q=block_q, block_kv=block_kv, kv_len=T, nk=nk,
+            causal=causal, window=window, softcap=softcap,
+            scale=1.0 / np.sqrt(D),
+        )
+
+        def kv_index(b, h, iq, j):
+            lo = _kv_lo(iq, block_q, block_kv, window)
+            hi = _kv_hi(iq, block_q, block_kv, nk)
+            return (b, h // G, jnp.minimum(lo + j, hi - 1), 0)
+    else:
+        grid = (B, H, nq, nk)
+        kernel = functools.partial(
+            _flash_kernel_dense,
+            block_q=block_q, block_kv=block_kv, kv_len=T,
+            causal=causal, window=window, softcap=softcap,
+            scale=1.0 / np.sqrt(D),
+        )
+
+        def kv_index(b, h, iq, ik):
+            return (b, h // G, ik, 0)
+
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
-            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, j: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), kv_index),
+            pl.BlockSpec((1, 1, block_kv, D), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, j: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, D), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
@@ -153,11 +379,28 @@ def flash_attention_fwd(
         ],
         interpret=interpret,
     )(q, k, v)
+    return out[:, :, :S, :]
 
 
-def vmem_bytes(block_q: int, block_kv: int, head_dim: int, dtype_bytes: int = 2) -> int:
-    """Analytic VMEM working set (used by benchmarks/kernels.py)."""
-    blocks = (block_q + 2 * block_kv) * head_dim * dtype_bytes  # q + k + v
+def vmem_bytes(
+    block_q: int,
+    block_kv: int,
+    head_dim: int,
+    dtype_bytes: int = 2,
+    *,
+    kv_dtype_bytes: int | None = None,
+) -> int:
+    """Analytic VMEM working set — the autotuner's capacity constraint.
+
+    Counts the pipelined Q/O blocks at the Q dtype and the K *and* V blocks
+    at the KV dtype (they may differ, e.g. bf16 Q against int8 KV cache),
+    double-buffered as Pallas pipelines them, plus the fp32 scratch
+    (acc + m + l) and the fp32 score tile.
+    """
+    if kv_dtype_bytes is None:
+        kv_dtype_bytes = dtype_bytes
+    qo = 2 * block_q * head_dim * dtype_bytes  # q in + o out
+    kv = 2 * block_kv * head_dim * kv_dtype_bytes  # k + v
     scratch = (block_q * (head_dim + 2)) * 4  # fp32 acc + m + l
     scores = block_q * block_kv * 4  # fp32 s/p tile
-    return blocks + scratch + scores
+    return 2 * (qo + kv) + scratch + scores  # x2: double-buffered I/O blocks

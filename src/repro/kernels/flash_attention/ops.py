@@ -5,6 +5,11 @@ Accepts model-layout tensors (B, S, H, D) / (B, T, K, D), handles the
 optional shard_map distribution: batch over the data(/pod) axes and q-heads
 over the model axis when divisible (KV heads are gathered per local q head
 inside each shard, so the kernel always runs a per-device dense problem).
+
+Block sizes left unspecified (None) are resolved from the kernel-tuner
+cache (repro.autotune.kernel_tuner) keyed by the problem signature, falling
+back to the 512x512 default — this is how woven programs and the serving
+runtime pick DSE-tuned blocks automatically.
 """
 
 from __future__ import annotations
@@ -18,6 +23,17 @@ from jax.sharding import PartitionSpec as P
 
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_KV = 512
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_KW = {"check_rep": False}
+
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
@@ -25,29 +41,30 @@ def _interpret_default() -> bool:
 
 @functools.partial(
     jax.custom_vjp,
-    nondiff_argnums=(3, 4, 5, 6, 7, 8),
+    nondiff_argnums=(3, 4, 5, 6, 7, 8, 9),
 )
-def _flash_core(q, k, v, causal, window, softcap, block_q, block_kv, interpret):
+def _flash_core(q, k, v, causal, window, softcap, block_q, block_kv, pruned,
+                interpret):
     qt = jnp.swapaxes(q, 1, 2)  # (B,H,S,D)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
     out = flash_attention_fwd(
         qt, kt, vt,
         causal=causal, window=window, softcap=softcap,
-        block_q=block_q, block_kv=block_kv, interpret=interpret,
+        block_q=block_q, block_kv=block_kv, pruned=pruned, interpret=interpret,
     )
     return jnp.swapaxes(out, 1, 2)
 
 
 def _flash_core_fwd(q, k, v, causal, window, softcap, block_q, block_kv,
-                    interpret):
+                    pruned, interpret):
     out = _flash_core(q, k, v, causal, window, softcap, block_q, block_kv,
-                      interpret)
+                      pruned, interpret)
     return out, (q, k, v)
 
 
-def _flash_core_bwd(causal, window, softcap, block_q, block_kv, interpret,
-                    res, g):
+def _flash_core_bwd(causal, window, softcap, block_q, block_kv, pruned,
+                    interpret, res, g):
     """Backward via the reference formulation (recompute-from-inputs, the
     flash-bwd memory posture); the fused Pallas backward kernel is a
     recorded §Perf follow-up."""
@@ -69,12 +86,29 @@ _flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "causal", "window", "softcap", "block_q", "block_kv", "interpret",
+        "causal", "window", "softcap", "block_q", "block_kv", "pruned",
+        "interpret",
     ),
 )
-def _flash_local(q, k, v, *, causal, window, softcap, block_q, block_kv, interpret):
+def _flash_local(q, k, v, *, causal, window, softcap, block_q, block_kv,
+                 pruned, interpret):
     return _flash_core(q, k, v, causal, window, softcap, block_q, block_kv,
-                       interpret)
+                       pruned, interpret)
+
+
+def _resolve_blocks(q, k, *, causal, window, block_q, block_kv):
+    """Fill unspecified block sizes from the tuner cache (never fails)."""
+    if block_q is not None and block_kv is not None:
+        return int(block_q), int(block_kv)
+    from repro.autotune.kernel_tuner import tuned_flash_blocks
+
+    tuned = tuned_flash_blocks(q.shape, k.shape[2], q.dtype, causal=causal,
+                               window=window)
+    bq = int(block_q if block_q is not None
+             else tuned.get("block_q", DEFAULT_BLOCK_Q))
+    bkv = int(block_kv if block_kv is not None
+              else tuned.get("block_kv", DEFAULT_BLOCK_KV))
+    return bq, bkv
 
 
 def flash_attention(
@@ -85,18 +119,22 @@ def flash_attention(
     causal: bool = True,
     window: int | None = None,
     softcap: float | None = None,
-    block_q: int = 512,
-    block_kv: int = 512,
+    block_q: int | None = None,
+    block_kv: int | None = None,
+    pruned: bool = True,
     interpret: bool | None = None,
     mesh: jax.sharding.Mesh | None = None,
     rules: Mapping[str, Any] | None = None,
 ) -> jax.Array:
     if interpret is None:
         interpret = _interpret_default()
+    block_q, block_kv = _resolve_blocks(
+        q, k, causal=causal, window=window, block_q=block_q, block_kv=block_kv
+    )
     call = functools.partial(
         _flash_local,
         causal=causal, window=window, softcap=softcap,
-        block_q=block_q, block_kv=block_kv, interpret=interpret,
+        block_q=block_q, block_kv=block_kv, pruned=pruned, interpret=interpret,
     )
     if mesh is None:
         return call(q, k, v)
@@ -124,11 +162,11 @@ def flash_attention(
             v_l = jnp.take(v_l, idx, axis=2)
         return call(q_l, k_l, v_l)
 
-    shard = jax.shard_map(
+    shard = _shard_map(
         body, mesh=mesh,
         in_specs=(q_spec, kv_spec, kv_spec),
         out_specs=q_spec,
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )
     return shard(q, k, v)
 

@@ -130,7 +130,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
         print(f"[{arch} x {shape_name} x {mesh_name}] lower={lower_s:.1f}s "
               f"compile={compile_s:.1f}s")
         print(mem)
-        cost = compiled.cost_analysis()
+        cost = analysis.cost_properties(compiled)
         print({k: cost[k] for k in ("flops", "bytes accessed")
                if k in cost})
 

@@ -12,7 +12,17 @@ from __future__ import annotations
 import numpy as np
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 explicit-sharding API; older versions are Auto-only anyway
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - version-dependent
+    AxisType = None
+
+
+def _axis_types(n: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -26,8 +36,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
             "launch/dryrun.py (which forces XLA_FLAGS host device count) or on a pod."
         )
     return jax.make_mesh(
-        shape, axes, devices=devices[:need],
-        axis_types=(AxisType.Auto,) * len(axes),
+        shape, axes, devices=devices[:need], **_axis_types(len(axes))
     )
 
 
@@ -37,6 +46,5 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
     if len(devices) < need:
         raise RuntimeError(f"test mesh {shape} needs {need} devices")
     return jax.make_mesh(
-        shape, axes, devices=devices[:need],
-        axis_types=(AxisType.Auto,) * len(axes),
+        shape, axes, devices=devices[:need], **_axis_types(len(axes))
     )

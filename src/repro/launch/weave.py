@@ -12,7 +12,7 @@ from typing import Any, Mapping
 
 from repro.configs.base import SHAPES, ShapeConfig
 from repro.core.program import Program
-from repro.core.strategies.kernels import BlockSizeAspect
+from repro.core.strategies.kernels import BlockSizeAspect, TunedKernelAspect
 from repro.core.strategies.parallelization import (
     AccumAspect,
     AutoShard,
@@ -58,6 +58,9 @@ def default_weave(
     rules_override = overrides.pop("rules", None)
     if rules_override:
         aspects.append(ShardingAspect(rules_override))
+    # DSE-tuned blocks first (cache lookup only), explicit overrides win.
+    if overrides.pop("tuned_kernels", True):
+        aspects.append(TunedKernelAspect(shape.global_batch, shape.seq_len))
     block_sizes = {k: int(v) for k, v in list(overrides.items())
                    if k.startswith(("flash_block", "wkv_chunk"))}
     if block_sizes:

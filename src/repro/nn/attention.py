@@ -286,13 +286,18 @@ class Attention(Module):
         elif impl == "pallas" and self._pallas_ok(S):
             from repro.kernels.flash_attention.ops import flash_attention
 
+            # Woven extras win; unset blocks fall through to the kernel-tuner
+            # cache lookup inside flash_attention (None -> tuned or default).
+            bq = ctx.extra.get("flash_block_q")
+            bkv = ctx.extra.get("flash_block_kv")
             out = flash_attention(
                 q, k, v,
                 causal=self.mask in ("causal", "sliding", "local"),
                 window=self.window if self.mask in ("sliding", "local") else None,
                 softcap=self.softcap,
-                block_q=int(ctx.extra.get("flash_block_q", 512)),
-                block_kv=int(ctx.extra.get("flash_block_kv", 512)),
+                block_q=int(bq) if bq is not None else None,
+                block_kv=int(bkv) if bkv is not None else None,
+                pruned=bool(ctx.extra.get("flash_pruned", True)),
                 mesh=ctx.mesh,
                 rules=ctx.rules,
             )
@@ -345,9 +350,10 @@ class Attention(Module):
         return constrain
 
     def _pallas_ok(self, seq: int) -> bool:
+        # ragged seq is fine: the kernel wrapper pads to block multiples
         if self.head_dim % 128 != 0 and self.head_dim not in (64, 256):
             return False
-        return seq % 128 == 0 and self.n_heads % self.kv_heads == 0
+        return self.n_heads % self.kv_heads == 0
 
     def _build_cache(self, k, v, positions, ctx, policy):
         """Prefill: pack computed K/V into a cache pytree for decode.

@@ -28,6 +28,15 @@ from typing import Any
 
 from repro.roofline.hw import DTYPE_BYTES, HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
 
+def cost_properties(compiled) -> dict:
+    """Normalized `compiled.cost_analysis()`: newer jax returns a dict,
+    older versions a one-element list of dicts."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 _COLL_RE = re.compile(
     r"=\s*(?P<result>\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
     r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
@@ -173,7 +182,7 @@ class Roofline:
 
 def from_compiled(arch: str, shape: str, mesh_name: str, chips: int,
                   compiled, model_flops: float) -> Roofline:
-    cost = compiled.cost_analysis()
+    cost = cost_properties(compiled)
     mem = compiled.memory_analysis()
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))

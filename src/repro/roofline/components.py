@@ -59,7 +59,7 @@ class ComponentCost:
 
 
 def _cost_of(compiled) -> tuple[float, float, float, dict]:
-    cost = compiled.cost_analysis()
+    cost = analysis.cost_properties(compiled)
     colls = analysis.parse_collectives(compiled.as_text())
     return (
         float(cost.get("flops", 0.0)),

@@ -84,6 +84,7 @@ class Trainer:
             return apply_wrappers(jitted, self.woven.state.step_wrappers, self.info)
 
         self.libvc = LibVC(builder, error_strategy="fallback")
+        self._checkpointer: Checkpointer | None = None
         self.params = None
         self.opt_state = None
         self.step = 0
@@ -102,9 +103,15 @@ class Trainer:
         self.step = 0
 
     def _ckpt(self) -> Checkpointer | None:
+        """One Checkpointer per trainer: its save() serializes against the
+        previous async write, so overlapping saves of the same step can't
+        clobber each other's tmp/final dirs."""
         if not self.cfg.ckpt_dir:
             return None
-        return Checkpointer(self.cfg.ckpt_dir, keep=self.cfg.keep_checkpoints)
+        if self._checkpointer is None:
+            self._checkpointer = Checkpointer(self.cfg.ckpt_dir,
+                                              keep=self.cfg.keep_checkpoints)
+        return self._checkpointer
 
     def save(self, blocking: bool = False) -> None:
         ckpt = self._ckpt()

@@ -1,0 +1,195 @@
+"""Kernel-tuner subsystem: Lat DSE over block knobs, VMEM constraint,
+mARGOt KnowledgeBase export, persistent cache (round-trip + second-lookup
+hit), and the weave/ops wiring that consumes it."""
+
+import json
+import os
+
+import pytest
+
+from repro.autotune.kernel_tuner import (
+    DEFAULT_VMEM_BUDGET,
+    KernelSignature,
+    KernelTuner,
+    TunerCache,
+    config_vmem_bytes,
+    design_space,
+    flash_signature,
+    tuned_flash_blocks,
+)
+
+
+def _sig(S=256, B=1, H=4, K=2, D=64, dtype="float32", causal=True,
+         window=None):
+    return flash_signature((B, S, H, D), K, dtype, causal=causal,
+                           window=window)
+
+
+def _measure_pref(best_bq, best_bkv):
+    """Deterministic fake latency minimized at (best_bq, best_bkv)."""
+    def measure(**kn):
+        return 1.0 + abs(kn["block_q"] - best_bq) + abs(kn["block_kv"] - best_bkv)
+    return measure
+
+
+class TestSignature:
+    def test_key_distinguishes_masks_and_shapes(self):
+        keys = {
+            _sig().key(),
+            _sig(causal=False).key(),
+            _sig(window=128).key(),
+            _sig(S=512).key(),
+            _sig(dtype="bfloat16").key(),
+            _sig(K=4).key(),
+        }
+        assert len(keys) == 6
+
+    def test_gqa_recorded(self):
+        assert _sig(H=8, K=2).gqa == 4
+
+
+class TestDesignSpace:
+    def test_blocks_capped_by_seq(self):
+        space = design_space(_sig(S=256))
+        assert max(space["block_q"]) <= 256
+        assert max(space["block_kv"]) <= 256
+
+    def test_vmem_budget_prunes_values(self):
+        sig = _sig(S=1024)
+        tight = design_space(sig, vmem_budget=vmem_of(sig, 128, 128))
+        assert tight["block_q"] == [128]
+        assert tight["block_kv"] == [128]
+
+    def test_other_kernels_have_spaces(self):
+        for kernel, shape in (("rwkv6", (2, 512, 4, 64)),
+                              ("rglru", (2, 512, 256)),
+                              ("rmsnorm", (1024, 512))):
+            sig = KernelSignature(kernel=kernel, shape=shape)
+            space = design_space(sig)
+            assert space and all(vals for vals in space.values())
+            knobs = {k: v[0] for k, v in space.items()}
+            assert 0 < config_vmem_bytes(sig, knobs) <= DEFAULT_VMEM_BUDGET
+
+
+def vmem_of(sig, bq, bkv):
+    return config_vmem_bytes(sig, {"block_q": bq, "block_kv": bkv})
+
+
+class TestTunerCache:
+    def test_roundtrip_and_second_lookup_hit(self, tmp_path):
+        path = str(tmp_path / "tuner.json")
+        sig = _sig()
+        tuner = KernelTuner(path)
+        assert tuner.lookup(sig) is None  # cold
+
+        best = tuner.tune(sig, _measure_pref(256, 256))
+        assert best == {"block_q": 256, "block_kv": 256}
+        assert os.path.exists(path)
+        # on-disk payload is plain JSON keyed by the signature
+        data = json.load(open(path))
+        assert sig.key() in data
+        assert data[sig.key()]["knobs"] == best
+
+        # fresh tuner over the same file: hit, no measurement
+        fresh = KernelTuner(path)
+        calls = []
+
+        def exploding_measure(**kn):
+            calls.append(kn)
+            return 0.0
+
+        got = fresh.get(sig, exploding_measure)
+        assert got == best
+        assert calls == []
+        assert fresh.cache.hits == 1
+        assert fresh.tuned == 0
+
+    def test_distinct_signatures_coexist(self, tmp_path):
+        path = str(tmp_path / "tuner.json")
+        tuner = KernelTuner(path)
+        tuner.tune(_sig(), _measure_pref(128, 128))
+        tuner.tune(_sig(window=64), _measure_pref(256, 128))
+        assert tuner.lookup(_sig()) == {"block_q": 128, "block_kv": 128}
+        assert tuner.lookup(_sig(window=64)) == {"block_q": 256, "block_kv": 128}
+        assert len(tuner.cache) == 2
+
+    def test_corrupt_cache_file_is_ignored(self, tmp_path):
+        path = tmp_path / "tuner.json"
+        path.write_text("{not json")
+        tuner = KernelTuner(str(path))
+        assert tuner.lookup(_sig()) is None
+        tuner.tune(_sig(), _measure_pref(128, 128))
+        assert KernelTuner(str(path)).lookup(_sig()) is not None
+
+    def test_vmem_constraint_excludes_infeasible_points(self, tmp_path):
+        sig = _sig(S=1024)
+        budget = vmem_of(sig, 256, 256)
+        tuner = KernelTuner(str(tmp_path / "t.json"), vmem_budget=budget)
+
+        def measure(**kn):  # bigger blocks "faster": tempts the tuner
+            return 1.0 / (kn["block_q"] * kn["block_kv"])
+
+        best = tuner.tune(sig, measure)
+        assert vmem_of(sig, best["block_q"], best["block_kv"]) <= budget
+
+
+class TestKnowledgeBase:
+    def test_dse_rows_become_operating_points(self, tmp_path):
+        sig = _sig()
+        tuner = KernelTuner(str(tmp_path / "t.json"))
+        best = tuner.tune(sig, _measure_pref(256, 256))
+        kb = tuner.knowledge_base(sig)
+        assert len(kb) == 4  # 2x2 space at S=256
+        by_key = {op.key(): op for op in kb.ops}
+        best_op = by_key[tuple(sorted(best.items()))]
+        assert best_op.mean("latency_s") == min(
+            op.mean("latency_s") for op in kb.ops
+        )
+        assert all("vmem_bytes" in op.metrics for op in kb.ops)
+
+    def test_missing_signature_returns_none(self, tmp_path):
+        tuner = KernelTuner(str(tmp_path / "t.json"))
+        assert tuner.knowledge_base(_sig()) is None
+
+
+class TestWiring:
+    def test_ops_lookup_uses_env_cache(self, tmp_path, monkeypatch):
+        path = str(tmp_path / "env.json")
+        monkeypatch.setenv("REPRO_TUNER_CACHE", path)
+        sig = _sig()
+        KernelTuner(path).tune(sig, _measure_pref(128, 256))
+        got = tuned_flash_blocks((1, 256, 4, 64), 2, "float32", causal=True)
+        assert got == {"block_q": 128, "block_kv": 256}
+
+    def test_ops_lookup_empty_when_untuned(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path / "none.json"))
+        assert tuned_flash_blocks((1, 256, 4, 64), 2, "float32",
+                                  causal=True) == {}
+
+    def test_tuned_aspect_weaves_extras_and_knobs(self, tmp_path, monkeypatch):
+        from repro.core.program import Program
+        from repro.core.strategies.kernels import TunedKernelAspect
+        from repro.core.weaver import Weaver
+
+        path = str(tmp_path / "weave.json")
+        monkeypatch.setenv("REPRO_TUNER_CACHE", path)
+        program = Program.from_arch("gemma-2b", reduced=True)
+        aspect = TunedKernelAspect(2, 256, dtype="bfloat16")
+        sig = aspect.signature(program.cfg)
+        KernelTuner(path).tune(sig, _measure_pref(128, 128))
+
+        woven = Weaver(program).weave([aspect])
+        assert woven.state.extra["flash_block_q"] == 128
+        assert woven.state.extra["flash_block_kv"] == 128
+        assert "flash_block_q" in woven.knobs
+        assert woven.knobs["flash_block_q"].default == 128
+
+    def test_tuned_aspect_noop_on_cache_miss(self, tmp_path, monkeypatch):
+        from repro.core.program import Program
+        from repro.core.strategies.kernels import TunedKernelAspect
+        from repro.core.weaver import Weaver
+
+        monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path / "miss.json"))
+        program = Program.from_arch("gemma-2b", reduced=True)
+        woven = Weaver(program).weave([TunedKernelAspect(2, 256)])
+        assert "flash_block_q" not in woven.state.extra

@@ -85,6 +85,6 @@ def test_xla_counts_loop_bodies_once():
 
     sds = jax.ShapeDtypeStruct((64, 64), jnp.float32)
     c = jax.jit(f).lower(sds, sds).compile()
-    flops = c.cost_analysis()["flops"]
+    flops = analysis.cost_properties(c)["flops"]
     one = 2 * 64 * 64 * 64
     assert flops < 2 * one  # 10 iterations, counted once
