@@ -1,0 +1,139 @@
+"""Fused flash-attention backward bench (the PR 2 perf data point).
+
+Compares training-direction attention — forward + backward via `jax.grad` —
+between the fused pruned Pallas backward and the dense reference VJP:
+
+  streamed blocks   dq pass (kv_schedule) + dk/dv pass (q_schedule) vs the
+                    dense both-pass count, asserted to stream no fully
+                    masked block, plus an 8k schedule-only O(S·W) point
+  latency           wall time of jax.grad through flash_attention (pruned
+                    fused bwd, tuner-resolved blocks) vs jax.grad through
+                    attention_ref (interpret-mode Pallas off-TPU)
+
+Merges a `flash_bwd` section into artifacts/bench/BENCH_kernels.json (the
+kernel-layer perf trajectory now has fwd *and* bwd points) and is runnable
+standalone via `benchmarks/run.py --only flash_bwd`.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (
+    block_fully_masked,
+    cdiv,
+    kv_schedule,
+    q_schedule,
+)
+from repro.kernels.flash_attention.ops import _resolve_blocks, flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _bwd_schedule_stats(S, T, bq, bkv, *, causal, window):
+    """Streamed-block counts for the two backward passes vs dense, plus the
+    no-dead-streams invariant."""
+    nq, nk = cdiv(S, bq), cdiv(T, bkv)
+    dq_sched = kv_schedule(S, T, bq, bkv, causal=causal, window=window,
+                           pruned=True)
+    dkv_sched = q_schedule(S, T, bq, bkv, causal=causal, window=window,
+                           pruned=True)
+    dead = sum(
+        1 for iq, row in enumerate(dq_sched) for ik in row
+        if block_fully_masked(iq, ik, bq, bkv, kv_len=T, causal=causal,
+                              window=window)
+    ) + sum(
+        1 for ik, row in enumerate(dkv_sched) for iq in row
+        if block_fully_masked(iq, ik, bq, bkv, kv_len=T, causal=causal,
+                              window=window)
+    )
+    pruned_blocks = (sum(len(r) for r in dq_sched)
+                     + sum(len(r) for r in dkv_sched))
+    dense_blocks = 2 * nq * nk  # reference VJP touches every pair, twice
+    return {
+        "streamed_blocks_dq": sum(len(r) for r in dq_sched),
+        "streamed_blocks_dkv": sum(len(r) for r in dkv_sched),
+        "streamed_blocks_pruned": pruned_blocks,
+        "streamed_blocks_dense": dense_blocks,
+        "hbm_traffic_ratio": pruned_blocks / dense_blocks,
+        "fully_masked_blocks_streamed": dead,
+    }
+
+
+def _grad_time(loss, args, reps=1):
+    fn = jax.grad(loss, argnums=(0, 1, 2))
+    grads = jax.block_until_ready(fn(*args))  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        grads = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps, grads
+
+
+def run(artifacts: str, *, quick: bool = False) -> list[str]:
+    rows: list[str] = []
+    S = 256 if quick else 512
+    B, H, K, D = 1, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, K, D))
+    v = jax.random.normal(ks[2], (B, S, K, D))
+    g = jax.random.normal(ks[3], (B, S, H, D))
+
+    section: dict[str, dict] = {}
+    cases = {"causal": (True, None), "window": (True, max(64, S // 8))}
+    for name, (causal, window) in cases.items():
+        bq, bkv, bqb, bkvb = _resolve_blocks(
+            q, k, causal=causal, window=window,
+            block_q=None, block_kv=None,
+        )
+        bq, bkv = min(bq, 128), min(bkv, 128)
+        bqb, bkvb = min(bqb, 128), min(bkvb, 128)
+        stats = _bwd_schedule_stats(S, S, bqb, bkvb, causal=causal,
+                                    window=window)
+        assert stats["fully_masked_blocks_streamed"] == 0, (name, stats)
+
+        def loss_pallas(q, k, v):
+            out = flash_attention(q, k, v, causal=causal, window=window,
+                                  block_q=bq, block_kv=bkv,
+                                  block_q_bwd=bqb, block_kv_bwd=bkvb,
+                                  pruned=True, interpret=True)
+            return jnp.sum(out * g)
+
+        def loss_ref(q, k, v):
+            return jnp.sum(
+                attention_ref(q, k, v, causal=causal, window=window) * g
+            )
+
+        t_fused, g_fused = _grad_time(loss_pallas, (q, k, v))
+        t_ref, g_ref = _grad_time(loss_ref, (q, k, v))
+        err = max(
+            float(jnp.max(jnp.abs(a - b))) for a, b in zip(g_fused, g_ref)
+        )
+        section[name] = dict(
+            stats,
+            blocks_bwd=[bqb, bkvb],
+            fused_bwd_s=t_fused,
+            reference_vjp_s=t_ref,
+            grad_parity_err=err,
+        )
+        rows.append(
+            f"flash_bwd_{name},{t_fused*1e6:.0f},"
+            f"hbm_ratio={stats['hbm_traffic_ratio']:.3f};err={err:.1e}"
+        )
+        print(f"  flash_bwd[{name}]: {stats['streamed_blocks_pruned']}/"
+              f"{stats['streamed_blocks_dense']} blocks streamed "
+              f"({stats['hbm_traffic_ratio']:.0%}), grad err {err:.1e}, "
+              f"fused {t_fused*1e3:.0f}ms vs ref-vjp {t_ref*1e3:.0f}ms")
+
+    # the O(S*W) claim at scale, schedule-only (no execution needed)
+    section["window_scaling_8k"] = _bwd_schedule_stats(
+        8192, 8192, 512, 512, causal=True, window=1024
+    )
+
+    # merge into the shared kernel-layer report (standalone runs create it)
+    from benchmarks.kernels import merge_bench_sections
+
+    merge_bench_sections(artifacts, {"flash_bwd": section})
+    return rows

@@ -5,8 +5,14 @@ grid-pruning and DSE-tuning comparisons (BENCH_kernels.json):
   pruned_vs_dense   streamed-KV-block counts from the kernel's own schedule
                     (asserted: the pruned schedule never streams a fully
                     masked block) + interpret-mode parity of both paths
-  tuned_vs_default  KernelTuner DSE over (block_q, block_kv) vs the 512x512
-                    default, with the full exploration trajectory
+  tuned_vs_default  KernelTuner DSE over the fwd+bwd block knobs
+                    (block_q, block_kv, block_q_bwd, block_kv_bwd) vs the
+                    512x512 default, timing a full fwd+grad step per point
+                    (sampled), with the exploration trajectory
+
+The fused-backward comparison (pruned bwd vs reference VJP) lives in the
+sibling `flash_bwd` bench, which merges its section into the same
+BENCH_kernels.json.
 """
 
 from __future__ import annotations
@@ -30,6 +36,21 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.rglru.ref import rglru_assoc, rglru_scan
 from repro.kernels.rwkv6.ref import wkv_chunked, wkv_scan
+
+
+def merge_bench_sections(artifacts: str, sections: dict) -> None:
+    """Read-modify-write named sections of the shared BENCH_kernels.json so
+    the kernels and flash_bwd benches can each own their part of the file
+    (and `--only` runs of either never drop the other's data)."""
+    path = os.path.join(artifacts, "BENCH_kernels.json")
+    try:
+        with open(path) as f:
+            bench = json.load(f)
+    except (OSError, ValueError):
+        bench = {}
+    bench.update(sections)
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1)
 
 
 def _time(fn, *args, reps=3):
@@ -118,12 +139,19 @@ def _bench_tuner(report, rows, artifacts, *, quick: bool):
     cache_path = os.path.join(artifacts, "kernel_tuner_cache.json")
     tuner = KernelTuner(cache_path)
     t0 = time.perf_counter()
-    best = tuner.get(sig)
+    # the 4-knob (fwd + bwd blocks) space is sampled: each point now times a
+    # full fwd+grad step, so the exhaustive grid is a TPU-only luxury
+    sample = 8 if quick else 16
+    best = tuner.get(sig, sample=sample)
+    if "block_q_bwd" not in best:  # stale fwd-only entry (pre-bwd cache)
+        best = tuner.tune(sig, sample=sample)
     tune_s = time.perf_counter() - t0
     kb = tuner.knowledge_base(sig)
     entry = tuner.cache.get(sig.key())
 
-    default = {"block_q": min(512, S), "block_kv": min(512, S)}
+    b0 = min(512, S)
+    default = {"block_q": b0, "block_kv": b0,
+               "block_q_bwd": b0, "block_kv_bwd": b0}
     trajectory = sorted(
         (
             {"knobs": row["knobs"],
@@ -219,10 +247,8 @@ def run(artifacts: str, *, quick: bool = False) -> list[str]:
 
     with open(os.path.join(artifacts, "kernels.json"), "w") as f:
         json.dump(report, f, indent=1)
-    with open(os.path.join(artifacts, "BENCH_kernels.json"), "w") as f:
-        json.dump(
-            {"pruned_vs_dense": report["pruned_vs_dense"],
-             "tuned_vs_default": report["tuned_vs_default"]},
-            f, indent=1,
-        )
+    merge_bench_sections(artifacts, {
+        "pruned_vs_dense": report["pruned_vs_dense"],
+        "tuned_vs_default": report["tuned_vs_default"],
+    })
     return rows

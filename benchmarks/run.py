@@ -10,6 +10,7 @@ BENCH_kernels.json: pruned-vs-dense grid + tuned-vs-default blocks).
   docking_dse        Figs 13-14   LAT exploration (parallelism x pocket)
   navigation         Figs 17-19   mARGOt vs baseline QoS + NQI sweep
   kernels            (kernels)    Pallas pruning/tuning + analytic VMEM/AI
+  flash_bwd          (kernels)    fused pruned bwd vs reference VJP
   roofline_report    §Roofline    table from dry-run artifacts
 
 Flags:
@@ -29,7 +30,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
-QUICK_MODULES = ("weaving", "kernels")
+QUICK_MODULES = ("weaving", "kernels", "flash_bwd")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -44,6 +45,7 @@ def main(argv: list[str] | None = None) -> None:
     from benchmarks import (
         betweenness,
         docking_dse,
+        flash_bwd,
         kernels,
         navigation_autotune,
         precision_versions,
@@ -51,7 +53,7 @@ def main(argv: list[str] | None = None) -> None:
         weaving,
     )
 
-    modules = [weaving, precision_versions, kernels, betweenness,
+    modules = [weaving, precision_versions, kernels, flash_bwd, betweenness,
                docking_dse, navigation_autotune, roofline_report]
     if args.only:
         names = {n.strip() for n in args.only.split(",")}
@@ -61,8 +63,8 @@ def main(argv: list[str] | None = None) -> None:
         if not modules:
             valid = ", ".join(m.__name__.split(".")[-1] for m in
                               (weaving, precision_versions, kernels,
-                               betweenness, docking_dse, navigation_autotune,
-                               roofline_report))
+                               flash_bwd, betweenness, docking_dse,
+                               navigation_autotune, roofline_report))
             ap.error(f"--only {args.only!r} matches no benchmark; "
                      f"valid names: {valid}")
     elif args.quick:

@@ -13,6 +13,16 @@ Layout of the cache file (JSON):
                          "metrics": {"latency_s": [mean, std], ...},
                          "ops": [{"knobs": ..., "metrics": ...}, ...]}}
 
+For flash attention the knob dict covers both directions:
+`block_q` / `block_kv` tile the forward kernel and `block_q_bwd` /
+`block_kv_bwd` tile the fused backward passes (dq and dk/dv); the default
+measurement times a full fwd+grad step so the DSE optimizes training-step
+latency, and the VMEM constraint is the max of the forward
+(`vmem_bytes`) and backward (`vmem_bytes_bwd`) analytic working sets.
+Entries written before the backward knobs existed simply lack the `_bwd`
+keys — consumers (`ops._resolve_blocks`, `TunedKernelAspect`) fall back to
+the forward blocks.
+
 Tuning is always *explicit* (benchmarks, launch tooling, tests); lookups on
 the hot path are cheap dict reads and never trigger measurement.
 """
@@ -28,7 +38,7 @@ from typing import Any, Callable, Mapping
 
 from repro.autotune.dse import Lat
 from repro.autotune.margot import KnowledgeBase, OperatingPoint
-from repro.kernels.flash_attention.kernel import cdiv, vmem_bytes
+from repro.kernels.flash_attention.kernel import cdiv, vmem_bytes, vmem_bytes_bwd
 
 DEFAULT_VMEM_BUDGET = 16 * 2**20  # bytes per TPU core
 
@@ -77,6 +87,25 @@ def flash_signature(q_shape, kv_heads: int, dtype, *, causal: bool,
     )
 
 
+def rwkv6_signature(batch: int, seq_len: int, d_model: int,
+                    head_dim: int = 64, dtype="float32") -> KernelSignature:
+    """WKV problem signature: (B, S, H, C) with H = d_model // head_dim."""
+    return KernelSignature(
+        kernel="rwkv6",
+        shape=(batch, seq_len, d_model // max(head_dim, 1), head_dim),
+        dtype=str(getattr(dtype, "name", dtype)),
+    )
+
+
+def rglru_signature(batch: int, seq_len: int, width: int,
+                    dtype="float32") -> KernelSignature:
+    """RG-LRU problem signature: (B, S, D) with D the lru width."""
+    return KernelSignature(
+        kernel="rglru", shape=(batch, seq_len, width),
+        dtype=str(getattr(dtype, "name", dtype)),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Design spaces + constraints
 # ---------------------------------------------------------------------------
@@ -85,6 +114,8 @@ KERNEL_SPACES: dict[str, dict[str, tuple[int, ...]]] = {
     "flash_attention": {
         "block_q": (128, 256, 512, 1024),
         "block_kv": (128, 256, 512, 1024),
+        "block_q_bwd": (128, 256, 512, 1024),
+        "block_kv_bwd": (128, 256, 512, 1024),
     },
     "rwkv6": {"chunk": (16, 32, 64, 128)},
     "rglru": {"block_d": (128, 256, 512, 1024), "chunk": (64, 128, 256)},
@@ -97,10 +128,15 @@ def config_vmem_bytes(sig: KernelSignature, knobs: Mapping[str, int]) -> int:
     b = dtype_bytes(sig.dtype)
     if sig.kernel == "flash_attention":
         B, S, H, K, D = sig.shape
-        return vmem_bytes(
+        fwd = vmem_bytes(
             min(int(knobs["block_q"]), S), min(int(knobs["block_kv"]), S),
             D, b, kv_dtype_bytes=b,
         )
+        bqb = int(knobs.get("block_q_bwd", knobs["block_q"]))
+        bkvb = int(knobs.get("block_kv_bwd", knobs["block_kv"]))
+        bwd = vmem_bytes_bwd(min(bqb, S), min(bkvb, S), D, b,
+                             kv_dtype_bytes=b)
+        return max(fwd, bwd)
     if sig.kernel == "rwkv6":
         B, S, H, C = sig.shape
         L = int(knobs["chunk"])
@@ -124,8 +160,8 @@ def design_space(sig: KernelSignature, *,
     space = {k: list(v) for k, v in KERNEL_SPACES[sig.kernel].items()}
     if sig.kernel == "flash_attention":
         B, S, H, K, D = sig.shape
-        space["block_q"] = [v for v in space["block_q"] if v <= max(S, 128)]
-        space["block_kv"] = [v for v in space["block_kv"] if v <= max(S, 128)]
+        for name in ("block_q", "block_kv", "block_q_bwd", "block_kv_bwd"):
+            space[name] = [v for v in space[name] if v <= max(S, 128)]
     elif sig.kernel == "rwkv6":
         S = sig.shape[1]
         space["chunk"] = [v for v in space["chunk"] if v <= max(S, 16)]
@@ -312,19 +348,31 @@ def _default_measure(sig: KernelSignature) -> Callable[..., float]:
         from repro.kernels.flash_attention.ops import flash_attention
 
         B, S, H, K, D = sig.shape
-        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
         q = jax.random.normal(ks[0], (B, S, H, D), dt)
         k = jax.random.normal(ks[1], (B, S, K, D), dt)
         v = jax.random.normal(ks[2], (B, S, K, D), dt)
+        g = jax.random.normal(ks[3], (B, S, H, D), jnp.float32)
 
         def measure(**knobs):
-            fn = lambda: flash_attention(
-                q, k, v, causal=sig.causal, window=sig.window,
-                block_q=int(knobs["block_q"]), block_kv=int(knobs["block_kv"]),
-            )
-            jax.block_until_ready(fn())  # compile
+            # training-step latency: forward + fused backward, so the DSE
+            # sees both the fwd and the bwd block knobs.
+            def loss(q, k, v):
+                out = flash_attention(
+                    q, k, v, causal=sig.causal, window=sig.window,
+                    block_q=int(knobs["block_q"]),
+                    block_kv=int(knobs["block_kv"]),
+                    block_q_bwd=int(knobs.get("block_q_bwd",
+                                              knobs["block_q"])),
+                    block_kv_bwd=int(knobs.get("block_kv_bwd",
+                                               knobs["block_kv"])),
+                )
+                return jnp.sum(out.astype(jnp.float32) * g)
+
+            fn = jax.grad(loss, argnums=(0, 1, 2))
+            jax.block_until_ready(fn(q, k, v))  # compile
             t0 = time.perf_counter()
-            jax.block_until_ready(fn())
+            jax.block_until_ready(fn(q, k, v))
             return time.perf_counter() - t0
 
         return measure

@@ -44,14 +44,17 @@ class BlockSizeAspect(Aspect):
 
 
 class TunedKernelAspect(Aspect):
-    """Weave DSE-tuned flash-attention block sizes from the tuner cache.
+    """Weave DSE-tuned kernel block sizes from the tuner cache.
 
-    Looks up the (batch, seq, heads, kv_heads, head_dim, dtype, mask)
-    signature in the persistent cache; on a hit, sets the `flash_block_*`
-    extras and exposes block knobs (tuned value as default) for the dynamic
-    autotuner.  On a miss it leaves the defaults untouched — tuning itself
-    is explicit (benchmarks / launch tooling), never a weave side effect —
-    unless `tune_on_miss=True`.
+    For every tunable kernel the program actually contains — flash attention
+    (`attention` joinpoints), the WKV recurrence (`rwkv_time_mix`) and the
+    RG-LRU (`rglru`) — builds the problem signature, looks it up in the
+    persistent cache and, on a hit, sets the corresponding extras
+    (`flash_block_q[_bwd]` / `flash_block_kv[_bwd]`, `wkv_chunk`,
+    `rglru_block_d` / `rglru_chunk`) and exposes the tuned values as knobs
+    for the dynamic autotuner.  On a miss it leaves the defaults untouched —
+    tuning itself is explicit (benchmarks / launch tooling), never a weave
+    side effect — unless `tune_on_miss=True`.
     """
 
     name = "TunedKernelBlocks"
@@ -73,28 +76,76 @@ class TunedKernelAspect(Aspect):
             causal=True, window=cfg.attn_window,
         )
 
-    def apply(self, weaver: Weaver) -> None:
-        from repro.autotune.kernel_tuner import default_tuner
+    def rwkv_signature(self, cfg):
+        from repro.autotune.kernel_tuner import rwkv6_signature
 
-        attn_jps = weaver.select(kind="attention").all()
-        if not attn_jps:  # nothing to tune (ssm/recurrent-only programs)
-            return
-        for jp in attn_jps:
-            jp.attr("kind")
-        tuner = self.tuner or default_tuner()
-        sig = self.signature(weaver.program.cfg)
+        return rwkv6_signature(self.batch, self.seq_len, cfg.d_model,
+                               cfg.rwkv_head_dim, self.dtype)
+
+    def rglru_signature(self, cfg):
+        from repro.autotune.kernel_tuner import rglru_signature
+
+        return rglru_signature(self.batch, self.seq_len,
+                               cfg.lru_width or cfg.d_model, self.dtype)
+
+    def _knobs_for(self, tuner, sig):
         knobs = tuner.lookup(sig)
         if knobs is None and self.tune_on_miss:
             knobs = tuner.tune(sig)
-        if not knobs:
-            return
-        bq, bkv = int(knobs["block_q"]), int(knobs["block_kv"])
-        weaver.set_extra("flash_block_q", bq)
-        weaver.set_extra("flash_block_kv", bkv)
-        if self.expose_knobs:
-            from repro.autotune.kernel_tuner import KERNEL_SPACES
+        return knobs
 
-            space = KERNEL_SPACES["flash_attention"]
-            for name, default in (("block_q", bq), ("block_kv", bkv)):
-                values = tuple(sorted(set(space[name]) | {default}))
-                weaver.add_knob(Knob(f"flash_{name}", values, default))
+    def _weave(self, weaver, kernel: str, knobs, extras: dict[str, str]):
+        """Set extras and expose knobs for one kernel's tuned values.
+
+        `extras` maps knob name in the tuner space -> extra key consumed by
+        the nn layer (e.g. "chunk" -> "wkv_chunk").
+        """
+        from repro.autotune.kernel_tuner import KERNEL_SPACES
+
+        space = KERNEL_SPACES[kernel]
+        for name, extra_key in extras.items():
+            if name not in knobs:  # e.g. pre-bwd cache entries
+                continue
+            val = int(knobs[name])
+            weaver.set_extra(extra_key, val)
+            if self.expose_knobs:
+                values = tuple(sorted(set(space[name]) | {val}))
+                weaver.add_knob(Knob(extra_key, values, val))
+
+    def apply(self, weaver: Weaver) -> None:
+        from repro.autotune.kernel_tuner import default_tuner
+
+        tuner = self.tuner or default_tuner()
+        cfg = weaver.program.cfg
+
+        attn_jps = weaver.select(kind="attention").all()
+        if attn_jps:
+            for jp in attn_jps:
+                jp.attr("kind")
+            knobs = self._knobs_for(tuner, self.signature(cfg))
+            if knobs:
+                self._weave(weaver, "flash_attention", knobs, {
+                    "block_q": "flash_block_q",
+                    "block_kv": "flash_block_kv",
+                    "block_q_bwd": "flash_block_q_bwd",
+                    "block_kv_bwd": "flash_block_kv_bwd",
+                })
+
+        wkv_jps = weaver.select(kind="rwkv_time_mix").all()
+        if wkv_jps:
+            for jp in wkv_jps:
+                jp.attr("kind")
+            knobs = self._knobs_for(tuner, self.rwkv_signature(cfg))
+            if knobs:
+                self._weave(weaver, "rwkv6", knobs, {"chunk": "wkv_chunk"})
+
+        rglru_jps = weaver.select(kind="rglru").all()
+        if rglru_jps:
+            for jp in rglru_jps:
+                jp.attr("kind")
+            knobs = self._knobs_for(tuner, self.rglru_signature(cfg))
+            if knobs:
+                self._weave(weaver, "rglru", knobs, {
+                    "block_d": "rglru_block_d",
+                    "chunk": "rglru_chunk",
+                })

@@ -9,7 +9,15 @@ inside each shard, so the kernel always runs a per-device dense problem).
 Block sizes left unspecified (None) are resolved from the kernel-tuner
 cache (repro.autotune.kernel_tuner) keyed by the problem signature, falling
 back to the 512x512 default — this is how woven programs and the serving
-runtime pick DSE-tuned blocks automatically.
+runtime pick DSE-tuned blocks automatically.  Backward blocks
+(`block_q_bwd` / `block_kv_bwd`) resolve the same way and fall back to the
+forward blocks when untuned.
+
+The custom VJP runs the *fused Pallas backward* (kernel.flash_attention_bwd,
+the §Perf follow-up recorded in PR 1 — done): the forward saves
+(q, k, v, out, lse) as residuals and the backward streams the same pruned
+block schedule in both directions, never recomputing through the dense
+`attention_ref`.
 """
 
 from __future__ import annotations
@@ -21,7 +29,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.kernel import (
+    flash_attention_bwd,
+    flash_attention_fwd,
+)
 
 DEFAULT_BLOCK_Q = 512
 DEFAULT_BLOCK_KV = 512
@@ -41,10 +52,10 @@ def _interpret_default() -> bool:
 
 @functools.partial(
     jax.custom_vjp,
-    nondiff_argnums=(3, 4, 5, 6, 7, 8, 9),
+    nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11),
 )
-def _flash_core(q, k, v, causal, window, softcap, block_q, block_kv, pruned,
-                interpret):
+def _flash_core(q, k, v, causal, window, softcap, block_q, block_kv,
+                block_q_bwd, block_kv_bwd, pruned, interpret):
     qt = jnp.swapaxes(q, 1, 2)  # (B,H,S,D)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
@@ -57,27 +68,36 @@ def _flash_core(q, k, v, causal, window, softcap, block_q, block_kv, pruned,
 
 
 def _flash_core_fwd(q, k, v, causal, window, softcap, block_q, block_kv,
-                    pruned, interpret):
-    out = _flash_core(q, k, v, causal, window, softcap, block_q, block_kv,
-                      pruned, interpret)
-    return out, (q, k, v)
+                    block_q_bwd, block_kv_bwd, pruned, interpret):
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out_t, lse = flash_attention_fwd(
+        qt, kt, vt,
+        causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_kv=block_kv, pruned=pruned, interpret=interpret,
+        return_lse=True,
+    )
+    out = jnp.swapaxes(out_t, 1, 2)
+    # residuals for the fused backward: inputs + output + softmax stats,
+    # all the two-pass recipe needs to recompute probability tiles exactly.
+    return out, (q, k, v, out, lse)
 
 
-def _flash_core_bwd(causal, window, softcap, block_q, block_kv, pruned,
-                    interpret, res, g):
-    """Backward via the reference formulation (recompute-from-inputs, the
-    flash-bwd memory posture); the fused Pallas backward kernel is a
-    recorded §Perf follow-up."""
-    from repro.kernels.flash_attention.ref import attention_ref
-
-    q, k, v = res
-
-    def f(q, k, v):
-        return attention_ref(q, k, v, causal=causal, window=window,
-                             softcap=softcap)
-
-    _, vjp = jax.vjp(f, q, k, v)
-    return vjp(g)
+def _flash_core_bwd(causal, window, softcap, block_q, block_kv, block_q_bwd,
+                    block_kv_bwd, pruned, interpret, res, g):
+    """Fused Pallas backward: dq over pruned KV blocks, dk/dv over the
+    transposed pruned Q blocks — no dense `attention_ref` recompute."""
+    q, k, v, out, lse = res
+    dq_t, dk_t, dv_t = flash_attention_bwd(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        jnp.swapaxes(out, 1, 2), lse, jnp.swapaxes(g, 1, 2),
+        causal=causal, window=window, softcap=softcap,
+        block_q=block_q_bwd, block_kv=block_kv_bwd, pruned=pruned,
+        interpret=interpret,
+    )
+    return (jnp.swapaxes(dq_t, 1, 2), jnp.swapaxes(dk_t, 1, 2),
+            jnp.swapaxes(dv_t, 1, 2))
 
 
 _flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
@@ -86,20 +106,26 @@ _flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "causal", "window", "softcap", "block_q", "block_kv", "pruned",
-        "interpret",
+        "causal", "window", "softcap", "block_q", "block_kv",
+        "block_q_bwd", "block_kv_bwd", "pruned", "interpret",
     ),
 )
 def _flash_local(q, k, v, *, causal, window, softcap, block_q, block_kv,
-                 pruned, interpret):
+                 block_q_bwd, block_kv_bwd, pruned, interpret):
     return _flash_core(q, k, v, causal, window, softcap, block_q, block_kv,
-                       pruned, interpret)
+                       block_q_bwd, block_kv_bwd, pruned, interpret)
 
 
-def _resolve_blocks(q, k, *, causal, window, block_q, block_kv):
-    """Fill unspecified block sizes from the tuner cache (never fails)."""
-    if block_q is not None and block_kv is not None:
-        return int(block_q), int(block_kv)
+def _resolve_blocks(q, k, *, causal, window, block_q, block_kv,
+                    block_q_bwd=None, block_kv_bwd=None):
+    """Fill unspecified block sizes from the tuner cache (never fails).
+
+    Returns (block_q, block_kv, block_q_bwd, block_kv_bwd); untuned backward
+    blocks fall back to the resolved forward blocks.
+    """
+    if None not in (block_q, block_kv, block_q_bwd, block_kv_bwd):
+        return (int(block_q), int(block_kv),
+                int(block_q_bwd), int(block_kv_bwd))
     from repro.autotune.kernel_tuner import tuned_flash_blocks
 
     tuned = tuned_flash_blocks(q.shape, k.shape[2], q.dtype, causal=causal,
@@ -108,7 +134,11 @@ def _resolve_blocks(q, k, *, causal, window, block_q, block_kv):
              else tuned.get("block_q", DEFAULT_BLOCK_Q))
     bkv = int(block_kv if block_kv is not None
               else tuned.get("block_kv", DEFAULT_BLOCK_KV))
-    return bq, bkv
+    bqb = int(block_q_bwd if block_q_bwd is not None
+              else tuned.get("block_q_bwd", bq))
+    bkvb = int(block_kv_bwd if block_kv_bwd is not None
+               else tuned.get("block_kv_bwd", bkv))
+    return bq, bkv, bqb, bkvb
 
 
 def flash_attention(
@@ -121,6 +151,8 @@ def flash_attention(
     softcap: float | None = None,
     block_q: int | None = None,
     block_kv: int | None = None,
+    block_q_bwd: int | None = None,
+    block_kv_bwd: int | None = None,
     pruned: bool = True,
     interpret: bool | None = None,
     mesh: jax.sharding.Mesh | None = None,
@@ -128,13 +160,16 @@ def flash_attention(
 ) -> jax.Array:
     if interpret is None:
         interpret = _interpret_default()
-    block_q, block_kv = _resolve_blocks(
-        q, k, causal=causal, window=window, block_q=block_q, block_kv=block_kv
+    block_q, block_kv, block_q_bwd, block_kv_bwd = _resolve_blocks(
+        q, k, causal=causal, window=window, block_q=block_q, block_kv=block_kv,
+        block_q_bwd=block_q_bwd, block_kv_bwd=block_kv_bwd,
     )
     call = functools.partial(
         _flash_local,
         causal=causal, window=window, softcap=softcap,
-        block_q=block_q, block_kv=block_kv, pruned=pruned, interpret=interpret,
+        block_q=block_q, block_kv=block_kv,
+        block_q_bwd=block_q_bwd, block_kv_bwd=block_kv_bwd,
+        pruned=pruned, interpret=interpret,
     )
     if mesh is None:
         return call(q, k, v)

@@ -283,23 +283,30 @@ class Attention(Module):
             # kernel is opaque to cost_analysis anyway; DESIGN.md §7)
             out = q + (jnp.mean(k, axis=2, keepdims=True)
                        + jnp.mean(v, axis=2, keepdims=True)).astype(q.dtype)
-        elif impl == "pallas" and self._pallas_ok(S):
+        elif impl == "pallas" and self._pallas_ok():
             from repro.kernels.flash_attention.ops import flash_attention
 
             # Woven extras win; unset blocks fall through to the kernel-tuner
             # cache lookup inside flash_attention (None -> tuned or default).
-            bq = ctx.extra.get("flash_block_q")
-            bkv = ctx.extra.get("flash_block_kv")
+            blocks = {
+                name: int(ctx.extra[key]) if ctx.extra.get(key) is not None
+                else None
+                for name, key in (
+                    ("block_q", "flash_block_q"),
+                    ("block_kv", "flash_block_kv"),
+                    ("block_q_bwd", "flash_block_q_bwd"),
+                    ("block_kv_bwd", "flash_block_kv_bwd"),
+                )
+            }
             out = flash_attention(
                 q, k, v,
                 causal=self.mask in ("causal", "sliding", "local"),
                 window=self.window if self.mask in ("sliding", "local") else None,
                 softcap=self.softcap,
-                block_q=int(bq) if bq is not None else None,
-                block_kv=int(bkv) if bkv is not None else None,
                 pruned=bool(ctx.extra.get("flash_pruned", True)),
                 mesh=ctx.mesh,
                 rules=ctx.rules,
+                **blocks,
             )
         else:
             k, v, kv_axis = self._maybe_expand_kv(k, v, ctx)
@@ -349,8 +356,10 @@ class Attention(Module):
 
         return constrain
 
-    def _pallas_ok(self, seq: int) -> bool:
-        # ragged seq is fine: the kernel wrapper pads to block multiples
+    def _pallas_ok(self) -> bool:
+        # No seq-length gate: ragged seq is fine — the kernel wrapper pads
+        # to block multiples (the old `seq` parameter was dead since that
+        # padding landed).
         if self.head_dim % 128 != 0 and self.head_dim not in (64, 256):
             return False
         return self.n_heads % self.kv_heads == 0

@@ -99,7 +99,12 @@ class RGLRU(Module):
             if impl == "pallas":
                 from repro.kernels.rglru.ops import rglru_pallas
 
-                h_seq, h_last = rglru_pallas(a, b, state)
+                # woven (DSE-tuned) blocks via TunedKernelAspect extras
+                h_seq, h_last = rglru_pallas(
+                    a, b, state,
+                    block_d=int(ctx.extra.get("rglru_block_d", 512)),
+                    chunk=int(ctx.extra.get("rglru_chunk", 256)),
+                )
             elif impl == "scan":
                 from repro.kernels.rglru.ref import rglru_scan
 

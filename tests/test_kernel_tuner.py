@@ -25,11 +25,24 @@ def _sig(S=256, B=1, H=4, K=2, D=64, dtype="float32", causal=True,
                            window=window)
 
 
-def _measure_pref(best_bq, best_bkv):
-    """Deterministic fake latency minimized at (best_bq, best_bkv)."""
+def _measure_pref(best_bq, best_bkv, best_bqb=None, best_bkvb=None):
+    """Deterministic fake latency minimized at the given blocks (backward
+    knobs default to preferring the forward values)."""
+    best_bqb = best_bq if best_bqb is None else best_bqb
+    best_bkvb = best_bkv if best_bkvb is None else best_bkvb
+
     def measure(**kn):
-        return 1.0 + abs(kn["block_q"] - best_bq) + abs(kn["block_kv"] - best_bkv)
+        return (1.0 + abs(kn["block_q"] - best_bq)
+                + abs(kn["block_kv"] - best_bkv)
+                + abs(kn.get("block_q_bwd", best_bqb) - best_bqb)
+                + abs(kn.get("block_kv_bwd", best_bkvb) - best_bkvb))
     return measure
+
+
+def _best(bq, bkv, bqb=None, bkvb=None):
+    return {"block_q": bq, "block_kv": bkv,
+            "block_q_bwd": bq if bqb is None else bqb,
+            "block_kv_bwd": bkv if bkvb is None else bkvb}
 
 
 class TestSignature:
@@ -51,14 +64,23 @@ class TestSignature:
 class TestDesignSpace:
     def test_blocks_capped_by_seq(self):
         space = design_space(_sig(S=256))
-        assert max(space["block_q"]) <= 256
-        assert max(space["block_kv"]) <= 256
+        for name in ("block_q", "block_kv", "block_q_bwd", "block_kv_bwd"):
+            assert max(space[name]) <= 256
 
     def test_vmem_budget_prunes_values(self):
         sig = _sig(S=1024)
-        tight = design_space(sig, vmem_budget=vmem_of(sig, 128, 128))
-        assert tight["block_q"] == [128]
-        assert tight["block_kv"] == [128]
+        # vmem_of probes fwd blocks only -> bwd defaults to the same blocks
+        # and dominates, so this budget pins the bwd knobs at 128 while
+        # larger fwd-only tiles may still fit under it.
+        budget = vmem_of(sig, 128, 128)
+        tight = design_space(sig, vmem_budget=budget)
+        assert tight["block_q_bwd"] == [128]
+        assert tight["block_kv_bwd"] == [128]
+        for name, vals in tight.items():
+            for v in vals:  # every surviving value is feasible on its own
+                probe = {n: min(vv) for n, vv in tight.items()}
+                probe[name] = v
+                assert config_vmem_bytes(sig, probe) <= budget, (name, v)
 
     def test_other_kernels_have_spaces(self):
         for kernel, shape in (("rwkv6", (2, 512, 4, 64)),
@@ -75,6 +97,31 @@ def vmem_of(sig, bq, bkv):
     return config_vmem_bytes(sig, {"block_q": bq, "block_kv": bkv})
 
 
+class TestBwdVmemModel:
+    def test_bwd_dominates_fwd_at_same_blocks(self):
+        """The fused backward holds more live state than the forward, so the
+        flash constraint (max of both) is the bwd working set."""
+        from repro.kernels.flash_attention.kernel import (vmem_bytes,
+                                                          vmem_bytes_bwd)
+
+        assert vmem_bytes_bwd(256, 256, 64) > vmem_bytes(256, 256, 64)
+        sig = _sig(S=1024)
+        assert vmem_of(sig, 256, 256) == config_vmem_bytes(
+            sig, _best(256, 256))
+
+    def test_bwd_blocks_tighten_the_constraint(self):
+        """Growing only the backward blocks must grow the config's VMEM."""
+        sig = _sig(S=1024)
+        small = config_vmem_bytes(sig, _best(128, 128, 128, 128))
+        big = config_vmem_bytes(sig, _best(128, 128, 512, 512))
+        assert big > small
+
+    def test_monotone_in_blocks(self):
+        from repro.kernels.flash_attention.kernel import vmem_bytes_bwd
+
+        assert vmem_bytes_bwd(256, 256, 64) > vmem_bytes_bwd(128, 128, 64)
+
+
 class TestTunerCache:
     def test_roundtrip_and_second_lookup_hit(self, tmp_path):
         path = str(tmp_path / "tuner.json")
@@ -82,8 +129,8 @@ class TestTunerCache:
         tuner = KernelTuner(path)
         assert tuner.lookup(sig) is None  # cold
 
-        best = tuner.tune(sig, _measure_pref(256, 256))
-        assert best == {"block_q": 256, "block_kv": 256}
+        best = tuner.tune(sig, _measure_pref(256, 256, 128, 256))
+        assert best == _best(256, 256, 128, 256)
         assert os.path.exists(path)
         # on-disk payload is plain JSON keyed by the signature
         data = json.load(open(path))
@@ -109,8 +156,8 @@ class TestTunerCache:
         tuner = KernelTuner(path)
         tuner.tune(_sig(), _measure_pref(128, 128))
         tuner.tune(_sig(window=64), _measure_pref(256, 128))
-        assert tuner.lookup(_sig()) == {"block_q": 128, "block_kv": 128}
-        assert tuner.lookup(_sig(window=64)) == {"block_q": 256, "block_kv": 128}
+        assert tuner.lookup(_sig()) == _best(128, 128)
+        assert tuner.lookup(_sig(window=64)) == _best(256, 128)
         assert len(tuner.cache) == 2
 
     def test_corrupt_cache_file_is_ignored(self, tmp_path):
@@ -127,10 +174,11 @@ class TestTunerCache:
         tuner = KernelTuner(str(tmp_path / "t.json"), vmem_budget=budget)
 
         def measure(**kn):  # bigger blocks "faster": tempts the tuner
-            return 1.0 / (kn["block_q"] * kn["block_kv"])
+            return 1.0 / (kn["block_q"] * kn["block_kv"]
+                          * kn["block_q_bwd"] * kn["block_kv_bwd"])
 
         best = tuner.tune(sig, measure)
-        assert vmem_of(sig, best["block_q"], best["block_kv"]) <= budget
+        assert config_vmem_bytes(sig, best) <= budget
 
 
 class TestKnowledgeBase:
@@ -139,7 +187,7 @@ class TestKnowledgeBase:
         tuner = KernelTuner(str(tmp_path / "t.json"))
         best = tuner.tune(sig, _measure_pref(256, 256))
         kb = tuner.knowledge_base(sig)
-        assert len(kb) == 4  # 2x2 space at S=256
+        assert len(kb) == 16  # 2^4 space (fwd + bwd block knobs) at S=256
         by_key = {op.key(): op for op in kb.ops}
         best_op = by_key[tuple(sorted(best.items()))]
         assert best_op.mean("latency_s") == min(
@@ -157,9 +205,9 @@ class TestWiring:
         path = str(tmp_path / "env.json")
         monkeypatch.setenv("REPRO_TUNER_CACHE", path)
         sig = _sig()
-        KernelTuner(path).tune(sig, _measure_pref(128, 256))
+        KernelTuner(path).tune(sig, _measure_pref(128, 256, 256, 128))
         got = tuned_flash_blocks((1, 256, 4, 64), 2, "float32", causal=True)
-        assert got == {"block_q": 128, "block_kv": 256}
+        assert got == _best(128, 256, 256, 128)
 
     def test_ops_lookup_empty_when_untuned(self, tmp_path, monkeypatch):
         monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path / "none.json"))
@@ -181,8 +229,11 @@ class TestWiring:
         woven = Weaver(program).weave([aspect])
         assert woven.state.extra["flash_block_q"] == 128
         assert woven.state.extra["flash_block_kv"] == 128
+        assert woven.state.extra["flash_block_q_bwd"] == 128
+        assert woven.state.extra["flash_block_kv_bwd"] == 128
         assert "flash_block_q" in woven.knobs
         assert woven.knobs["flash_block_q"].default == 128
+        assert "flash_block_q_bwd" in woven.knobs
 
     def test_tuned_aspect_noop_on_cache_miss(self, tmp_path, monkeypatch):
         from repro.core.program import Program
@@ -193,3 +244,71 @@ class TestWiring:
         program = Program.from_arch("gemma-2b", reduced=True)
         woven = Weaver(program).weave([TunedKernelAspect(2, 256)])
         assert "flash_block_q" not in woven.state.extra
+
+    def test_pre_bwd_cache_entry_still_weaves_fwd_blocks(self, tmp_path,
+                                                         monkeypatch):
+        """Entries written before the bwd knobs existed (fwd-only) must keep
+        working: fwd extras woven, bwd extras absent (ops falls back)."""
+        import json
+
+        from repro.core.program import Program
+        from repro.core.strategies.kernels import TunedKernelAspect
+        from repro.core.weaver import Weaver
+
+        path = str(tmp_path / "old.json")
+        monkeypatch.setenv("REPRO_TUNER_CACHE", path)
+        program = Program.from_arch("gemma-2b", reduced=True)
+        aspect = TunedKernelAspect(2, 256, dtype="bfloat16")
+        sig = aspect.signature(program.cfg)
+        with open(path, "w") as f:
+            json.dump({sig.key(): {"knobs": {"block_q": 256, "block_kv": 128},
+                                   "metrics": {}, "ops": []}}, f)
+
+        woven = Weaver(program).weave([aspect])
+        assert woven.state.extra["flash_block_q"] == 256
+        assert "flash_block_q_bwd" not in woven.state.extra
+
+    def test_wkv_chunk_threaded_to_woven_program(self, tmp_path, monkeypatch):
+        """The rwkv6 tuner space must be consumed by woven programs: tuned
+        chunk lands in the `wkv_chunk` extra TimeMix reads."""
+        from repro.core.program import Program
+        from repro.core.strategies.kernels import TunedKernelAspect
+        from repro.core.weaver import Weaver
+
+        path = str(tmp_path / "wkv.json")
+        monkeypatch.setenv("REPRO_TUNER_CACHE", path)
+        program = Program.from_arch("rwkv6-3b", reduced=True)
+        aspect = TunedKernelAspect(2, 128, dtype="float32")
+        sig = aspect.rwkv_signature(program.cfg)
+
+        def measure(**kn):  # prefer chunk=64
+            return 1.0 + abs(kn["chunk"] - 64)
+
+        KernelTuner(path).tune(sig, measure)
+        woven = Weaver(program).weave([aspect])
+        assert woven.state.extra["wkv_chunk"] == 64
+        assert "wkv_chunk" in woven.knobs
+        assert woven.knobs["wkv_chunk"].default == 64
+        # rwkv programs have no attention joinpoints: no flash extras
+        assert "flash_block_q" not in woven.state.extra
+
+    def test_rglru_blocks_threaded_to_woven_program(self, tmp_path,
+                                                    monkeypatch):
+        from repro.core.program import Program
+        from repro.core.strategies.kernels import TunedKernelAspect
+        from repro.core.weaver import Weaver
+
+        path = str(tmp_path / "rglru.json")
+        monkeypatch.setenv("REPRO_TUNER_CACHE", path)
+        program = Program.from_arch("recurrentgemma-2b", reduced=True)
+        aspect = TunedKernelAspect(2, 128, dtype="float32")
+        sig = aspect.rglru_signature(program.cfg)
+
+        def measure(**kn):  # prefer block_d=128, chunk=128
+            return 1.0 + abs(kn["block_d"] - 128) + abs(kn["chunk"] - 128)
+
+        KernelTuner(path).tune(sig, measure)
+        woven = Weaver(program).weave([aspect])
+        assert woven.state.extra["rglru_block_d"] == 128
+        assert woven.state.extra["rglru_chunk"] == 128
+        assert "rglru_block_d" in woven.knobs
