@@ -11,6 +11,7 @@ BENCH_kernels.json: pruned-vs-dense grid + tuned-vs-default blocks).
   navigation         Figs 17-19   mARGOt vs baseline QoS + NQI sweep
   kernels            (kernels)    Pallas pruning/tuning + analytic VMEM/AI
   flash_bwd          (kernels)    fused pruned bwd vs reference VJP
+  flash_decode       (kernels)    pruned decode kernel vs dense-XLA cache sweep
   roofline_report    §Roofline    table from dry-run artifacts
 
 Flags:
@@ -30,7 +31,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
-QUICK_MODULES = ("weaving", "kernels", "flash_bwd")
+QUICK_MODULES = ("weaving", "kernels", "flash_bwd", "flash_decode")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -46,6 +47,7 @@ def main(argv: list[str] | None = None) -> None:
         betweenness,
         docking_dse,
         flash_bwd,
+        flash_decode,
         kernels,
         navigation_autotune,
         precision_versions,
@@ -53,8 +55,8 @@ def main(argv: list[str] | None = None) -> None:
         weaving,
     )
 
-    modules = [weaving, precision_versions, kernels, flash_bwd, betweenness,
-               docking_dse, navigation_autotune, roofline_report]
+    modules = [weaving, precision_versions, kernels, flash_bwd, flash_decode,
+               betweenness, docking_dse, navigation_autotune, roofline_report]
     if args.only:
         names = {n.strip() for n in args.only.split(",")}
         modules = [m for m in modules
@@ -63,8 +65,9 @@ def main(argv: list[str] | None = None) -> None:
         if not modules:
             valid = ", ".join(m.__name__.split(".")[-1] for m in
                               (weaving, precision_versions, kernels,
-                               flash_bwd, betweenness, docking_dse,
-                               navigation_autotune, roofline_report))
+                               flash_bwd, flash_decode, betweenness,
+                               docking_dse, navigation_autotune,
+                               roofline_report))
             ap.error(f"--only {args.only!r} matches no benchmark; "
                      f"valid names: {valid}")
     elif args.quick:

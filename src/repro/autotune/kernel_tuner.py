@@ -38,6 +38,7 @@ from typing import Any, Callable, Mapping
 
 from repro.autotune.dse import Lat
 from repro.autotune.margot import KnowledgeBase, OperatingPoint
+from repro.kernels.flash_attention.decode import vmem_bytes_dec
 from repro.kernels.flash_attention.kernel import cdiv, vmem_bytes, vmem_bytes_bwd
 
 DEFAULT_VMEM_BUDGET = 16 * 2**20  # bytes per TPU core
@@ -87,6 +88,29 @@ def flash_signature(q_shape, kv_heads: int, dtype, *, causal: bool,
     )
 
 
+def flash_decode_signature(batch: int, cache_len: int, n_heads: int,
+                           kv_heads: int, head_dim: int, dtype="bfloat16",
+                           *, window: int | None = None) -> KernelSignature:
+    """One-token decode against a length-`cache_len` cache.  A separate
+    kernel space from `flash_attention`: the knob (`block_kv_dec`) tiles the
+    cache stream and the measurement is a full cached-decode step, not a
+    training fwd+grad."""
+    return KernelSignature(
+        kernel="flash_decode",
+        shape=(batch, cache_len, n_heads, kv_heads, head_dim),
+        dtype=str(getattr(dtype, "name", dtype)), causal=True,
+        window=window, gqa=n_heads // max(kv_heads, 1),
+    )
+
+
+def rmsnorm_signature(rows: int, dim: int, dtype="bfloat16") -> KernelSignature:
+    """Fused RMSNorm problem: (rows, d) with rows = batch * seq."""
+    return KernelSignature(
+        kernel="rmsnorm", shape=(rows, dim),
+        dtype=str(getattr(dtype, "name", dtype)),
+    )
+
+
 def rwkv6_signature(batch: int, seq_len: int, d_model: int,
                     head_dim: int = 64, dtype="float32") -> KernelSignature:
     """WKV problem signature: (B, S, H, C) with H = d_model // head_dim."""
@@ -117,6 +141,7 @@ KERNEL_SPACES: dict[str, dict[str, tuple[int, ...]]] = {
         "block_q_bwd": (128, 256, 512, 1024),
         "block_kv_bwd": (128, 256, 512, 1024),
     },
+    "flash_decode": {"block_kv_dec": (128, 256, 512, 1024)},
     "rwkv6": {"chunk": (16, 32, 64, 128)},
     "rglru": {"block_d": (128, 256, 512, 1024), "chunk": (64, 128, 256)},
     "rmsnorm": {"block_rows": (64, 128, 256, 512)},
@@ -137,6 +162,12 @@ def config_vmem_bytes(sig: KernelSignature, knobs: Mapping[str, int]) -> int:
         bwd = vmem_bytes_bwd(min(bqb, S), min(bkvb, S), D, b,
                              kv_dtype_bytes=b)
         return max(fwd, bwd)
+    if sig.kernel == "flash_decode":
+        B, T, H, K, D = sig.shape
+        return vmem_bytes_dec(
+            H // max(K, 1), min(int(knobs["block_kv_dec"]), max(T, 128)),
+            D, b, kv_dtype_bytes=b,
+        )
     if sig.kernel == "rwkv6":
         B, S, H, C = sig.shape
         L = int(knobs["chunk"])
@@ -162,6 +193,11 @@ def design_space(sig: KernelSignature, *,
         B, S, H, K, D = sig.shape
         for name in ("block_q", "block_kv", "block_q_bwd", "block_kv_bwd"):
             space[name] = [v for v in space[name] if v <= max(S, 128)]
+    elif sig.kernel == "flash_decode":
+        T = sig.shape[1]
+        space["block_kv_dec"] = [
+            v for v in space["block_kv_dec"] if v <= max(T, 128)
+        ]
     elif sig.kernel == "rwkv6":
         S = sig.shape[1]
         space["chunk"] = [v for v in space["chunk"] if v <= max(S, 16)]
@@ -377,6 +413,37 @@ def _default_measure(sig: KernelSignature) -> Callable[..., float]:
 
         return measure
 
+    if sig.kernel == "flash_decode":
+        from repro.kernels.flash_attention.ops import flash_decode
+
+        B, T, H, K, D = sig.shape
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(ks[0], (B, 1, H, D), dt)
+        k = jax.random.normal(ks[1], (B, T, K, D), dt)
+        v = jax.random.normal(ks[2], (B, T, K, D), dt)
+        kv_new = jax.random.normal(ks[3], (B, 1, K, D), dt)
+        index = jnp.full((B,), T - 1, jnp.int32)  # worst case: full cache
+
+        def measure(**knobs):
+            # a full cached-decode step: in-place cache update + attention,
+            # so the DSE optimizes what serving actually pays per token.
+            @jax.jit
+            def step(q, k, v, kv_new, index):
+                bidx = jnp.arange(B)
+                k = k.at[bidx, index].set(kv_new[:, 0])
+                v = v.at[bidx, index].set(kv_new[:, 0])
+                return flash_decode(
+                    q, k, v, index, window=sig.window,
+                    block_kv=int(knobs["block_kv_dec"]),
+                )
+
+            jax.block_until_ready(step(q, k, v, kv_new, index))  # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(step(q, k, v, kv_new, index))
+            return time.perf_counter() - t0
+
+        return measure
+
     if sig.kernel == "rwkv6":
         from repro.kernels.rwkv6.ops import wkv_pallas
 
@@ -461,6 +528,19 @@ def tuned_flash_blocks(q_shape, kv_heads: int, dtype, *, causal: bool,
     try:
         sig = flash_signature(q_shape, kv_heads, dtype, causal=causal,
                               window=window)
+        return default_tuner().lookup(sig) or {}
+    except Exception:  # pragma: no cover - never break the kernel call
+        return {}
+
+
+def tuned_decode_blocks(q_shape, cache_len: int, kv_heads: int, dtype, *,
+                        window: int | None = None) -> dict[str, int]:
+    """Non-failing decode-knob lookup used by ops.flash_decode: {} when
+    untuned.  q_shape is the model layout (B, 1, H, D)."""
+    try:
+        B, _, H, D = q_shape
+        sig = flash_decode_signature(B, cache_len, H, kv_heads, D, dtype,
+                                     window=window)
         return default_tuner().lookup(sig) or {}
     except Exception:  # pragma: no cover - never break the kernel call
         return {}

@@ -60,9 +60,11 @@ class TunedKernelAspect(Aspect):
     name = "TunedKernelBlocks"
 
     def __init__(self, batch: int, seq_len: int, *, dtype: str = "bfloat16",
+                 cache_len: int | None = None,
                  tuner=None, tune_on_miss: bool = False,
                  expose_knobs: bool = True):
         self.batch, self.seq_len, self.dtype = batch, seq_len, dtype
+        self.cache_len = cache_len  # decode-signature cache length
         self.tuner = tuner
         self.tune_on_miss = tune_on_miss
         self.expose_knobs = expose_knobs
@@ -75,6 +77,26 @@ class TunedKernelAspect(Aspect):
             cfg.kv_heads, self.dtype,
             causal=True, window=cfg.attn_window,
         )
+
+    def decode_signature(self, cfg):
+        """Serving decode: one token against a cache of `cache_len` slots
+        (ring caches clamp to the window — the cache *is* the window)."""
+        from repro.autotune.kernel_tuner import flash_decode_signature
+
+        cache_len = self.cache_len or self.seq_len
+        window = cfg.attn_window
+        if window is not None and window < cache_len:
+            cache_len, window = window, None  # ring layout
+        return flash_decode_signature(
+            self.batch, cache_len, cfg.n_heads, cfg.kv_heads,
+            cfg.resolved_head_dim, self.dtype, window=window,
+        )
+
+    def rmsnorm_signature(self, cfg):
+        from repro.autotune.kernel_tuner import rmsnorm_signature
+
+        return rmsnorm_signature(self.batch * self.seq_len, cfg.d_model,
+                                 self.dtype)
 
     def rwkv_signature(self, cfg):
         from repro.autotune.kernel_tuner import rwkv6_signature
@@ -130,6 +152,19 @@ class TunedKernelAspect(Aspect):
                     "block_q_bwd": "flash_block_q_bwd",
                     "block_kv_bwd": "flash_block_kv_bwd",
                 })
+            dec_knobs = self._knobs_for(tuner, self.decode_signature(cfg))
+            if dec_knobs:
+                self._weave(weaver, "flash_decode", dec_knobs,
+                            {"block_kv_dec": "flash_block_kv_dec"})
+
+        norm_jps = weaver.select(kind="norm").all()
+        if norm_jps and cfg.norm_type == "rmsnorm":
+            for jp in norm_jps:
+                jp.attr("kind")
+            knobs = self._knobs_for(tuner, self.rmsnorm_signature(cfg))
+            if knobs:
+                self._weave(weaver, "rmsnorm", knobs,
+                            {"block_rows": "rms_block_rows"})
 
         wkv_jps = weaver.select(kind="rwkv_time_mix").all()
         if wkv_jps:

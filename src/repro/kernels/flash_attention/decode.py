@@ -1,0 +1,302 @@
+"""Pallas TPU flash *decode* attention: one new q token against a KV cache.
+
+The serving hot path.  Prefill/training attention is O(S·W) since the grid
+pruning landed, but decode used to run XLA attention over the *entire*
+padded cache every token — O(max_len) HBM traffic per step.  This kernel
+streams only the *live* cache blocks:
+
+  - grid (batch, kv_heads, kv_steps) with kv_steps = ceil(T / block_kv)
+    *static*; the per-request `index` (number of tokens already cached,
+    i.e. the new token's absolute position) rides in as a scalar-prefetch
+    operand, so the K/V BlockSpec index_map can clamp the streamed block to
+    the live interval [lo(index), hi(index)) — steps past the interval
+    repeat the previous block index and Pallas elides the DMA, exactly the
+    clamp-and-elide walk of the prefill kernel's pruned path.
+
+  - ring caches (slot = pos % W, cache length T == window W): slots
+    0..min(index, W-1) are filled and — once the cache has wrapped — every
+    slot holds a position inside the window, so liveness is just
+    `slot < min(T, index+1)`; the kernel reads exactly
+    ceil(min(W, index+1) / block_kv) blocks using the ring `pos`/`index`
+    layout, with no gather or rotation of the cache in HBM.
+
+  - linear caches (slot s = absolute position s, T == max_len): blocks
+    beyond `index` are pruned the same way, and a sliding window (the
+    window >= prefill-length case where `_build_cache` stays linear) also
+    prunes blocks *below* the window through the same interval machinery.
+
+  - GQA folds the q-head group into the q block: one kernel instance per KV
+    head with a (group, D) q tile, so K/V are never replicated in HBM and
+    the single-token MXU op is a (group x block_kv) matmul.  Softcap and
+    fp32 online-softmax accumulation match `xla_attention`.
+
+`decode_schedule` mirrors the index remapping in pure numpy so tests and
+benches can assert exactly which blocks one decode step streams;
+`vmem_bytes_dec` is the analytic VMEM working set used as the autotuner's
+capacity constraint for the `block_kv_dec` knob (see
+repro.autotune.kernel_tuner).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention.kernel import NEG_INF, cdiv
+
+
+# ---------------------------------------------------------------------------
+# Live-block interval + numpy oracle
+# ---------------------------------------------------------------------------
+
+
+def _dec_hi(index, block_kv: int, T: int):
+    """One past the last live KV block: the block holding min(T, index+1)-1.
+
+    Works on python ints and traced scalars (index_map arithmetic).
+    """
+    live = index + 1
+    if isinstance(live, int):
+        return cdiv(max(1, min(T, live)), block_kv)
+    live = jnp.clip(live, 1, T)
+    return (live + block_kv - 1) // block_kv
+
+
+def _dec_lo(index, block_kv: int, window: int | None, hi):
+    """First live KV block (linear caches only: positions below the sliding
+    window are dead).  Ring caches pass window=None — the ring layout holds
+    only in-window positions by construction."""
+    if window is None:
+        return hi * 0  # 0, but keeps tracer dtype when hi is traced
+    lo = (index + 1 - window) // block_kv
+    if isinstance(lo, int):
+        return min(max(0, lo), hi - 1)
+    return jnp.clip(lo, 0, hi - 1)
+
+
+def decode_steps_for(T: int, block_kv: int, window: int | None = None) -> int:
+    """Max live KV blocks one decode step can stream, over all indices.
+
+    Without a window that is the full cache; with one, the W in-window slots
+    span at most ceil((W-1)/block_kv) + 1 blocks (worst case: the window
+    straddles block edges on both sides)."""
+    nk = cdiv(T, block_kv)
+    if window is None:
+        return nk
+    return max(1, min(nk, cdiv(max(window - 1, 1), block_kv) + 1))
+
+
+def decode_schedule(
+    T: int, index: int, block_kv: int, *,
+    window: int | None = None, pruned: bool = True,
+) -> list[int]:
+    """KV blocks one decode token actually *streams* from a length-T cache.
+
+    Mirrors the kernel's clamp-and-elide index remapping: the pruned path
+    walks [lo, hi) and overshoot steps repeat the last block (no DMA).  For
+    ring caches (T == window, window=None here) this is exactly
+    range(ceil(min(T, index+1) / block_kv)); the dense path streams every
+    block.
+    """
+    nk = cdiv(T, block_kv)
+    if not pruned:
+        return list(range(nk))
+    hi = _dec_hi(int(index), block_kv, T)
+    lo = _dec_lo(int(index), block_kv, window, hi)
+    return list(range(int(lo), int(hi)))
+
+
+# ---------------------------------------------------------------------------
+# Kernel body
+# ---------------------------------------------------------------------------
+
+
+def _flash_decode_kernel(
+    idx_ref,  # scalar prefetch: (B,) int32, per-request index
+    q_ref,    # (1, 1, Gp, D)
+    k_ref,    # (1, 1, block_kv, D)
+    v_ref,
+    o_ref,    # (1, 1, Gp, D)
+    m_scratch, l_scratch, acc_scratch,
+    *,
+    block_kv: int,
+    kv_len: int,   # true cache length T (padding slots >= T are masked)
+    window: int | None,
+    softcap: float | None,
+    scale: float,
+    pruned: bool,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    index = idx_ref[b]
+    live = jnp.clip(index + 1, 1, kv_len)  # tokens in the cache this step
+    hi = _dec_hi(index, block_kv, kv_len)
+    lo = _dec_lo(index, block_kv, window, hi)
+    if pruned:
+        # the index_map streamed block min(lo+j, hi-1); overshoot steps
+        # repeat the last block (no DMA) and skip all compute
+        ik = jnp.minimum(lo + j, hi - 1)
+        live_step = j < hi - lo
+    else:
+        # dense baseline: block j streamed; dead blocks still skip the MXU
+        ik = j
+        live_step = jnp.logical_and(j >= lo, j < hi)
+    k_start = ik * block_kv
+
+    @pl.when(live_step)
+    def _compute():
+        g = q_ref[0, 0].astype(jnp.float32)   # (Gp, D)
+        k = k_ref[0, 0].astype(jnp.float32)   # (bkv, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            g, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (Gp, bkv)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kp < live  # ring: filled slots; linear: causal slots <= index
+        if window is not None:  # linear cache under a sliding window
+            mask = jnp.logical_and(mask, kp > index - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scratch[...]
+        l_prev = l_scratch[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new) * mask.astype(jnp.float32)
+        alpha = jnp.exp(m_prev - m_new)
+        m_scratch[...] = m_new
+        l_scratch[...] = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(j == nj - 1)
+    def _fin():
+        out = acc_scratch[...] / jnp.maximum(l_scratch[...], 1e-30)
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Entry point (kernel layout)
+# ---------------------------------------------------------------------------
+
+
+def flash_decode_fwd(
+    q: jax.Array,      # (B, K, G, D) — one token, group folded into rows
+    k: jax.Array,      # (B, K, T, D) cache, kernel layout
+    v: jax.Array,
+    index: jax.Array,  # (B,) int32: new token's position / #cached tokens
+    *,
+    window: int | None = None,  # linear caches only; ring passes None
+    softcap: float | None = None,
+    block_kv: int = 512,
+    pruned: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """One decode step.  Streams ceil((hi-lo)) live KV blocks per (b, kv
+    head); with `pruned=False` every block streams (the dense baseline)."""
+    B, K, G, D = q.shape
+    T = k.shape[2]
+    block_kv = min(block_kv, max(T, 1))
+
+    # TPU sublane tiling wants >= 8 q rows; pad the folded group (the padded
+    # rows compute garbage that is sliced off — rows are softmax-independent).
+    Gp = max(8, G) if not interpret else G
+    if Gp != G:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+
+    # Ragged cache length: zero-pad KV to a block multiple; `kp < live`
+    # masks the padded slots (live <= T always).
+    pad = (-T) % block_kv
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k, v = jnp.pad(k, widths), jnp.pad(v, widths)
+    nk = (T + pad) // block_kv
+
+    index = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (B,))
+
+    # Static grid pruning on top of the dynamic clamp: no index can reach
+    # more than decode_steps_for blocks (ceil((W-1)/bkv)+1 under a window),
+    # so the grid itself shrinks — the same trick as the prefill kernel's
+    # kv_steps_for.  The per-index interval [lo, hi) then elides within it.
+    steps = decode_steps_for(T, block_kv, window) if pruned else nk
+
+    if pruned:
+        def kv_index(b, h, j, idx_ref):
+            hi = _dec_hi(idx_ref[b], block_kv, T)
+            lo = _dec_lo(idx_ref[b], block_kv, window, hi)
+            return (b, h, jnp.minimum(lo + j, hi - 1), 0)
+    else:
+        def kv_index(b, h, j, idx_ref):
+            return (b, h, j, 0)
+
+    kernel = functools.partial(
+        _flash_decode_kernel,
+        block_kv=block_kv, kv_len=T, window=window,
+        softcap=softcap, scale=1.0 / np.sqrt(D), pruned=pruned,
+    )
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, Gp, D), lambda b, h, j, idx_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), kv_index),
+            pl.BlockSpec((1, 1, block_kv, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, Gp, D), lambda b, h, j, idx_ref: (b, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, Gp, D), q.dtype),
+        interpret=interpret,
+    )(index, q, k, v)
+    return out[:, :, :G, :]
+
+
+def vmem_bytes_dec(
+    group: int,
+    block_kv: int,
+    head_dim: int,
+    dtype_bytes: int = 2,
+    *,
+    kv_dtype_bytes: int | None = None,
+) -> int:
+    """Analytic VMEM working set of one decode step — the autotuner's
+    capacity constraint for the `block_kv_dec` knob.
+
+    The q/o tiles are (max(8, group) x D) at the Q dtype, K and V blocks at
+    the KV dtype, double-buffered as Pallas pipelines them, plus the fp32
+    scratch (acc + m + l) and the fp32 (group x block_kv) score tile.  The
+    per-request index scalars are noise (4·B bytes in SMEM).
+    """
+    if kv_dtype_bytes is None:
+        kv_dtype_bytes = dtype_bytes
+    g = max(8, group)
+    qo = 2 * g * head_dim * dtype_bytes                # q in + o out
+    kv = 2 * block_kv * head_dim * kv_dtype_bytes      # k + v
+    scratch = (g * (head_dim + 2)) * 4                 # fp32 acc + m + l
+    scores = g * block_kv * 4                          # fp32 s/p tile
+    return 2 * (qo + kv) + scratch + scores

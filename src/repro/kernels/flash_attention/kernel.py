@@ -37,9 +37,11 @@ two-pass flash recipe.  The forward saves the per-row softmax statistics
     and accumulating dq in fp32 VMEM scratch, and
   - the dk/dv pass transposes the schedule: per KV block it walks the
     reachable *Q*-block interval [q_lo(ik), q_hi(ik)) — the exact mirror of
-    the forward remapping — accumulating dk/dv in fp32 scratch.  GQA keeps
-    the per-q-head grid (K/V index_map h // group) and the wrapper
-    group-sums dk/dv down to the true KV heads.
+    the forward remapping — accumulating dk/dv in fp32 scratch.  The grid
+    runs over the K *true* KV heads with the GQA group folded into the
+    innermost loop (j = g·q_steps + jq), so the accumulators sum the whole
+    group before the single (B, K, T, D) HBM write — O(S·K·D) transient
+    traffic, not the per-q-head O(S·H·D) a wrapper-side group-sum would pay.
 
 So backward HBM traffic is O(S·W) for window-W attention, matching the
 forward, instead of the O(S²) dense reference VJP.
@@ -618,15 +620,20 @@ def _flash_bwd_dkv_kernel(
     dk_ref, dv_ref,
     dk_acc, dv_acc,
     *,
-    block_q: int, block_kv: int, kv_len: int, nq: int,
+    block_q: int, block_kv: int, kv_len: int, nq: int, q_steps: int,
     causal: bool, window: int | None, softcap: float | None, scale: float,
     pruned: bool,
 ):
-    """dk/dv pass: grid (B, H, nk, q_steps) — the *transposed* pruned
-    iteration, walking reachable Q blocks per KV block."""
+    """dk/dv pass: grid (B, K, nk, group*q_steps) — the *transposed* pruned
+    iteration, walking reachable Q blocks per KV block with the GQA group
+    folded into the innermost dimension (j = g*q_steps + jq).  The fp32
+    accumulators persist across the whole group loop, so dk/dv come out
+    *group-summed* — one (block_kv, D) pair per true KV head, an O(S·K·D)
+    HBM write instead of the per-q-head O(S·H·D) transient."""
     ik = pl.program_id(2)
     j = pl.program_id(3)
     nj = pl.num_programs(3)
+    jq = j % q_steps  # position inside this group member's Q walk
 
     @pl.when(j == 0)
     def _init():
@@ -636,16 +643,16 @@ def _flash_bwd_dkv_kernel(
     if pruned and causal:
         lo = _q_lo(ik, block_q, block_kv, nq)
         hi = _q_hi(ik, block_q, block_kv, nq, kv_len, window)
-        iq = jnp.minimum(lo + j, jnp.maximum(hi - 1, lo))
-        live = j < hi - lo
+        iq = jnp.minimum(lo + jq, jnp.maximum(hi - 1, lo))
+        live = jq < hi - lo
     else:
-        iq = j
+        iq = jq
         live = jnp.asarray(True)
         if causal:
-            live = jnp.asarray(ik * block_kv <= j * block_q + block_q - 1)
+            live = jnp.asarray(ik * block_kv <= jq * block_q + block_q - 1)
             if window is not None:
                 live = jnp.logical_and(
-                    live, ik * block_kv + block_kv - 1 > j * block_q - window
+                    live, ik * block_kv + block_kv - 1 > jq * block_q - window
                 )
 
     q_start = iq * block_q
@@ -697,14 +704,13 @@ def flash_attention_bwd(
 
     Two passes over the same pruned schedule machinery as the forward: the
     dq grid iterates [kv_lo, kv_hi) per q block, the dk/dv grid iterates the
-    transposed [q_lo, q_hi) per kv block.  `delta = rowsum(dO·O)` is
-    precomputed here (cheap XLA elementwise+reduce).  The K/V *inputs* are
-    never replicated for GQA (index_map h // group, as in the forward), but
-    the dk/dv pass does write a transient per-q-head fp32 (B, H, T, D)
-    gradient pair to HBM before the group-sum down to the K true KV heads —
-    an O(S·H·D) cost; accumulating group-locally in-kernel (grid over KV
-    heads, inner loop over the group) would remove it and is the recorded
-    follow-up.
+    transposed [q_lo, q_hi) per kv block with the GQA group folded into the
+    innermost dimension.  `delta = rowsum(dO·O)` is precomputed here (cheap
+    XLA elementwise+reduce).  K/V are never replicated for GQA in either
+    direction: the forward/dq index_map maps h // group, and the dk/dv pass
+    accumulates *group-locally* — grid over the K true KV heads, inner loop
+    over the group — so its HBM write is the final fp32 (B, K, T, D)
+    gradient pair, O(S·K·D), never a per-q-head O(S·H·D) transient.
     """
     B, H, S, D = q.shape
     K, T = k.shape[1], k.shape[2]
@@ -771,34 +777,38 @@ def flash_attention_bwd(
         interpret=interpret,
     )(q, k, v, do, lse, delta)
 
-    # -- dk/dv pass: per KV block, iterate (pruned) Q blocks ------------------
+    # -- dk/dv pass: per KV head x KV block, loop the GQA group over the
+    # (pruned) Q blocks — group-local accumulation, so the HBM write is the
+    # true (B, K, T, D) gradient, never a per-q-head transient ------------------
     q_steps = (
         q_steps_for(S, T, block_q, block_kv, causal, window)
         if use_pruned else nq
     )
 
-    def q_index(b, h, ik, j):
+    def q_index(b, kh, ik, j):
+        h = kh * G + j // q_steps  # group member this step serves
+        jq = j % q_steps
         if use_pruned:
             lo = _q_lo(ik, block_q, block_kv, nq)
             hi = _q_hi(ik, block_q, block_kv, nq, T, window)
-            j = jnp.minimum(lo + j, jnp.maximum(hi - 1, lo))
-        return (b, h, j, 0)
+            jq = jnp.minimum(lo + jq, jnp.maximum(hi - 1, lo))
+        return (b, h, jq, 0)
 
-    def q_stat_t(b, h, ik, j):
-        return q_index(b, h, ik, j)[:3]
+    def q_stat_t(b, kh, ik, j):
+        return q_index(b, kh, ik, j)[:3]
 
-    def kv_row(b, h, ik, j):
-        return (b, h // G, ik, 0)
+    def kv_row(b, kh, ik, j):
+        return (b, kh, ik, 0)
 
     dkv_kernel = functools.partial(
         _flash_bwd_dkv_kernel,
-        block_q=block_q, block_kv=block_kv, kv_len=T, nq=nq,
+        block_q=block_q, block_kv=block_kv, kv_len=T, nq=nq, q_steps=q_steps,
         causal=causal, window=window, softcap=softcap, scale=scale,
         pruned=use_pruned,
     )
     dk, dv = pl.pallas_call(
         dkv_kernel,
-        grid=(B, H, nk, q_steps),
+        grid=(B, K, nk, G * q_steps),
         in_specs=[
             pl.BlockSpec((1, 1, block_q, D), q_index),
             pl.BlockSpec((1, 1, block_kv, D), kv_row),
@@ -808,12 +818,12 @@ def flash_attention_bwd(
             pl.BlockSpec((1, 1, block_q), q_stat_t),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, ik, j: (b, h, ik, 0)),
-            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, ik, j: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, kh, ik, j: (b, kh, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, kh, ik, j: (b, kh, ik, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((B, H, Tp, D), jnp.float32),
-            jax.ShapeDtypeStruct((B, H, Tp, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, Tp, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, K, Tp, D), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((block_kv, D), jnp.float32),
@@ -823,8 +833,8 @@ def flash_attention_bwd(
     )(q, k, v, do, lse, delta)
 
     dq = dq[:, :, :S]
-    dk = dk.reshape(B, K, G, Tp, D).sum(axis=2)[:, :, :T].astype(k.dtype)
-    dv = dv.reshape(B, K, G, Tp, D).sum(axis=2)[:, :, :T].astype(v.dtype)
+    dk = dk[:, :, :T].astype(k.dtype)
+    dv = dv[:, :, :T].astype(v.dtype)
     return dq, dk, dv
 
 

@@ -36,6 +36,7 @@ from repro.kernels.flash_attention.kernel import (
 
 DEFAULT_BLOCK_Q = 512
 DEFAULT_BLOCK_KV = 512
+DEFAULT_BLOCK_KV_DEC = 512
 
 if hasattr(jax, "shard_map"):  # jax >= 0.6
     _shard_map = jax.shard_map
@@ -212,3 +213,68 @@ def _as_tuple(x):
     if isinstance(x, (list, tuple)):
         return tuple(x)
     return (x,)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against a cache) — the serving hot path
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "block_kv", "pruned", "interpret"),
+)
+def _flash_decode_local(q, k, v, index, *, window, softcap, block_kv, pruned,
+                        interpret):
+    from repro.kernels.flash_attention.decode import flash_decode_fwd
+
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    # model layout -> kernel layout: heads h = kh*G + g fold into a
+    # (K, G) grid/row split, matching the kernel's per-KV-head instances
+    qt = q.reshape(B, H, D).reshape(B, K, G, D)
+    kt = jnp.swapaxes(k, 1, 2)  # (B, K, T, D)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_decode_fwd(
+        qt, kt, vt, index,
+        window=window, softcap=softcap, block_kv=block_kv,
+        pruned=pruned, interpret=interpret,
+    )
+    return out.reshape(B, 1, H, D)
+
+
+def flash_decode(
+    q: jax.Array,        # (B, 1, H, D) — the one new token, post-RoPE
+    k_cache: jax.Array,  # (B, T, K, D) cache *with the new token written*
+    v_cache: jax.Array,
+    index: jax.Array,    # () or (B,) int32: the new token's position
+    *,
+    window: int | None = None,  # linear caches only; ring caches pass None
+    softcap: float | None = None,
+    block_kv: int | None = None,
+    pruned: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One decode step over a live-block-pruned cache; see decode.py.
+
+    `block_kv=None` resolves from the kernel-tuner cache (the
+    `block_kv_dec` knob under the `vmem_bytes_dec` constraint), falling
+    back to the 512 default — the same auto-tuning path as the prefill
+    kernel's blocks.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if block_kv is None:
+        from repro.autotune.kernel_tuner import tuned_decode_blocks
+
+        tuned = tuned_decode_blocks(
+            q.shape, k_cache.shape[1], k_cache.shape[2], q.dtype,
+            window=window,
+        )
+        block_kv = int(tuned.get("block_kv_dec", DEFAULT_BLOCK_KV_DEC))
+    return _flash_decode_local(
+        q, k_cache, v_cache, jnp.asarray(index, jnp.int32),
+        window=window, softcap=softcap, block_kv=int(block_kv),
+        pruned=pruned, interpret=interpret,
+    )

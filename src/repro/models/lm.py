@@ -71,14 +71,14 @@ class DecoderBlock(Module):
                 "ffn": self.ffn}
 
     def __call__(self, params, x, *, ctx: Ctx, mode="dense", cache=None,
-                 positions=None):
+                 positions=None, kv_pos=None):
         with ctx.scope(self.name):
             h = self.norm1(params["norm1"], x, ctx=ctx)
             # single gather point for the sequence-parallel residual (the
             # Megatron-SP "g" operator): one AG feeds qkv, not one each
             h = ctx.constrain(h, ("batch", "seq_act", "embed"))
             h, new_cache = self.attn(params["attn"], h, ctx=ctx, positions=positions,
-                                     mode=mode, cache=cache)
+                                     mode=mode, cache=cache, kv_pos=kv_pos)
             x = x + h
             h = self.norm2(params["norm2"], x, ctx=ctx)
             h = ctx.constrain(h, ("batch", "seq_act", "embed"))
@@ -236,9 +236,25 @@ class TransformerLM(Module):
             and str(ctx.extra.get("remat", "full")) != "none"
             and cfg.family == "hybrid"
         )
+        # Hoisted linear-cache decode positions: updated ONCE per step (an
+        # O(B) scatter on the cached (B, T) kv_pos) and shared by every
+        # attention layer — instead of each layer re-deriving an arange(T)
+        # mask broadcast to (B, T).
+        kv_pos = None
+        if mode == "decode" and cache is not None and "kv_pos" in cache:
+            idx_col = positions[:, -1]
+            kv_pos = cache["kv_pos"].at[jnp.arange(B), idx_col].set(idx_col)
+            new_caches["kv_pos"] = kv_pos
         if not ctx.extra.get("skip_trunk"):  # roofline outer-component mode
             for part in self.trunk:
                 part_cache = None if cache is None else cache.get(part.name)
+                attn_kw: dict[str, Any] = {}
+                if kv_pos is not None:
+                    if isinstance(part, ScannedStack) and isinstance(
+                            part.block, DecoderBlock):
+                        attn_kw = {"block_kwargs": {"kv_pos": kv_pos}}
+                    elif isinstance(part, DecoderBlock):
+                        attn_kw = {"kv_pos": kv_pos}
                 if remat_unrolled and not isinstance(part, ScannedStack):
                     # unrolled hybrid blocks need per-block remat too
                     def call(p, h, _part=part):
@@ -251,8 +267,13 @@ class TransformerLM(Module):
                     c = None
                 else:
                     x, c = part(params[part.name], x, ctx=ctx, mode=mode,
-                                cache=part_cache, positions=positions)
+                                cache=part_cache, positions=positions,
+                                **attn_kw)
                 new_caches[part.name] = c
+        if mode == "prefill":
+            kvp = self._prefill_kv_pos(new_caches, positions)
+            if kvp is not None:
+                new_caches["kv_pos"] = kvp
 
         if mode == "prefill":
             x = x[:, -1:]
@@ -295,6 +316,21 @@ class TransformerLM(Module):
 
     # -- caches -------------------------------------------------------------------
 
+    @staticmethod
+    def _prefill_kv_pos(new_caches, positions):
+        """(B, T) slot->position map for the *linear* attention caches, built
+        once at prefill and carried in the cache pytree (slot s holds
+        position s for s < S, -1 beyond).  Ring caches carry their own `pos`
+        and need no shared map; models without linear attention caches
+        return None."""
+        for c in new_caches.values():
+            if isinstance(c, dict) and "k" in c and "pos" not in c \
+                    and "ck" not in c:
+                T = c["k"].shape[-3]  # (..., B, T, K, D)
+                ar = jnp.arange(T, dtype=jnp.int32)[None]
+                return jnp.where(ar <= positions[:, -1:], ar, -1)
+        return None
+
     def _layer_cache_spec(self, batch: int, cache_len: int):
         cfg = self.cfg
         if cfg.family == "ssm":
@@ -327,11 +363,56 @@ class TransformerLM(Module):
                     out[part.name] = cache_spec(
                         batch, W, cfg.kv_heads, cfg.resolved_head_dim, ring=ring
                     )
+                    if not ring:
+                        out["kv_pos"] = jax.ShapeDtypeStruct(
+                            (batch, W), jnp.int32)
             return out
         layer_spec = self._layer_cache_spec(batch, cache_len)
         for part, n in zip(self.trunk, cfg.groups()):
             out[part.name] = stack(layer_spec, n)
+        if isinstance(layer_spec, dict) and "k" in layer_spec \
+                and "pos" not in layer_spec:
+            # linear attention caches share one hoisted (B, T) kv_pos
+            out["kv_pos"] = jax.ShapeDtypeStruct(
+                (batch, layer_spec["k"].shape[1]), jnp.int32)
         return out
+
+    def stack_caches(self, caches: list[dict]) -> dict:
+        """Stack per-request (batch=1) decode caches into one batched cache
+        — the serving layout: array leaves concatenate on their batch axis
+        (axis 1 under a scanned stack's layer dim, else 0), while the
+        per-stream metadata gains a leading per-request dim: `index` becomes
+        (..., B) and ring `pos` (..., B, W).  `Attention._decode` detects the
+        per-request index and updates/prunes each request's slots
+        independently (the flash_decode kernel reads the index vector as a
+        scalar-prefetch operand)."""
+        first = caches[0]
+
+        def merge(vals, scanned: bool):
+            out = {}
+            for key in vals[0]:
+                arrs = [v[key] for v in vals]
+                if isinstance(arrs[0], dict):
+                    out[key] = merge(arrs, scanned)
+                elif key == "index":
+                    out[key] = jnp.stack(arrs, axis=-1)
+                elif key == "pos":
+                    out[key] = jnp.stack(arrs, axis=1 if scanned else 0)
+                else:
+                    out[key] = jnp.concatenate(arrs, axis=1 if scanned else 0)
+            return out
+
+        stacked: dict[str, Any] = {}
+        for part in self.trunk:
+            vals = [c[part.name] for c in caches]
+            if vals[0] is None:
+                stacked[part.name] = None
+                continue
+            stacked[part.name] = merge(vals, isinstance(part, ScannedStack))
+        if "kv_pos" in first:
+            stacked["kv_pos"] = jnp.concatenate(
+                [c["kv_pos"] for c in caches], axis=0)
+        return stacked
 
     def init_cache(self, batch: int, cache_len: int, *, index: int = 0) -> dict:
         """Concrete zero cache (tests/examples); index = #valid tokens."""
@@ -353,4 +434,9 @@ class TransformerLM(Module):
                 return {k: fix_meta(v) for k, v in tree.items()}
             return tree
 
-        return fix_meta(cache)
+        cache = fix_meta(cache)
+        if "kv_pos" in cache:  # slot s -> position s for the filled prefix
+            ar = jnp.arange(cache["kv_pos"].shape[1], dtype=jnp.int32)[None]
+            cache["kv_pos"] = jnp.broadcast_to(
+                jnp.where(ar < index, ar, -1), cache["kv_pos"].shape)
+        return cache

@@ -233,6 +233,7 @@ class Attention(Module):
         mode: str = "dense",  # dense | prefill | decode
         cache: dict | None = None,
         kv_src: jax.Array | None = None,  # cross-attention source (B,T,d)
+        kv_pos: jax.Array | None = None,  # hoisted (B,T) decode positions
     ):
         with ctx.scope(self.name):
             policy = ctx.policy()
@@ -246,7 +247,8 @@ class Attention(Module):
             if self.cross:
                 out, new_cache = self._cross(params, q, ctx, policy, cache, kv_src)
             elif mode == "decode":
-                out, new_cache = self._decode(params, q, x, positions, ctx, policy, cache)
+                out, new_cache = self._decode(params, q, x, positions, ctx, policy,
+                                              cache, kv_pos)
             else:
                 out, new_cache = self._dense(params, q, x, positions, ctx, policy, mode, cache)
 
@@ -389,7 +391,23 @@ class Attention(Module):
 
     # -- decode (one token against a cache) ---------------------------------------
 
-    def _decode(self, params, q, x, positions, ctx, policy, cache):
+    def _decode(self, params, q, x, positions, ctx, policy, cache, kv_pos=None):
+        """One new token against a linear or ring cache.
+
+        The cache is updated in place (`.at[...].set`, so jit donates the
+        buffers) and the attention dispatches through the same impl-weaving
+        path as `_dense`: `impl == "pallas"` streams only the live cache
+        blocks through the `flash_decode` kernel; the XLA path is kept as
+        the reference (and the meshed fallback).  `cache["index"]` may be a
+        scalar (single stream) or per-request (B,) — the stacked-serving
+        layout — and ring `pos` follows with shape (W,) or (B, W).
+
+        Contract: the new token's `positions` must equal `cache["index"]`
+        (the autoregressive invariant — the token is written at that slot).
+        The kernel derives its causal boundary from the index alone, so a
+        caller re-scoring an earlier position against a fuller cache must
+        use the XLA impl, which masks from `positions`/`kv_pos`.
+        """
         assert cache is not None, "decode mode requires a cache"
         B = q.shape[0]
         k_new = self._proj(params, x, "k", self.kv_heads, policy)
@@ -400,23 +418,58 @@ class Attention(Module):
             k_new = apply_rope(k_new, sin, cos)
 
         idx = cache["index"]
+        per_req = getattr(idx, "ndim", 0) == 1  # stacked multi-request caches
         ring = "pos" in cache
+        bidx = jnp.arange(B)
         if ring:
             W = cache["k"].shape[1]
             slot = idx % W
-            k_all = cache["k"].at[:, slot].set(k_new[:, 0])
-            v_all = cache["v"].at[:, slot].set(v_new[:, 0])
-            pos = cache["pos"].at[slot].set(idx)
-            kv_pos = jnp.broadcast_to(pos, (B, W))
+            if per_req:
+                k_all = cache["k"].at[bidx, slot].set(k_new[:, 0])
+                v_all = cache["v"].at[bidx, slot].set(v_new[:, 0])
+                pos = cache["pos"].at[bidx, slot].set(idx)  # (B, W)
+                kv_pos = pos
+            else:
+                k_all = cache["k"].at[:, slot].set(k_new[:, 0])
+                v_all = cache["v"].at[:, slot].set(v_new[:, 0])
+                pos = cache["pos"].at[slot].set(idx)
+                kv_pos = jnp.broadcast_to(pos, (B, W))
             new_cache = {"k": k_all, "v": v_all, "pos": pos, "index": idx + 1}
+            kernel_window = None  # the ring layout *is* the window
         else:
-            k_all = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, idx, axis=1)
-            v_all = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, idx, axis=1)
-            T = k_all.shape[1]
-            arange = jnp.arange(T, dtype=jnp.int32)
-            kv_pos = jnp.where(arange <= idx, arange, -1)
-            kv_pos = jnp.broadcast_to(kv_pos, (B, T))
+            T = cache["k"].shape[1]
+            if per_req:
+                k_all = cache["k"].at[bidx, idx].set(k_new[:, 0])
+                v_all = cache["v"].at[bidx, idx].set(v_new[:, 0])
+            else:
+                k_all = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k_new, idx, axis=1)
+                v_all = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v_new, idx, axis=1)
+            if kv_pos is None:
+                # fallback for single-layer callers; the model hoists this
+                # into the cache pytree so all layers share one kv_pos
+                arange = jnp.arange(T, dtype=jnp.int32)
+                kv_pos = jnp.where(arange[None] <= jnp.reshape(idx, (-1, 1)),
+                                   arange[None], -1)
+                kv_pos = jnp.broadcast_to(kv_pos, (B, T))
             new_cache = {"k": k_all, "v": v_all, "index": idx + 1}
+            kernel_window = (
+                self.window if self.mask in ("sliding", "local") else None
+            )
+
+        impl = ctx.impl("attention", "xla")
+        if impl == "pallas" and self._pallas_ok() and ctx.mesh is None:
+            from repro.kernels.flash_attention.ops import flash_decode
+
+            blk = ctx.extra.get("flash_block_kv_dec")  # woven extras win
+            out = flash_decode(
+                q, k_all, v_all, idx,
+                window=kernel_window, softcap=self.softcap,
+                block_kv=int(blk) if blk is not None else None,
+                pruned=bool(ctx.extra.get("flash_pruned", True)),
+            )
+            return out, new_cache
 
         k_all = ctx.constrain(k_all, ("batch", "kv_seq", "kv_heads", None))
         v_all = ctx.constrain(v_all, ("batch", "kv_seq", "kv_heads", None))

@@ -160,11 +160,19 @@ class RMSNorm(Module):
     def __call__(self, params, x, *, ctx: Ctx):
         with ctx.scope(self.name):
             policy = ctx.policy()
+            w = params["w"] + 1.0 if self.plus_one else params["w"]
+            if ctx.impl("norm", "xla") == "pallas":
+                # fused Pallas path (forward-only — woven for serving, where
+                # nothing differentiates through the norm); block_rows is the
+                # DSE-tuned knob TunedKernelAspect threads through
+                from repro.kernels.rmsnorm.ops import rmsnorm
+
+                y = rmsnorm(x, w, eps=self.eps,
+                            block_rows=int(ctx.extra.get("rms_block_rows", 256)))
+                return cast(y, policy.compute_dtype)
             xf = x.astype(jnp.float32)
             var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
-            y = xf * jax.lax.rsqrt(var + self.eps)
-            w = params["w"] + 1.0 if self.plus_one else params["w"]
-            y = y * w
+            y = xf * jax.lax.rsqrt(var + self.eps) * w
             ctx.tap("rms", jnp.sqrt(jnp.mean(var)))
             return cast(y, policy.compute_dtype)
 

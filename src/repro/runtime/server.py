@@ -22,7 +22,11 @@ from repro.memo.table import MemoTable
 from repro.monitor.examon import ExamonBroker, get_default_broker
 from repro.monitor.sensors import apply_wrappers
 from repro.nn.module import init_params
-from repro.runtime.steps import build_decode_step, build_prefill_step
+from repro.runtime.steps import (
+    build_decode_step,
+    build_prefill_step,
+    stack_request_caches,
+)
 from repro.versioning.libvc import LibVC
 
 
@@ -104,6 +108,66 @@ class Server:
         dt = time.perf_counter() - t0
         self.latencies.append(dt)
         self.served += 1
+        self.broker.publish(f"serve/latency/@host{jax.process_index()}", dt)
+        if self.margot is not None:
+            self.margot.observe("latency", dt)
+        if self.memo is not None:
+            self.memo.update(key, result)
+        return result
+
+    def serve_batch(self, prompts: list[np.ndarray], *,
+                    decode_tokens: int | None = None) -> list[np.ndarray]:
+        """Serve several requests — of *different* prompt lengths — as one
+        batched decode: per-request prefill (each at its own length), caches
+        stacked with per-request `index`, then a single decode loop at batch
+        size B with per-request positions.  This is the layout the
+        flash_decode kernel is built for: every request prunes its own live
+        cache blocks through the scalar-prefetched index vector.
+
+        Returns one (decode_tokens,) int array per request; greedy decode,
+        bit-identical to serving each request alone.
+        """
+        n = decode_tokens or self.cfg.decode_tokens
+        key = ("serve_batch", tuple(np.asarray(p).tobytes() for p in prompts), n)
+        if self.memo is not None and self.memo.running:
+            hit, out = self.memo.lookup(key)
+            if hit:
+                return out
+        t0 = time.perf_counter()
+        variant = self._variant()
+        state = self.woven.variant_state(
+            None if variant in (None, "__default__") else variant
+        )
+        state.extra["cache_max_len"] = self.cfg.max_cache_len
+
+        caches, first_toks = [], []
+        for p in prompts:
+            toks = jnp.asarray(p, jnp.int32).reshape(1, -1)
+            logits, cache = self.prefill_vc(variant, self.params,
+                                            {"tokens": toks})
+            caches.append(cache)
+            first_toks.append(jnp.argmax(logits[0, -1], axis=-1))
+        cache = stack_request_caches(self.woven.program.model, caches)
+
+        B = len(prompts)
+        pos = jnp.asarray([np.asarray(p).reshape(-1).shape[0] for p in prompts],
+                          jnp.int32)
+        tok = jnp.stack(first_toks).reshape(B, 1).astype(jnp.int32)
+        outs = []
+        for _ in range(n):
+            outs.append(tok)
+            logits, cache = self.decode_vc(
+                variant, self.params,
+                {"tokens": tok, "positions": pos[:, None]},
+                cache,
+            )
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            pos = pos + 1
+        stacked = np.asarray(jnp.concatenate(outs, axis=1))
+        result = [stacked[b] for b in range(B)]
+        dt = time.perf_counter() - t0
+        self.latencies.append(dt)
+        self.served += B
         self.broker.publish(f"serve/latency/@host{jax.process_index()}", dt)
         if self.margot is not None:
             self.margot.observe("latency", dt)

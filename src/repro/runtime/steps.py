@@ -150,6 +150,21 @@ def build_decode_step(woven: WovenProgram, *, mesh=None, variant: str | None = N
     return decode_step
 
 
+def stack_request_caches(model, caches: list) -> Any:
+    """Stack per-request (batch=1) prefill caches into one batched decode
+    cache with per-request `index` — the multi-request serving layout.
+
+    Models that know their cache structure (TransformerLM) stack through
+    their own `stack_caches`; the generic fallback concatenates every leaf
+    on axis 0 (correct only for flat batch-leading caches).
+    """
+    if len(caches) == 1:
+        return caches[0]
+    if hasattr(model, "stack_caches"):
+        return model.stack_caches(caches)
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *caches)
+
+
 # ---------------------------------------------------------------------------
 # Heuristics shared by launch + dryrun
 # ---------------------------------------------------------------------------

@@ -1,0 +1,364 @@
+"""The decode-path Pallas kernel (PR 3): one new token against a linear or
+ring KV cache, streaming only the live cache blocks.
+
+Covers the acceptance criteria:
+  - parity with `xla_attention` across ring/linear caches, GQA, softcap and
+    cache-wrap (index > W) cases, fp32 and bf16;
+  - `decode_schedule` exactness: exactly ceil(min(W, index+1)/block_kv)
+    blocks stream per token, never a dead block;
+  - the O(W) streamed-block bound (decode traffic independent of max_len);
+  - batched multi-request serving: `Server.serve_batch` output equals
+    per-request `serve`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.decode import (
+    decode_schedule,
+    decode_steps_for,
+    flash_decode_fwd,
+    vmem_bytes_dec,
+)
+from repro.kernels.flash_attention.kernel import cdiv
+from repro.kernels.flash_attention.ops import flash_decode
+from repro.nn.attention import (
+    Attention,
+    _mask_dense,
+    init_cache,
+    init_ring_cache,
+    xla_attention,
+)
+from repro.nn.dtypes import PolicyResolver
+from repro.nn.module import Ctx, init_params
+
+
+def _qkv_cache(key, B, H, K, D, T, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, K, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, K, D), dtype)
+    return q, k, v
+
+
+def _ref_decode(q, k, v, idx, mask_kind, window, softcap=None):
+    """xla_attention with the linear-cache decode mask (slot s = pos s)."""
+    B = q.shape[0]
+    T = k.shape[1]
+    ar = jnp.arange(T, dtype=jnp.int32)
+    kv_pos = jnp.where(ar[None] <= idx[:, None], ar[None], -1)
+    kv_pos = jnp.broadcast_to(kv_pos, (B, T))
+    mask = _mask_dense(idx[:, None], kv_pos, mask_kind, window)[:, None, None]
+    return xla_attention(q, k, v, mask, softcap=softcap)
+
+
+class TestKernelParity:
+    """flash_decode == xla_attention over the same masked cache."""
+
+    @pytest.mark.parametrize("name,HK,T,idx,window,softcap,bkv", [
+        ("causal", (4, 2), 128, [0, 63, 127], None, None, 32),
+        ("gqa8", (8, 1), 96, [5, 40, 95], None, None, 32),
+        ("mha", (4, 4), 64, [10, 30, 63], None, None, 16),
+        ("window", (4, 2), 128, [3, 64, 127], 48, None, 32),
+        ("softcap", (4, 2), 96, [7, 50, 95], None, 30.0, 32),
+        ("ragged_cache", (4, 2), 100, [0, 37, 99], 24, None, 32),
+        ("block_gt_cache", (2, 2), 48, [0, 20, 47], None, None, 512),
+    ])
+    def test_parity_fp32(self, key, name, HK, T, idx, window, softcap, bkv):
+        H, K = HK
+        q, k, v = _qkv_cache(key, len(idx), H, K, 64, T)
+        idx = jnp.asarray(idx, jnp.int32)
+        out = flash_decode(q, k, v, idx, window=window, softcap=softcap,
+                           block_kv=bkv, interpret=True)
+        ref = _ref_decode(q, k, v, idx, "sliding" if window else "causal",
+                          window, softcap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_parity_bf16(self, key):
+        q, k, v = _qkv_cache(key, 2, 4, 2, 64, 128, jnp.bfloat16)
+        idx = jnp.asarray([17, 127], jnp.int32)
+        out = flash_decode(q, k, v, idx, softcap=20.0, block_kv=32,
+                           interpret=True)
+        ref = _ref_decode(q, k, v, idx, "causal", None, 20.0)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_pruned_matches_dense(self, key):
+        """The clamp-and-elide remapping must not change the math."""
+        q, k, v = _qkv_cache(key, 3, 4, 2, 64, 160)
+        idx = jnp.asarray([4, 80, 159], jnp.int32)
+        kw = dict(window=64, block_kv=32, interpret=True)
+        out_p = flash_decode(q, k, v, idx, pruned=True, **kw)
+        out_d = flash_decode(q, k, v, idx, pruned=False, **kw)
+        np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_d),
+                                   rtol=2e-6, atol=2e-6)
+
+    def test_scalar_index_broadcasts(self, key):
+        q, k, v = _qkv_cache(key, 2, 4, 2, 64, 64)
+        out_s = flash_decode(q, k, v, jnp.asarray(31, jnp.int32),
+                             block_kv=16, interpret=True)
+        out_v = flash_decode(q, k, v, jnp.full((2,), 31, jnp.int32),
+                             block_kv=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_v))
+
+    def test_gqa_group_mapping(self, key):
+        """Each q head must attend its own kv head through the folded
+        group layout (scale kv head 1's values and check heads 2-3 move)."""
+        B, H, K, D, T = 1, 4, 2, 64, 64
+        q, k, v = _qkv_cache(key, B, H, K, D, T)
+        idx = jnp.asarray([T - 1], jnp.int32)
+        base = flash_decode(q, k, v, idx, block_kv=16, interpret=True)
+        v2 = v.at[:, :, 1].mul(100.0)
+        out = flash_decode(q, k, v2, idx, block_kv=16, interpret=True)
+        delta = jnp.max(jnp.abs(out - base), axis=(0, 1, 3))  # per q head
+        assert float(jnp.max(delta[:2])) < 1e-6  # group 0 untouched
+        assert float(jnp.min(delta[2:])) > 1.0   # group 1 scaled
+
+
+class TestModuleDecode:
+    """Attention._decode pallas impl == xla impl over real cache streams."""
+
+    POL = PolicyResolver.default("double")
+
+    def _attn(self, mask, window, softcap=None, H=4, K=2):
+        attn = Attention("attn", 64, H, K, 64, mask=mask, window=window,
+                         softcap=softcap)
+        params = init_params(attn, jax.random.PRNGKey(1), self.POL)
+        return attn, params
+
+    def _ctx(self, impl):
+        return Ctx(policies=self.POL, impls=[("*", "attention", impl)],
+                   extra={"cache_max_len": 64})
+
+    def _decode_seq(self, attn, params, cache, impl, steps, start, B):
+        outs = []
+        key = jax.random.PRNGKey(3)
+        for t in range(steps):
+            x = jax.random.normal(jax.random.fold_in(key, t), (B, 1, 64))
+            pos = jnp.full((B, 1), start + t, jnp.int32)
+            y, cache = attn(params, x, ctx=self._ctx(impl), positions=pos,
+                            mode="decode", cache=cache)
+            outs.append(np.asarray(y, np.float32))
+        return np.stack(outs), cache
+
+    def test_ring_cache_wrap(self, key):
+        """Sliding window, decode *past* the wrap point (index > W)."""
+        attn, params = self._attn("sliding", 16)
+        B = 2
+        xpre = jax.random.normal(jax.random.PRNGKey(9), (B, 24, 64))
+        _, cache0 = attn(params, xpre, ctx=self._ctx("xla"), mode="prefill")
+        assert "pos" in cache0 and cache0["k"].shape[1] == 16  # ring, W slots
+        o_x, c_x = self._decode_seq(attn, params, cache0, "xla", 20, 24, B)
+        o_p, c_p = self._decode_seq(attn, params, cache0, "pallas", 20, 24, B)
+        np.testing.assert_allclose(o_x, o_p, rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(c_x["pos"]),
+                                      np.asarray(c_p["pos"]))
+        assert int(c_p["index"]) == 44  # wrapped nearly 3x
+
+    def test_linear_cache_growth(self, key):
+        """Causal decode from an empty cache: index 0 -> 10."""
+        attn, params = self._attn("causal", None)
+        cache0 = init_cache(2, 32, 2, 64, jnp.float32)
+        o_x, _ = self._decode_seq(attn, params, cache0, "xla", 10, 0, 2)
+        o_p, c_p = self._decode_seq(attn, params, cache0, "pallas", 10, 0, 2)
+        np.testing.assert_allclose(o_x, o_p, rtol=1e-5, atol=1e-5)
+        assert int(c_p["index"]) == 10
+
+    def test_linear_cache_sliding_window(self, key):
+        """window >= prefill length keeps the cache linear — the kernel must
+        then apply the window mask itself."""
+        attn, params = self._attn("sliding", 8)
+        cache0 = init_cache(2, 40, 2, 64, jnp.float32)
+        o_x, _ = self._decode_seq(attn, params, cache0, "xla", 24, 0, 2)
+        o_p, _ = self._decode_seq(attn, params, cache0, "pallas", 24, 0, 2)
+        np.testing.assert_allclose(o_x, o_p, rtol=1e-5, atol=1e-5)
+
+    def test_per_request_index_linear(self, key):
+        """Stacked serving caches: (B,) index, every request at a different
+        fill level."""
+        attn, params = self._attn("causal", None)
+        B = 3
+        cache = init_cache(B, 32, 2, 64, jnp.float32)
+        cache["index"] = jnp.asarray([0, 7, 31], jnp.int32)
+        k = jax.random.PRNGKey(11)
+        cache["k"] = jax.random.normal(k, cache["k"].shape, jnp.float32)
+        cache["v"] = jax.random.normal(jax.random.fold_in(k, 1),
+                                       cache["v"].shape, jnp.float32)
+        x = jax.random.normal(jax.random.fold_in(k, 2), (B, 1, 64))
+        pos_in = cache["index"][:, None]
+        y_x, c_x = attn(params, x, ctx=self._ctx("xla"),
+                        positions=pos_in, mode="decode", cache=cache)
+        y_p, c_p = attn(params, x, ctx=self._ctx("pallas"),
+                        positions=pos_in, mode="decode", cache=cache)
+        np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_p),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(c_x["index"]),
+                                      np.asarray(c_p["index"]))
+
+    def test_per_request_index_ring(self, key):
+        """Ring caches at *different wrap levels* per request: build each
+        request's cache by actually decoding a B=1 stream, stack them, then
+        one batched step must match xla — including requests past the wrap
+        point."""
+        attn, params = self._attn("sliding", 12)
+        per_req_steps = (1, 5, 17)  # unwrapped / near-full / wrapped
+        caches = []
+        for steps in per_req_steps:
+            c = init_ring_cache(1, 12, 2, 64, jnp.float32)
+            _, c = self._decode_seq(attn, params, c, "xla", steps, 0, 1)
+            caches.append(c)
+        cache = {
+            "k": jnp.concatenate([c["k"] for c in caches], axis=0),
+            "v": jnp.concatenate([c["v"] for c in caches], axis=0),
+            "pos": jnp.stack([c["pos"] for c in caches], axis=0),
+            "index": jnp.stack([c["index"] for c in caches]),
+        }
+        B = len(per_req_steps)
+        x = jax.random.normal(jax.random.PRNGKey(21), (B, 1, 64))
+        pos_in = cache["index"][:, None]
+        y_x, c_x = attn(params, x, ctx=self._ctx("xla"),
+                        positions=pos_in, mode="decode", cache=cache)
+        y_p, c_p = attn(params, x, ctx=self._ctx("pallas"),
+                        positions=pos_in, mode="decode", cache=cache)
+        np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_p),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(c_x["pos"]),
+                                      np.asarray(c_p["pos"]))
+
+
+class TestDecodeSchedule:
+    """The numpy oracle: exact live-block streaming, never a dead block."""
+
+    @pytest.mark.parametrize("T,bkv", [(128, 32), (512, 128), (100, 32),
+                                       (2048, 512)])
+    def test_exact_block_count(self, T, bkv):
+        """Acceptance: exactly ceil(min(W, index+1)/block_kv) blocks per
+        token for a ring/linear cache of W slots."""
+        for index in (0, 1, bkv - 1, bkv, T // 2, T - 1, T, 3 * T):
+            sched = decode_schedule(T, index, bkv)
+            assert len(sched) == max(1, cdiv(min(T, index + 1), bkv)), \
+                (T, index, bkv)
+            assert sched == list(range(len(sched)))
+
+    def test_no_dead_block_streamed(self):
+        """Every streamed block must contain at least one live slot; every
+        live slot must be covered."""
+        T, bkv = 256, 32
+        for index in (0, 5, 31, 32, 100, 255):
+            for window in (None, 40, 200):
+                sched = decode_schedule(T, index, bkv, window=window)
+                live = min(T, index + 1)
+                lo_slot = 0 if window is None else max(0, index + 1 - window)
+                for ik in sched:
+                    k0, k1 = ik * bkv, min((ik + 1) * bkv, T) - 1
+                    assert k0 < live, (index, window, ik)  # causal-live
+                    assert k1 >= lo_slot, (index, window, ik)  # window-live
+                covered = {s for ik in sched
+                           for s in range(ik * bkv, min((ik + 1) * bkv, T))}
+                want = set(range(lo_slot, live))
+                assert want <= covered, (index, window, want - covered)
+
+    def test_dense_streams_everything(self):
+        assert decode_schedule(256, 3, 64, pruned=False) == [0, 1, 2, 3]
+
+    def test_steps_bounds_schedule(self):
+        """The pruned kernel's *grid* is decode_steps_for long, so the bound
+        must hold for EVERY index — exhaustive over small configs."""
+        for T, bkv, w in ((256, 64, None), (256, 64, 100), (100, 32, 24),
+                          (256, 64, 64), (256, 64, 65), (96, 32, 33)):
+            steps = decode_steps_for(T, bkv, w)
+            for index in range(0, 3 * T):
+                assert len(decode_schedule(T, index, bkv, window=w)) <= steps, \
+                    (T, bkv, w, index)
+
+    def test_o_w_bound(self):
+        """Decode traffic is O(W), independent of max_len: a ring cache of W
+        slots streams ceil(W/bkv) blocks regardless of how long the stream
+        has run, and a full linear sweep to max_len streams ~max_len/bkv
+        *total* — the pruned per-token count never exceeds the window's."""
+        bkv = 128
+        for W in (128, 512, 2048):
+            ring_blocks = len(decode_schedule(W, 10 ** 9, bkv))
+            assert ring_blocks == cdiv(W, bkv)  # O(W), not O(stream length)
+        # linear cache under a window: per-token traffic bounded by the
+        # window, not by the 8k cache
+        T, W = 8192, 512
+        worst = max(
+            len(decode_schedule(T, idx, bkv, window=W))
+            for idx in range(0, T, 97)
+        )
+        assert worst <= cdiv(W, bkv) + 1  # +1: window straddles a block edge
+        assert worst * bkv < T / 4       # far below the dense O(max_len)
+
+    def test_kernel_streams_only_scheduled_blocks(self, key):
+        """Poison the cache outside the scheduled blocks: the kernel output
+        must not change — those blocks are never part of the math (their
+        DMAs are elided on TPU; interpret mode at least proves masking)."""
+        B, H, K, D, T, bkv = 1, 4, 2, 64, 128, 32
+        q, k, v = _qkv_cache(key, B, H, K, D, T)
+        index = jnp.asarray([40], jnp.int32)
+        sched = decode_schedule(T, 40, bkv)
+        out = flash_decode(q, k, v, index, block_kv=bkv, interpret=True)
+        dead = [ik for ik in range(cdiv(T, bkv)) if ik not in sched]
+        assert dead, "test needs at least one dead block"
+        for ik in dead:
+            sl = slice(ik * bkv, (ik + 1) * bkv)
+            k = k.at[:, sl].set(jnp.nan)
+            v = v.at[:, sl].set(jnp.nan)
+        out2 = flash_decode(q, k, v, index, block_kv=bkv, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+class TestVmemBytesDec:
+    def test_monotone_in_block(self):
+        assert vmem_bytes_dec(4, 512, 128) > vmem_bytes_dec(4, 128, 128)
+
+    def test_group_floor(self):
+        """Sub-8 groups pad to the TPU sublane floor."""
+        assert vmem_bytes_dec(1, 256, 128) == vmem_bytes_dec(8, 256, 128)
+        assert vmem_bytes_dec(16, 256, 128) > vmem_bytes_dec(8, 256, 128)
+
+    def test_default_fits_vmem(self):
+        assert vmem_bytes_dec(8, 512, 256) < 16 * 2 ** 20
+
+
+class TestBatchedServer:
+    """serve_batch == per-request serve (the runtime-layer deliverable)."""
+
+    def _server(self, arch):
+        from repro.configs.base import SHAPES
+        from repro.core.program import Program
+        from repro.launch.weave import default_weave
+        from repro.runtime.server import Server, ServerConfig
+
+        program = Program.from_arch(arch, kind="serve", reduced=True)
+        woven = default_weave(program, SHAPES["prefill_32k"], {})
+        return Server(woven, ServerConfig(max_cache_len=24, decode_tokens=4))
+
+    @pytest.mark.parametrize("arch", ["yi-6b", "mixtral-8x22b", "rwkv6-3b"])
+    def test_batched_equals_per_request(self, arch):
+        srv = self._server(arch)
+        prompts = [np.ones((5,), np.int32),
+                   (np.arange(1, 9) % 50).astype(np.int32),
+                   np.full((3,), 7, np.int32)]
+        batched = srv.serve_batch(prompts)
+        assert len(batched) == 3
+        for p, got in zip(prompts, batched):
+            solo = srv.serve(p[None])[0]
+            np.testing.assert_array_equal(got, solo)
+
+    def test_memoized_batch(self):
+        srv = self._server("yi-6b")
+        from repro.memo.table import MemoTable
+
+        srv.memo = MemoTable(size=8)
+        prompts = [np.ones((4,), np.int32), np.zeros((6,), np.int32)]
+        a = srv.serve_batch(prompts)
+        b = srv.serve_batch(prompts)
+        assert srv.memo.hits >= 1
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)

@@ -209,6 +209,75 @@ class TestBackwardParity:
                                        rtol=2e-5, atol=2e-5)
 
 
+class TestGroupLocalDkv:
+    """The dk/dv pass accumulates group-locally: its HBM write is the true
+    (B, K, T, D) gradient pair — O(S·K·D) — never a per-q-head (B, H, T, D)
+    transient (the PR 3 satellite; was the recorded PR 2 follow-up)."""
+
+    def _captured_bwd_out_shapes(self, key, H, K, monkeypatch):
+        import repro.kernels.flash_attention.kernel as kmod
+
+        captured = []
+        real = kmod.pl.pallas_call
+
+        def spy(kernel, *args, **kw):
+            out_shape = kw.get("out_shape")
+            if (isinstance(out_shape, list) and len(out_shape) == 2
+                    and all(len(s.shape) == 4 for s in out_shape)):
+                captured.append([tuple(s.shape) for s in out_shape])  # dk, dv
+            return real(kernel, *args, **kw)
+
+        monkeypatch.setattr(kmod.pl, "pallas_call", spy)
+        B, S, D = 1, 128, 64
+        ks = jax.random.split(key, 4)
+        q = jax.random.normal(ks[0], (B, H, S, D))
+        k = jax.random.normal(ks[1], (B, K, S, D))
+        v = jax.random.normal(ks[2], (B, K, S, D))
+        do = jax.random.normal(ks[3], (B, H, S, D))
+        out, lse = flash_attention_fwd(q, k, v, causal=True, block_q=64,
+                                       block_kv=64, interpret=True,
+                                       return_lse=True)
+        grads = flash_attention_bwd(q, k, v, out, lse, do, causal=True,
+                                    block_q=64, block_kv=64, interpret=True)
+        return captured, grads
+
+    def test_dkv_write_volume_is_kv_heads_sized(self, key, monkeypatch):
+        """With a 4:1 GQA group, the dk/dv HBM write must be 4x smaller than
+        the per-q-head layout."""
+        H, K = 8, 2
+        captured, grads = self._captured_bwd_out_shapes(key, H, K, monkeypatch)
+        assert len(captured) == 1, "expected exactly one dk/dv pallas_call"
+        dk_shape, dv_shape = captured[0]
+        B, S, D = 1, 128, 64
+        assert dk_shape == (B, K, S, D), dk_shape   # K heads, not H
+        assert dv_shape == (B, K, S, D), dv_shape
+        written = 2 * np.prod(dk_shape)             # dk + dv fp32 elements
+        per_q_head = 2 * B * H * S * D              # the old transient
+        assert written * (H // K) == per_q_head     # exactly G-fold smaller
+        assert grads[1].shape == (B, K, S, D)
+        assert grads[2].shape == (B, K, S, D)
+
+    def test_group_local_grads_match_reference(self, key):
+        """Group-local accumulation must equal the reference group-sum."""
+        H, K, S, D = 8, 2, 192, 64
+        q, k, v = _qkv(key, 2, S, H, K, D)
+        g = jax.random.normal(jax.random.fold_in(key, 5), q.shape)
+
+        def loss_pallas(q, k, v):
+            out = flash_attention(q, k, v, causal=True, window=64,
+                                  block_q=64, block_kv=64, interpret=True)
+            return jnp.sum(out * g)
+
+        def loss_ref(q, k, v):
+            return jnp.sum(attention_ref(q, k, v, causal=True, window=64) * g)
+
+        got = jax.grad(loss_pallas, argnums=(1, 2))(q, k, v)
+        want = jax.grad(loss_ref, argnums=(1, 2))(q, k, v)
+        for name, a, b in zip(("dk", "dv"), got, want):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-4, err_msg=name)
+
+
 class TestQSchedule:
     """The transposed (dk/dv) schedule: exact pruning, and bwd HBM traffic
     stays O(S·W) for windowed attention."""

@@ -14,7 +14,10 @@ from repro.autotune.kernel_tuner import (
     TunerCache,
     config_vmem_bytes,
     design_space,
+    flash_decode_signature,
     flash_signature,
+    rmsnorm_signature,
+    tuned_decode_blocks,
     tuned_flash_blocks,
 )
 
@@ -85,12 +88,25 @@ class TestDesignSpace:
     def test_other_kernels_have_spaces(self):
         for kernel, shape in (("rwkv6", (2, 512, 4, 64)),
                               ("rglru", (2, 512, 256)),
-                              ("rmsnorm", (1024, 512))):
+                              ("rmsnorm", (1024, 512)),
+                              ("flash_decode", (4, 2048, 8, 2, 128))):
             sig = KernelSignature(kernel=kernel, shape=shape)
             space = design_space(sig)
             assert space and all(vals for vals in space.values())
             knobs = {k: v[0] for k, v in space.items()}
             assert 0 < config_vmem_bytes(sig, knobs) <= DEFAULT_VMEM_BUDGET
+
+    def test_decode_space_capped_by_cache_len(self):
+        sig = flash_decode_signature(1, 256, 4, 2, 64)
+        space = design_space(sig)
+        assert max(space["block_kv_dec"]) <= 256
+
+    def test_decode_signature_distinct_from_flash(self):
+        dec = flash_decode_signature(1, 512, 4, 2, 64, window=128)
+        fwd = flash_signature((1, 512, 4, 64), 2, "bfloat16", causal=True,
+                              window=128)
+        assert dec.key() != fwd.key()
+        assert dec.gqa == 2
 
 
 def vmem_of(sig, bq, bkv):
@@ -291,6 +307,101 @@ class TestWiring:
         assert woven.knobs["wkv_chunk"].default == 64
         # rwkv programs have no attention joinpoints: no flash extras
         assert "flash_block_q" not in woven.state.extra
+
+    def test_decode_block_threaded_to_woven_program(self, tmp_path,
+                                                    monkeypatch):
+        """The flash_decode tuner space must land in the `flash_block_kv_dec`
+        extra Attention._decode reads, with its own knob."""
+        from repro.core.program import Program
+        from repro.core.strategies.kernels import TunedKernelAspect
+        from repro.core.weaver import Weaver
+
+        path = str(tmp_path / "dec.json")
+        monkeypatch.setenv("REPRO_TUNER_CACHE", path)
+        program = Program.from_arch("gemma-2b", reduced=True)
+        aspect = TunedKernelAspect(2, 256, dtype="bfloat16", cache_len=512)
+        sig = aspect.decode_signature(program.cfg)
+        assert sig.kernel == "flash_decode"
+
+        def measure(**kn):  # prefer block_kv_dec=256
+            return 1.0 + abs(kn["block_kv_dec"] - 256)
+
+        KernelTuner(path).tune(sig, measure)
+        woven = Weaver(program).weave([aspect])
+        assert woven.state.extra["flash_block_kv_dec"] == 256
+        assert "flash_block_kv_dec" in woven.knobs
+        assert woven.knobs["flash_block_kv_dec"].default == 256
+
+    def test_decode_signature_ring_clamps_to_window(self):
+        """Windowed archs serve from a ring cache of W slots: the decode
+        signature's cache length is the window and the window field clears
+        (the ring layout *is* the window)."""
+        from repro.core.program import Program
+        from repro.core.strategies.kernels import TunedKernelAspect
+
+        program = Program.from_arch("mixtral-8x22b", reduced=True)
+        aspect = TunedKernelAspect(2, 256, cache_len=4096)
+        sig = aspect.decode_signature(program.cfg)
+        assert sig.shape[1] == program.cfg.attn_window
+        assert sig.window is None
+
+    def test_ops_decode_lookup_uses_env_cache(self, tmp_path, monkeypatch):
+        path = str(tmp_path / "dec_env.json")
+        monkeypatch.setenv("REPRO_TUNER_CACHE", path)
+        sig = flash_decode_signature(2, 512, 4, 2, 64, "float32")
+
+        def measure(**kn):
+            return 1.0 + abs(kn["block_kv_dec"] - 128)
+
+        KernelTuner(path).tune(sig, measure)
+        got = tuned_decode_blocks((2, 1, 4, 64), 512, 2, "float32")
+        assert got == {"block_kv_dec": 128}
+        assert tuned_decode_blocks((2, 1, 4, 64), 1024, 2, "float32") == {}
+
+    def test_rmsnorm_block_rows_threaded_to_woven_program(self, tmp_path,
+                                                          monkeypatch):
+        """The rmsnorm tuner space must land in the `rms_block_rows` extra
+        the RMSNorm pallas weave path reads (ROADMAP tuner-coverage item)."""
+        from repro.core.program import Program
+        from repro.core.strategies.kernels import TunedKernelAspect
+        from repro.core.weaver import Weaver
+
+        path = str(tmp_path / "rms.json")
+        monkeypatch.setenv("REPRO_TUNER_CACHE", path)
+        program = Program.from_arch("gemma-2b", reduced=True)
+        aspect = TunedKernelAspect(2, 256, dtype="bfloat16")
+        sig = aspect.rmsnorm_signature(program.cfg)
+        assert sig.shape == (2 * 256, program.cfg.d_model)
+
+        def measure(**kn):  # prefer block_rows=128
+            return 1.0 + abs(kn["block_rows"] - 128)
+
+        KernelTuner(path).tune(sig, measure)
+        woven = Weaver(program).weave([aspect])
+        assert woven.state.extra["rms_block_rows"] == 128
+        assert "rms_block_rows" in woven.knobs
+
+    def test_rmsnorm_weave_path_matches_xla(self, tmp_path, monkeypatch):
+        """A woven pallas norm impl + tuned block_rows must reproduce the
+        XLA RMSNorm bit-for-bit at fp32."""
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.nn.blocks import RMSNorm
+        from repro.nn.dtypes import PolicyResolver
+        from repro.nn.module import Ctx, init_params
+
+        pol = PolicyResolver.default("double")
+        norm = RMSNorm("norm", 128)
+        params = init_params(norm, jax.random.PRNGKey(0), pol)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 128))
+        y_x = norm(params, x, ctx=Ctx(policies=pol))
+        y_p = norm(params, x, ctx=Ctx(
+            policies=pol, impls=[("*", "norm", "pallas")],
+            extra={"rms_block_rows": 16}))
+        np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_p),
+                                   rtol=1e-6, atol=1e-6)
 
     def test_rglru_blocks_threaded_to_woven_program(self, tmp_path,
                                                     monkeypatch):
