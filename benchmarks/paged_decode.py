@@ -1,0 +1,176 @@
+"""Paged KV-cache pool bench (the PR 4 perf data point).
+
+One batched serving decode step over a *mixed-length* request batch —
+64 / 512 / 4096 tokens in one batch — comparing the paged pool layout
+(block-table flash_decode over shared pages) against the dense stacked
+layout `stack_request_caches` builds (every request padded to max_len):
+
+  HBM allocation    paged pool = live pages only (sum of per-request
+                    ceil(len/page_size) pages) vs dense stacked =
+                    batch x max_len — the capacity win that lets short
+                    requests ride along with long ones for free
+  streamed bytes    per-step KV traffic from the `decode_schedule` /
+                    `paged_decode_schedule` oracles: the paged kernel
+                    streams sum_i ceil(live_i/block_kv) blocks — scaling
+                    with the *sum of live lengths*, never batch x max_len
+                    (the dense-XLA sweep's cost)
+  latency           paged flash_decode vs dense-stacked flash_decode vs
+                    the dense-XLA full-cache sweep (interpret-mode Pallas
+                    off-TPU)
+  parity            paged output is bit-identical to the dense stacked
+                    kernel at the same effective block
+
+Merges a `paged_decode` section into artifacts/bench/BENCH_kernels.json;
+runnable standalone via `benchmarks/run.py --only paged_decode`.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.decode import (
+    decode_schedule,
+    page_block_kv,
+    paged_decode_schedule,
+)
+from repro.kernels.flash_attention.kernel import cdiv
+from repro.kernels.flash_attention.ops import flash_decode
+from repro.nn.attention import xla_attention
+from repro.runtime.pages import build_linear_pool
+
+LENGTHS = (64, 512, 4096)  # one batch, wildly mixed request lengths
+MAX_LEN = 4096
+PAGE_SIZE = 256
+BLOCK_KV = 256
+
+
+def _time(fn, reps=2):
+    out = jax.block_until_ready(fn())  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps, out
+
+
+def run(artifacts: str, *, quick: bool = False) -> list[str]:
+    rows: list[str] = []
+    B = len(LENGTHS)
+    H, K, D = (4, 2, 64) if quick else (8, 2, 64)
+    reps = 1 if quick else 2
+    kv_unit = K * D * 2 * 4  # K+V bytes per cache slot, fp32
+
+    ks = jax.random.split(jax.random.PRNGKey(13), 1 + 2 * B)
+    q = jax.random.normal(ks[0], (B, 1, H, D), jnp.float32)
+    k_list = [jax.random.normal(ks[1 + i], (L, K, D), jnp.float32)
+              for i, L in enumerate(LENGTHS)]
+    v_list = [jax.random.normal(ks[1 + B + i], (L, K, D), jnp.float32)
+              for i, L in enumerate(LENGTHS)]
+    index = jnp.asarray([L - 1 for L in LENGTHS], jnp.int32)
+
+    # dense stacked layout: every request zero-padded to max_len
+    k_dense = jnp.stack([
+        jnp.pad(k, ((0, MAX_LEN - k.shape[0]), (0, 0), (0, 0)))
+        for k in k_list
+    ])
+    v_dense = jnp.stack([
+        jnp.pad(v, ((0, MAX_LEN - v.shape[0]), (0, 0), (0, 0)))
+        for v in v_list
+    ])
+
+    # paged layout: shared pool, only live pages allocated
+    pk, pv, tables, pool = build_linear_pool(k_list, v_list, PAGE_SIZE,
+                                             max_len=MAX_LEN)
+    bkv = page_block_kv(BLOCK_KV, PAGE_SIZE)
+
+    # -- HBM allocation: live pages vs batch x max_len ------------------------
+    hbm_stacked = B * MAX_LEN * kv_unit
+    hbm_paged = pool.live_pages * PAGE_SIZE * kv_unit
+
+    # -- per-step streamed KV bytes (oracle-exact) ----------------------------
+    scheds = [decode_schedule(MAX_LEN, L - 1, bkv) for L in LENGTHS]
+    paged_scheds = [
+        paged_decode_schedule(MAX_LEN, L - 1, bkv, PAGE_SIZE,
+                              np.asarray(tables[i]))
+        for i, L in enumerate(LENGTHS)
+    ]
+    assert [len(s) for s in scheds] == [len(s) for s in paged_scheds]
+    streamed_paged = sum(len(s) for s in paged_scheds) * bkv * kv_unit
+    streamed_dense_xla = B * MAX_LEN * kv_unit
+    sum_live = sum(LENGTHS)
+    # the acceptance bound: paged traffic is the block-rounded sum of live
+    # lengths — never the dense batch x max_len sweep
+    assert streamed_paged == sum(
+        cdiv(L, bkv) * bkv for L in LENGTHS) * kv_unit
+    assert streamed_paged < streamed_dense_xla
+
+    # -- latency + parity -----------------------------------------------------
+    t_paged, out_paged = _time(
+        lambda: flash_decode(q, pk, pv, index, tables=tables, kv_len=MAX_LEN,
+                             block_kv=bkv), reps)
+    t_stacked, out_stacked = _time(
+        lambda: flash_decode(q, k_dense, v_dense, index, block_kv=bkv), reps)
+    ar = jnp.arange(MAX_LEN, dtype=jnp.int32)
+    mask = (ar[None] <= index[:, None])[:, None, None, None]
+
+    def dense_xla():
+        return xla_attention(q, k_dense, v_dense, mask)
+
+    t_xla, out_xla = _time(dense_xla, reps)
+    parity_err = float(jnp.max(jnp.abs(out_paged - out_stacked)))
+    xla_err = float(jnp.max(jnp.abs(out_paged - out_xla)))
+
+    section = {
+        "mixed": {
+            "lengths": list(LENGTHS),
+            "max_len": MAX_LEN,
+            "batch": B,
+            "page_size": PAGE_SIZE,
+            "block_kv": bkv,
+            "hbm_stacked_bytes": hbm_stacked,
+            "hbm_paged_bytes": hbm_paged,
+            "hbm_ratio": hbm_paged / hbm_stacked,
+            "live_pages": pool.live_pages,
+            "pool_pages": pool.num_pages,
+            "streamed_bytes_paged": streamed_paged,
+            "streamed_bytes_dense_xla": streamed_dense_xla,
+            "streamed_ratio": streamed_paged / streamed_dense_xla,
+            "sum_live_ratio": sum_live / (B * MAX_LEN),
+            "paged_decode_s": t_paged,
+            "stacked_decode_s": t_stacked,
+            "dense_xla_s": t_xla,
+            "parity_err_vs_stacked_kernel": parity_err,
+            "parity_err_vs_xla": xla_err,
+        },
+        "per_request_blocks": {
+            f"len{L}": {
+                "live_blocks": len(scheds[i]),
+                "dense_blocks": cdiv(MAX_LEN, bkv),
+                "pages": cdiv(L, PAGE_SIZE),
+                "dense_pages_equiv": cdiv(MAX_LEN, PAGE_SIZE),
+            }
+            for i, L in enumerate(LENGTHS)
+        },
+    }
+
+    rows.append(
+        f"paged_decode_mixed,{t_paged*1e6:.0f},"
+        f"hbm_ratio={hbm_paged/hbm_stacked:.3f};"
+        f"streamed_ratio={streamed_paged/streamed_dense_xla:.3f};"
+        f"err={parity_err:.1e}"
+    )
+    print(f"  paged_decode[{'/'.join(map(str, LENGTHS))}]: pool "
+          f"{hbm_paged/2**20:.1f}MiB vs stacked {hbm_stacked/2**20:.1f}MiB "
+          f"({hbm_paged/hbm_stacked:.1%}), streamed "
+          f"{streamed_paged/streamed_dense_xla:.1%} of the dense sweep "
+          f"(sum-live {sum_live/(B*MAX_LEN):.1%}), parity {parity_err:.1e}, "
+          f"paged {t_paged*1e3:.1f}ms vs stacked {t_stacked*1e3:.1f}ms vs "
+          f"XLA {t_xla*1e3:.1f}ms")
+
+    from benchmarks.kernels import merge_bench_sections
+
+    merge_bench_sections(artifacts, {"paged_decode": section})
+    return rows

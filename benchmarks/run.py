@@ -12,6 +12,7 @@ BENCH_kernels.json: pruned-vs-dense grid + tuned-vs-default blocks).
   kernels            (kernels)    Pallas pruning/tuning + analytic VMEM/AI
   flash_bwd          (kernels)    fused pruned bwd vs reference VJP
   flash_decode       (kernels)    pruned decode kernel vs dense-XLA cache sweep
+  paged_decode       (kernels)    paged pool vs dense-stacked mixed-length batch
   roofline_report    §Roofline    table from dry-run artifacts
 
 Flags:
@@ -31,7 +32,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
-QUICK_MODULES = ("weaving", "kernels", "flash_bwd", "flash_decode")
+QUICK_MODULES = ("weaving", "kernels", "flash_bwd", "flash_decode",
+                 "paged_decode")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -50,13 +52,15 @@ def main(argv: list[str] | None = None) -> None:
         flash_decode,
         kernels,
         navigation_autotune,
+        paged_decode,
         precision_versions,
         roofline_report,
         weaving,
     )
 
     modules = [weaving, precision_versions, kernels, flash_bwd, flash_decode,
-               betweenness, docking_dse, navigation_autotune, roofline_report]
+               paged_decode, betweenness, docking_dse, navigation_autotune,
+               roofline_report]
     if args.only:
         names = {n.strip() for n in args.only.split(",")}
         modules = [m for m in modules
@@ -65,8 +69,8 @@ def main(argv: list[str] | None = None) -> None:
         if not modules:
             valid = ", ".join(m.__name__.split(".")[-1] for m in
                               (weaving, precision_versions, kernels,
-                               flash_bwd, flash_decode, betweenness,
-                               docking_dse, navigation_autotune,
+                               flash_bwd, flash_decode, paged_decode,
+                               betweenness, docking_dse, navigation_autotune,
                                roofline_report))
             ap.error(f"--only {args.only!r} matches no benchmark; "
                      f"valid names: {valid}")

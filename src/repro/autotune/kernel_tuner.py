@@ -24,7 +24,14 @@ keys — consumers (`ops._resolve_blocks`, `TunedKernelAspect`) fall back to
 the forward blocks.
 
 Tuning is always *explicit* (benchmarks, launch tooling, tests); lookups on
-the hot path are cheap dict reads and never trigger measurement.
+the hot path are cheap dict reads and never trigger measurement.  The one
+sanctioned *implicit* write path is `refine_from_runtime`: serving traffic's
+observed latencies (mARGOt error coefficients) rescale the cached operating
+points and re-select the knobs under the adjusted constraints — the paper's
+"runtime observations as feedback information" closed over the persistent
+knowledge base.  The `paged_decode` space adds the serving pool geometry:
+`page_size` (allocation quantum of the paged KV cache) jointly explored
+with `block_kv_dec` (clamped to a page divisor).
 """
 
 from __future__ import annotations
@@ -37,8 +44,8 @@ import uuid
 from typing import Any, Callable, Mapping
 
 from repro.autotune.dse import Lat
-from repro.autotune.margot import KnowledgeBase, OperatingPoint
-from repro.kernels.flash_attention.decode import vmem_bytes_dec
+from repro.autotune.margot import LE, Goal, KnowledgeBase, Margot, OperatingPoint, State
+from repro.kernels.flash_attention.decode import page_block_kv, vmem_bytes_dec
 from repro.kernels.flash_attention.kernel import cdiv, vmem_bytes, vmem_bytes_bwd
 
 DEFAULT_VMEM_BUDGET = 16 * 2**20  # bytes per TPU core
@@ -103,6 +110,22 @@ def flash_decode_signature(batch: int, cache_len: int, n_heads: int,
     )
 
 
+def paged_decode_signature(batch: int, cache_len: int, n_heads: int,
+                           kv_heads: int, head_dim: int, dtype="bfloat16",
+                           *, window: int | None = None) -> KernelSignature:
+    """Block-table decode against a shared page pool.  Its own kernel space
+    because the pool geometry adds a knob: `page_size` fixes the physical
+    block granularity (allocation quantum AND the ceiling of the streamed
+    block — `block_kv_dec` is clamped to a divisor of it, the knob
+    interaction the DSE explores jointly)."""
+    return KernelSignature(
+        kernel="paged_decode",
+        shape=(batch, cache_len, n_heads, kv_heads, head_dim),
+        dtype=str(getattr(dtype, "name", dtype)), causal=True,
+        window=window, gqa=n_heads // max(kv_heads, 1),
+    )
+
+
 def rmsnorm_signature(rows: int, dim: int, dtype="bfloat16") -> KernelSignature:
     """Fused RMSNorm problem: (rows, d) with rows = batch * seq."""
     return KernelSignature(
@@ -142,6 +165,10 @@ KERNEL_SPACES: dict[str, dict[str, tuple[int, ...]]] = {
         "block_kv_bwd": (128, 256, 512, 1024),
     },
     "flash_decode": {"block_kv_dec": (128, 256, 512, 1024)},
+    "paged_decode": {
+        "page_size": (64, 128, 256, 512),
+        "block_kv_dec": (128, 256, 512, 1024),
+    },
     "rwkv6": {"chunk": (16, 32, 64, 128)},
     "rglru": {"block_d": (128, 256, 512, 1024), "chunk": (64, 128, 256)},
     "rmsnorm": {"block_rows": (64, 128, 256, 512)},
@@ -168,6 +195,13 @@ def config_vmem_bytes(sig: KernelSignature, knobs: Mapping[str, int]) -> int:
             H // max(K, 1), min(int(knobs["block_kv_dec"]), max(T, 128)),
             D, b, kv_dtype_bytes=b,
         )
+    if sig.kernel == "paged_decode":
+        B, T, H, K, D = sig.shape
+        ps = int(knobs["page_size"])
+        eff = page_block_kv(int(knobs["block_kv_dec"]), ps)
+        return vmem_bytes_dec(
+            H // max(K, 1), min(eff, max(T, 128)), D, b, kv_dtype_bytes=b,
+        ) + 4 * cdiv(max(T, 1), ps)  # + the SMEM block-table row
     if sig.kernel == "rwkv6":
         B, S, H, C = sig.shape
         L = int(knobs["chunk"])
@@ -195,6 +229,12 @@ def design_space(sig: KernelSignature, *,
             space[name] = [v for v in space[name] if v <= max(S, 128)]
     elif sig.kernel == "flash_decode":
         T = sig.shape[1]
+        space["block_kv_dec"] = [
+            v for v in space["block_kv_dec"] if v <= max(T, 128)
+        ]
+    elif sig.kernel == "paged_decode":
+        T = sig.shape[1]
+        space["page_size"] = [v for v in space["page_size"] if v <= max(T, 64)]
         space["block_kv_dec"] = [
             v for v in space["block_kv_dec"] if v <= max(T, 128)
         ]
@@ -444,6 +484,46 @@ def _default_measure(sig: KernelSignature) -> Callable[..., float]:
 
         return measure
 
+    if sig.kernel == "paged_decode":
+        from repro.kernels.flash_attention.ops import flash_decode
+
+        B, T, H, K, D = sig.shape
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(ks[0], (B, 1, H, D), dt)
+        kv_new = jax.random.normal(ks[3], (B, 1, K, D), dt)
+        index = jnp.full((B,), T - 1, jnp.int32)  # worst case: full cache
+
+        def measure(**knobs):
+            # a full *paged* decode step at the knob's pool geometry: the
+            # page write + block-table-resolved attention, so the DSE sees
+            # the page_size x block_kv_dec interaction end to end.
+            ps = int(knobs["page_size"])
+            nb = cdiv(T, ps)
+            pool = B * nb
+            k = jax.random.normal(ks[1], (pool, ps, K, D), dt)
+            v = jax.random.normal(ks[2], (pool, ps, K, D), dt)
+            tables = jnp.arange(pool, dtype=jnp.int32).reshape(B, nb)
+
+            @jax.jit
+            def step(q, k, v, kv_new, index, tables):
+                bidx = jnp.arange(B)
+                page = tables[bidx, index // ps]
+                k = k.at[page, index % ps].set(kv_new[:, 0])
+                v = v.at[page, index % ps].set(kv_new[:, 0])
+                return flash_decode(
+                    q, k, v, index, window=sig.window,
+                    tables=tables, kv_len=T,
+                    block_kv=int(knobs["block_kv_dec"]),
+                )
+
+            args = (q, k, v, kv_new, index, tables)
+            jax.block_until_ready(step(*args))  # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(step(*args))
+            return time.perf_counter() - t0
+
+        return measure
+
     if sig.kernel == "rwkv6":
         from repro.kernels.rwkv6.ops import wkv_pallas
 
@@ -544,3 +624,105 @@ def tuned_decode_blocks(q_shape, cache_len: int, kv_heads: int, dtype, *,
         return default_tuner().lookup(sig) or {}
     except Exception:  # pragma: no cover - never break the kernel call
         return {}
+
+
+def tuned_paged_blocks(q_shape, cache_len: int, kv_heads: int, dtype, *,
+                       window: int | None = None) -> dict[str, int]:
+    """Non-failing paged-decode knob lookup: {} when untuned.  Falls back
+    to the un-paged `flash_decode` entry's block so a pool built before
+    paged tuning ran still streams tuned-size blocks."""
+    try:
+        B, _, H, D = q_shape
+        sig = paged_decode_signature(B, cache_len, H, kv_heads, D, dtype,
+                                     window=window)
+        knobs = default_tuner().lookup(sig)
+        if knobs:
+            return knobs
+        return tuned_decode_blocks(q_shape, cache_len, kv_heads, dtype,
+                                   window=window)
+    except Exception:  # pragma: no cover - never break the kernel call
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# Runtime feedback: mARGOt observations refine the persisted DSE priors
+# ---------------------------------------------------------------------------
+
+
+def refine_from_runtime(
+    sig: KernelSignature,
+    observed: Mapping[str, float],
+    *,
+    tuner: KernelTuner | None = None,
+    latency_budget: float | None = None,
+    objective_knob: str | None = None,
+) -> dict[str, int] | None:
+    """Fold serving-time observations back into the persisted tuner cache.
+
+    This is the paper's MAPE-K loop closed over the *persistent* knowledge
+    base: the cached DSE rows become a mARGOt KnowledgeBase, the observed
+    metric on the currently selected operating point yields an error
+    coefficient (observed / expected) that rescales every expectation, and
+    the operating point is re-selected — maximize the objective knob (by
+    default the entry's largest-granularity knob, e.g. `page_size`:
+    fewer, larger pages mean smaller tables and less fragmentation)
+    subject to the adjusted latency staying under `latency_budget` and the
+    analytic VMEM model under the tuner's budget.  The *adjusted* operating
+    points and the re-selected knobs are persisted, so the next process
+    serving this signature starts from traffic-refined priors.
+
+    Returns the re-selected knobs, or None when the signature was never
+    tuned (runtime feedback refines priors; it does not create them).
+    """
+    tuner = tuner or default_tuner()
+    entry = tuner.cache.get(sig.key())
+    if entry is None or not entry.get("ops"):
+        return None
+    if objective_knob is None:
+        names = list(KERNEL_SPACES.get(sig.kernel, entry["knobs"]))
+        objective_knob = names[0]
+
+    ops = []
+    for row in entry["ops"]:
+        metrics = {m: tuple(v) for m, v in row["metrics"].items()}
+        metrics[f"knob:{objective_knob}"] = (
+            float(row["knobs"].get(objective_knob, 0)), 0.0)
+        ops.append(OperatingPoint(knobs=dict(row["knobs"]), metrics=metrics))
+    state = State("serve", objective_metric=f"knob:{objective_knob}",
+                  maximize=True)
+    state.subject_to(Goal("vmem", "vmem_bytes", LE, float(tuner.vmem_budget)))
+    if latency_budget is not None:
+        state.subject_to(Goal("latency", "latency_s", LE,
+                              float(latency_budget)))
+    margot = Margot(KnowledgeBase(ops), [state])
+    current_key = tuple(sorted(entry["knobs"].items()))
+    margot.current = next(
+        (op for op in ops if op.key() == current_key), ops[0])
+    for metric, value in observed.items():
+        margot.observe(metric, float(value))
+    best = margot.update()
+
+    coefs = dict(margot._error_coef)
+    adjusted_ops = []
+    for row in entry["ops"]:
+        metrics = {
+            m: [v[0] * coefs.get(m, 1.0), v[1] * coefs.get(m, 1.0)]
+            for m, v in row["metrics"].items()
+        }
+        adjusted_ops.append({"knobs": dict(row["knobs"]), "metrics": metrics})
+    knobs = {k: int(v) for k, v in best.knobs.items()}
+    new_entry = {
+        "knobs": knobs,
+        "metrics": {
+            m: [v[0] * coefs.get(m, 1.0), v[1] * coefs.get(m, 1.0)]
+            for m, v in best.metrics.items() if not m.startswith("knob:")
+        },
+        "ops": adjusted_ops,
+        "runtime": {
+            "error_coef": coefs,
+            "observed": {m: float(v) for m, v in observed.items()},
+            "latency_budget": latency_budget,
+        },
+    }
+    tuner.cache.put(sig.key(), new_entry)
+    return knobs

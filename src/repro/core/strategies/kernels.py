@@ -47,12 +47,13 @@ class TunedKernelAspect(Aspect):
     """Weave DSE-tuned kernel block sizes from the tuner cache.
 
     For every tunable kernel the program actually contains — flash attention
-    (`attention` joinpoints), the WKV recurrence (`rwkv_time_mix`) and the
-    RG-LRU (`rglru`) — builds the problem signature, looks it up in the
+    (`attention` joinpoints, including the decode and paged-decode serving
+    signatures), the WKV recurrence (`rwkv_time_mix`) and the RG-LRU
+    (`rglru`) — builds the problem signature, looks it up in the
     persistent cache and, on a hit, sets the corresponding extras
-    (`flash_block_q[_bwd]` / `flash_block_kv[_bwd]`, `wkv_chunk`,
-    `rglru_block_d` / `rglru_chunk`) and exposes the tuned values as knobs
-    for the dynamic autotuner.  On a miss it leaves the defaults untouched —
+    (`flash_block_q[_bwd]` / `flash_block_kv[_bwd]`, `flash_block_kv_dec`,
+    `flash_page_size`, `wkv_chunk`, `rglru_block_d` / `rglru_chunk`) and
+    exposes the tuned values as knobs for the dynamic autotuner.  On a miss it leaves the defaults untouched —
     tuning itself is explicit (benchmarks / launch tooling), never a weave
     side effect — unless `tune_on_miss=True`.
     """
@@ -88,6 +89,21 @@ class TunedKernelAspect(Aspect):
         if window is not None and window < cache_len:
             cache_len, window = window, None  # ring layout
         return flash_decode_signature(
+            self.batch, cache_len, cfg.n_heads, cfg.kv_heads,
+            cfg.resolved_head_dim, self.dtype, window=window,
+        )
+
+    def paged_signature(self, cfg):
+        """Paged serving decode: the same problem as `decode_signature`
+        but against the shared page pool, adding the `page_size` pool-
+        geometry knob (jointly tuned with `block_kv_dec`)."""
+        from repro.autotune.kernel_tuner import paged_decode_signature
+
+        cache_len = self.cache_len or self.seq_len
+        window = cfg.attn_window
+        if window is not None and window < cache_len:
+            cache_len, window = window, None  # ring layout
+        return paged_decode_signature(
             self.batch, cache_len, cfg.n_heads, cfg.kv_heads,
             cfg.resolved_head_dim, self.dtype, window=window,
         )
@@ -156,6 +172,14 @@ class TunedKernelAspect(Aspect):
             if dec_knobs:
                 self._weave(weaver, "flash_decode", dec_knobs,
                             {"block_kv_dec": "flash_block_kv_dec"})
+            paged_knobs = self._knobs_for(tuner, self.paged_signature(cfg))
+            if paged_knobs:
+                # a paged entry wins over the plain decode entry: a server
+                # running the pool should stream the jointly-tuned blocks
+                self._weave(weaver, "paged_decode", paged_knobs, {
+                    "page_size": "flash_page_size",
+                    "block_kv_dec": "flash_block_kv_dec",
+                })
 
         norm_jps = weaver.select(kind="norm").all()
         if norm_jps and cfg.norm_type == "rmsnorm":

@@ -35,11 +35,29 @@ benches can assert exactly which blocks one decode step streams;
 `vmem_bytes_dec` is the analytic VMEM working set used as the autotuner's
 capacity constraint for the `block_kv_dec` knob (see
 repro.autotune.kernel_tuner).
+
+Paged caches (the vLLM block-table layout): passing `tables` switches the
+K/V operands from per-request dense caches (B, K, T, D) to one shared pool
+of fixed-size pages (P, K, page_size, D) plus a per-request block table
+(B, num_blocks) mapping logical cache block -> physical page.  The kernel
+body is *unchanged* — all mask/softmax math stays in logical slot space —
+and the indirection lives entirely in the K/V BlockSpec index_map, which
+resolves the clamped logical block through the scalar-prefetched table:
+
+    jb   = min(lo + j, hi - 1)                # same clamp-and-elide walk
+    page = tables[b, jb // (page_size // block_kv)]
+    sub  = jb % (page_size // block_kv)       # sub-block within the page
+
+so the O(min(W, index+1)) live-block bound per token carries over verbatim,
+and requests of wildly different lengths share one HBM pool instead of each
+padding to max_len.  `block_kv` is clamped to a divisor of `page_size`
+(`page_block_kv`) so a streamed block never straddles a page boundary.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -109,6 +127,32 @@ def decode_schedule(
     hi = _dec_hi(int(index), block_kv, T)
     lo = _dec_lo(int(index), block_kv, window, hi)
     return list(range(int(lo), int(hi)))
+
+
+def page_block_kv(block_kv: int, page_size: int) -> int:
+    """Clamp a streamed-block size so it tiles the page exactly.
+
+    A K/V DMA must never straddle a page boundary (adjacent logical pages
+    are not adjacent in the pool), so the effective block is the largest
+    common divisor — for the power-of-two knob spaces this is simply
+    min(block_kv, page_size)."""
+    return max(1, math.gcd(int(block_kv), int(page_size)))
+
+
+def paged_decode_schedule(
+    kv_len: int, index: int, block_kv: int, page_size: int, table,
+    *, window: int | None = None, pruned: bool = True,
+) -> list[tuple[int, int]]:
+    """Physical (page, sub_block) pairs one decode token streams from the
+    pool — `decode_schedule` mapped through the request's block table.
+
+    `table` is the request's row: table[i] = physical page of logical page
+    i.  Tests and benches use this to assert that exactly the pages backing
+    the live logical blocks are touched, in logical order."""
+    bkv = page_block_kv(block_kv, page_size)
+    spb = page_size // bkv
+    logical = decode_schedule(kv_len, index, bkv, window=window, pruned=pruned)
+    return [(int(table[jb // spb]), jb % spb) for jb in logical]
 
 
 # ---------------------------------------------------------------------------
@@ -190,6 +234,14 @@ def _flash_decode_kernel(
         o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
 
 
+def _flash_decode_kernel_paged(idx_ref, tbl_ref, *refs, **kw):
+    """Paged variant: the block table rides in as a second scalar-prefetch
+    operand consumed *only* by the K/V index_map — every mask / softmax op
+    happens in logical slot space, so the body is the dense kernel."""
+    del tbl_ref
+    _flash_decode_kernel(idx_ref, *refs, **kw)
+
+
 # ---------------------------------------------------------------------------
 # Entry point (kernel layout)
 # ---------------------------------------------------------------------------
@@ -197,7 +249,7 @@ def _flash_decode_kernel(
 
 def flash_decode_fwd(
     q: jax.Array,      # (B, K, G, D) — one token, group folded into rows
-    k: jax.Array,      # (B, K, T, D) cache, kernel layout
+    k: jax.Array,      # (B, K, T, D) cache — or (P, K, page_size, D) pool
     v: jax.Array,
     index: jax.Array,  # (B,) int32: new token's position / #cached tokens
     *,
@@ -206,12 +258,36 @@ def flash_decode_fwd(
     block_kv: int = 512,
     pruned: bool = True,
     interpret: bool = False,
+    tables: jax.Array | None = None,  # (B, num_blocks) int32 page table
+    kv_len: int | None = None,        # logical cache length (paged only)
 ) -> jax.Array:
     """One decode step.  Streams ceil((hi-lo)) live KV blocks per (b, kv
-    head); with `pruned=False` every block streams (the dense baseline)."""
+    head); with `pruned=False` every block streams (the dense baseline).
+
+    With `tables`, K/V are one shared page pool (P, K, page_size, D) and
+    each request's logical blocks resolve through its block-table row; the
+    logical cache length must then come in as `kv_len` (the pool carries no
+    per-request extent)."""
     B, K, G, D = q.shape
-    T = k.shape[2]
-    block_kv = min(block_kv, max(T, 1))
+    paged = tables is not None
+    if paged:
+        if kv_len is None:
+            raise ValueError("paged flash_decode requires kv_len")
+        T = int(kv_len)
+        page_size = k.shape[2]
+        # No clamp to T here: pool pages are always full page_size slots
+        # (the kp < live mask covers short caches), and min()-ing first
+        # would collapse the gcd to slivers for non-power-of-two kv_len.
+        block_kv = page_block_kv(block_kv, page_size)
+        spb = page_size // block_kv
+        tables = jnp.asarray(tables, jnp.int32)
+        if tables.shape[0] != B or tables.shape[1] * page_size < T:
+            raise ValueError(
+                f"block table {tables.shape} cannot cover kv_len={T} at "
+                f"page_size={page_size} for batch {B}")
+    else:
+        T = k.shape[2]
+        block_kv = min(block_kv, max(T, 1))
 
     # TPU sublane tiling wants >= 8 q rows; pad the folded group (the padded
     # rows compute garbage that is sliced off — rows are softmax-independent).
@@ -219,13 +295,15 @@ def flash_decode_fwd(
     if Gp != G:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
 
-    # Ragged cache length: zero-pad KV to a block multiple; `kp < live`
-    # masks the padded slots (live <= T always).
-    pad = (-T) % block_kv
-    if pad:
-        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
-        k, v = jnp.pad(k, widths), jnp.pad(v, widths)
-    nk = (T + pad) // block_kv
+    if not paged:
+        # Ragged cache length: zero-pad KV to a block multiple; `kp < live`
+        # masks the padded slots (live <= T always).  Pools need no padding:
+        # block_kv divides page_size by construction.
+        pad = (-T) % block_kv
+        if pad:
+            widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+            k, v = jnp.pad(k, widths), jnp.pad(v, widths)
+    nk = cdiv(T, block_kv)
 
     index = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (B,))
 
@@ -235,32 +313,50 @@ def flash_decode_fwd(
     # kv_steps_for.  The per-index interval [lo, hi) then elides within it.
     steps = decode_steps_for(T, block_kv, window) if pruned else nk
 
-    if pruned:
-        def kv_index(b, h, j, idx_ref):
+    def logical_block(b, j, idx_ref):
+        if pruned:
             hi = _dec_hi(idx_ref[b], block_kv, T)
             lo = _dec_lo(idx_ref[b], block_kv, window, hi)
-            return (b, h, jnp.minimum(lo + j, hi - 1), 0)
+            return jnp.minimum(lo + j, hi - 1)
+        return j
+
+    if paged:
+        def kv_index(b, h, j, idx_ref, tbl_ref):
+            jb = logical_block(b, j, idx_ref)
+            return (tbl_ref[b, jb // spb], h, jb % spb, 0)
+
+        def qo_index(b, h, j, idx_ref, tbl_ref):
+            return (b, h, 0, 0)
+
+        kernel_fn = _flash_decode_kernel_paged
+        num_prefetch = 2
+        operands = (index, tables, q, k, v)
     else:
         def kv_index(b, h, j, idx_ref):
-            return (b, h, j, 0)
+            return (b, h, logical_block(b, j, idx_ref), 0)
+
+        def qo_index(b, h, j, idx_ref):
+            return (b, h, 0, 0)
+
+        kernel_fn = _flash_decode_kernel
+        num_prefetch = 1
+        operands = (index, q, k, v)
 
     kernel = functools.partial(
-        _flash_decode_kernel,
+        kernel_fn,
         block_kv=block_kv, kv_len=T, window=window,
         softcap=softcap, scale=1.0 / np.sqrt(D), pruned=pruned,
     )
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=num_prefetch,
         grid=(B, K, steps),
         in_specs=[
-            pl.BlockSpec((1, 1, Gp, D), lambda b, h, j, idx_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, Gp, D), qo_index),
             pl.BlockSpec((1, 1, block_kv, D), kv_index),
             pl.BlockSpec((1, 1, block_kv, D), kv_index),
         ],
-        out_specs=pl.BlockSpec(
-            (1, 1, Gp, D), lambda b, h, j, idx_ref: (b, h, 0, 0)
-        ),
+        out_specs=pl.BlockSpec((1, 1, Gp, D), qo_index),
         scratch_shapes=[
             pltpu.VMEM((Gp, 1), jnp.float32),
             pltpu.VMEM((Gp, 1), jnp.float32),
@@ -272,7 +368,7 @@ def flash_decode_fwd(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, Gp, D), q.dtype),
         interpret=interpret,
-    )(index, q, k, v)
+    )(*operands)
     return out[:, :, :G, :]
 
 

@@ -37,6 +37,7 @@ from repro.kernels.flash_attention.kernel import (
 DEFAULT_BLOCK_Q = 512
 DEFAULT_BLOCK_KV = 512
 DEFAULT_BLOCK_KV_DEC = 512
+DEFAULT_PAGE_SIZE = 128
 
 if hasattr(jax, "shard_map"):  # jax >= 0.6
     _shard_map = jax.shard_map
@@ -244,9 +245,33 @@ def _flash_decode_local(q, k, v, index, *, window, softcap, block_kv, pruned,
     return out.reshape(B, 1, H, D)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("kv_len", "window", "softcap", "block_kv", "pruned",
+                     "interpret"),
+)
+def _flash_decode_paged_local(q, k, v, index, tables, *, kv_len, window,
+                              softcap, block_kv, pruned, interpret):
+    from repro.kernels.flash_attention.decode import flash_decode_fwd
+
+    B, S, H, D = q.shape
+    K = k.shape[2]  # pool layout (P, page_size, K, D)
+    G = H // K
+    qt = q.reshape(B, H, D).reshape(B, K, G, D)
+    kt = jnp.swapaxes(k, 1, 2)  # (P, K, page_size, D)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_decode_fwd(
+        qt, kt, vt, index, tables=tables, kv_len=kv_len,
+        window=window, softcap=softcap, block_kv=block_kv,
+        pruned=pruned, interpret=interpret,
+    )
+    return out.reshape(B, 1, H, D)
+
+
 def flash_decode(
     q: jax.Array,        # (B, 1, H, D) — the one new token, post-RoPE
-    k_cache: jax.Array,  # (B, T, K, D) cache *with the new token written*
+    k_cache: jax.Array,  # (B, T, K, D) cache *with the new token written*,
+                         # or the (P, page_size, K, D) page pool when paged
     v_cache: jax.Array,
     index: jax.Array,    # () or (B,) int32: the new token's position
     *,
@@ -255,16 +280,38 @@ def flash_decode(
     block_kv: int | None = None,
     pruned: bool = True,
     interpret: bool | None = None,
+    tables: jax.Array | None = None,  # (B, num_blocks) int32 block tables
+    kv_len: int | None = None,        # logical cache length (paged only)
 ) -> jax.Array:
     """One decode step over a live-block-pruned cache; see decode.py.
 
     `block_kv=None` resolves from the kernel-tuner cache (the
     `block_kv_dec` knob under the `vmem_bytes_dec` constraint), falling
     back to the 512 default — the same auto-tuning path as the prefill
-    kernel's blocks.
+    kernel's blocks.  Passing `tables` selects the paged layout: K/V are
+    one shared page pool and every request's cache blocks resolve through
+    its block-table row (tuned via the `paged_decode` signature, which
+    also carries the `page_size` knob the pool was built with).
     """
     if interpret is None:
         interpret = _interpret_default()
+    index = jnp.asarray(index, jnp.int32)
+    if tables is not None:
+        if kv_len is None:
+            raise ValueError("paged flash_decode requires kv_len")
+        if block_kv is None:
+            from repro.autotune.kernel_tuner import tuned_paged_blocks
+
+            tuned = tuned_paged_blocks(
+                q.shape, int(kv_len), k_cache.shape[2], q.dtype,
+                window=window,
+            )
+            block_kv = int(tuned.get("block_kv_dec", DEFAULT_BLOCK_KV_DEC))
+        return _flash_decode_paged_local(
+            q, k_cache, v_cache, index, jnp.asarray(tables, jnp.int32),
+            kv_len=int(kv_len), window=window, softcap=softcap,
+            block_kv=int(block_kv), pruned=pruned, interpret=interpret,
+        )
     if block_kv is None:
         from repro.autotune.kernel_tuner import tuned_decode_blocks
 
@@ -274,7 +321,7 @@ def flash_decode(
         )
         block_kv = int(tuned.get("block_kv_dec", DEFAULT_BLOCK_KV_DEC))
     return _flash_decode_local(
-        q, k_cache, v_cache, jnp.asarray(index, jnp.int32),
+        q, k_cache, v_cache, index,
         window=window, softcap=softcap, block_kv=int(block_kv),
         pruned=pruned, interpret=interpret,
     )

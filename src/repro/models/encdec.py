@@ -93,7 +93,7 @@ class DecoderXBlock(Module):
             h = ctx.constrain(h, ("batch", "seq_act", "embed"))
             h, cross_new = self.cross_attn(
                 params["cross_attn"], h,
-                ctx=ctx, cache=cross_cache, kv_src=kv_src,
+                ctx=ctx, cache=cross_cache, kv_src=kv_src, mode=mode,
             )
             x = x + h
             h = self.norm2(params["norm2"], x, ctx=ctx)

@@ -71,14 +71,15 @@ class DecoderBlock(Module):
                 "ffn": self.ffn}
 
     def __call__(self, params, x, *, ctx: Ctx, mode="dense", cache=None,
-                 positions=None, kv_pos=None):
+                 positions=None, kv_pos=None, block_tables=None):
         with ctx.scope(self.name):
             h = self.norm1(params["norm1"], x, ctx=ctx)
             # single gather point for the sequence-parallel residual (the
             # Megatron-SP "g" operator): one AG feeds qkv, not one each
             h = ctx.constrain(h, ("batch", "seq_act", "embed"))
             h, new_cache = self.attn(params["attn"], h, ctx=ctx, positions=positions,
-                                     mode=mode, cache=cache, kv_pos=kv_pos)
+                                     mode=mode, cache=cache, kv_pos=kv_pos,
+                                     block_tables=block_tables)
             x = x + h
             h = self.norm2(params["norm2"], x, ctx=ctx)
             h = ctx.constrain(h, ("batch", "seq_act", "embed"))
@@ -239,22 +240,33 @@ class TransformerLM(Module):
         # Hoisted linear-cache decode positions: updated ONCE per step (an
         # O(B) scatter on the cached (B, T) kv_pos) and shared by every
         # attention layer — instead of each layer re-deriving an arange(T)
-        # mask broadcast to (B, T).
+        # mask broadcast to (B, T).  Paged serving caches hoist their
+        # block tables the same way: one (B, NB) page map shared by every
+        # layer (the per-layer pools index the same physical page space).
         kv_pos = None
+        block_tables = None
         if mode == "decode" and cache is not None and "kv_pos" in cache:
             idx_col = positions[:, -1]
             kv_pos = cache["kv_pos"].at[jnp.arange(B), idx_col].set(idx_col)
             new_caches["kv_pos"] = kv_pos
+        if mode == "decode" and cache is not None and "block_tables" in cache:
+            block_tables = cache["block_tables"]
+            new_caches["block_tables"] = block_tables
         if not ctx.extra.get("skip_trunk"):  # roofline outer-component mode
             for part in self.trunk:
                 part_cache = None if cache is None else cache.get(part.name)
                 attn_kw: dict[str, Any] = {}
+                shared = {}
                 if kv_pos is not None:
+                    shared["kv_pos"] = kv_pos
+                if block_tables is not None:
+                    shared["block_tables"] = block_tables
+                if shared:
                     if isinstance(part, ScannedStack) and isinstance(
                             part.block, DecoderBlock):
-                        attn_kw = {"block_kwargs": {"kv_pos": kv_pos}}
+                        attn_kw = {"block_kwargs": shared}
                     elif isinstance(part, DecoderBlock):
-                        attn_kw = {"kv_pos": kv_pos}
+                        attn_kw = shared
                 if remat_unrolled and not isinstance(part, ScannedStack):
                     # unrolled hybrid blocks need per-block remat too
                     def call(p, h, _part=part):

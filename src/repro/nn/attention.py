@@ -234,6 +234,7 @@ class Attention(Module):
         cache: dict | None = None,
         kv_src: jax.Array | None = None,  # cross-attention source (B,T,d)
         kv_pos: jax.Array | None = None,  # hoisted (B,T) decode positions
+        block_tables: jax.Array | None = None,  # paged caches: (B, NB) pages
     ):
         with ctx.scope(self.name):
             policy = ctx.policy()
@@ -245,10 +246,11 @@ class Attention(Module):
             q = ctx.constrain(q, ("batch", "seq_act", "heads", None))
 
             if self.cross:
-                out, new_cache = self._cross(params, q, ctx, policy, cache, kv_src)
+                out, new_cache = self._cross(params, q, ctx, policy, cache,
+                                             kv_src, mode)
             elif mode == "decode":
                 out, new_cache = self._decode(params, q, x, positions, ctx, policy,
-                                              cache, kv_pos)
+                                              cache, kv_pos, block_tables)
             else:
                 out, new_cache = self._dense(params, q, x, positions, ctx, policy, mode, cache)
 
@@ -391,8 +393,9 @@ class Attention(Module):
 
     # -- decode (one token against a cache) ---------------------------------------
 
-    def _decode(self, params, q, x, positions, ctx, policy, cache, kv_pos=None):
-        """One new token against a linear or ring cache.
+    def _decode(self, params, q, x, positions, ctx, policy, cache, kv_pos=None,
+                block_tables=None):
+        """One new token against a linear, ring, or *paged* cache.
 
         The cache is updated in place (`.at[...].set`, so jit donates the
         buffers) and the attention dispatches through the same impl-weaving
@@ -401,6 +404,13 @@ class Attention(Module):
         the reference (and the meshed fallback).  `cache["index"]` may be a
         scalar (single stream) or per-request (B,) — the stacked-serving
         layout — and ring `pos` follows with shape (W,) or (B, W).
+
+        Paged caches (`{"pk", "pv"}` pools + the model-hoisted
+        `block_tables`) write the new token at its physical (page, offset)
+        and dispatch the same way: the kernel resolves blocks through the
+        table, the XLA reference gathers the logical view — both
+        bit-identical to the dense layout because the streamed values and
+        mask are unchanged.
 
         Contract: the new token's `positions` must equal `cache["index"]`
         (the autoregressive invariant — the token is written at that slot).
@@ -416,6 +426,10 @@ class Attention(Module):
             sin, cos = rope_angles(positions, self.head_dim, self.rope_theta)
             q = apply_rope(q, sin, cos)
             k_new = apply_rope(k_new, sin, cos)
+
+        if "pk" in cache:
+            return self._decode_paged(q, k_new, v_new, positions, ctx, policy,
+                                      cache, kv_pos, block_tables)
 
         idx = cache["index"]
         per_req = getattr(idx, "ndim", 0) == 1  # stacked multi-request caches
@@ -484,9 +498,99 @@ class Attention(Module):
                             constrain=constrain if ctx.mesh is not None else None)
         return out, new_cache
 
+    def _decode_paged(self, q, k_new, v_new, positions, ctx, policy, cache,
+                      kv_pos, block_tables):
+        """Paged-pool decode: the cache slots live in shared page pools
+        (`pk`/`pv`: (P, page_size, K, D)) and the request's logical slot s
+        maps to physical (tables[b, s // ps], s % ps).  Serving layout
+        only: `index` is per-request (B,)."""
+        if block_tables is None:
+            raise ValueError("paged caches need block_tables (the model "
+                             "hoists cache['block_tables'] to every layer)")
+        idx = cache["index"]
+        if getattr(idx, "ndim", 0) != 1:
+            raise ValueError("paged caches are per-request: index must be "
+                             f"(B,), got shape {getattr(idx, 'shape', ())}")
+        B = q.shape[0]
+        bidx = jnp.arange(B)
+        pk, pv = cache["pk"], cache["pv"]
+        ps = pk.shape[1]
+        ring = "pos" in cache
+
+        if ring:
+            W = cache["pos"].shape[-1]
+            slot = idx % W
+            kv_len = W
+            kernel_window = None  # the ring layout *is* the window
+        else:
+            # true logical length: the hoisted kv_pos row width (the table
+            # may round up to whole pages); fallback covers bare callers
+            kv_len = (kv_pos.shape[1] if kv_pos is not None
+                      else block_tables.shape[1] * ps)
+            slot = idx
+            kernel_window = (
+                self.window if self.mask in ("sliding", "local") else None
+            )
+        page = block_tables[bidx, slot // ps]
+        off = slot % ps
+        if not ring:
+            # past-the-end writes must vanish exactly like the dense
+            # layout's OOB scatter: the table *gather* clamps to the last
+            # live page, so redirect to an OOB page id and let the scatter
+            # drop it instead of corrupting a live slot
+            page = jnp.where(slot < kv_len, page, pk.shape[0])
+        k_all = pk.at[page, off].set(k_new[:, 0])
+        v_all = pv.at[page, off].set(v_new[:, 0])
+        new_cache = {"pk": k_all, "pv": v_all, "index": idx + 1}
+        if ring:
+            pos = cache["pos"].at[bidx, slot].set(idx)
+            new_cache["pos"] = pos
+            kv_pos = pos
+        elif kv_pos is None:
+            arange = jnp.arange(kv_len, dtype=jnp.int32)
+            kv_pos = jnp.where(arange[None] <= idx[:, None], arange[None], -1)
+
+        impl = ctx.impl("attention", "xla")
+        if impl == "pallas" and self._pallas_ok() and ctx.mesh is None:
+            from repro.kernels.flash_attention.ops import flash_decode
+
+            blk = ctx.extra.get("flash_block_kv_dec")  # woven extras win
+            out = flash_decode(
+                q, k_all, v_all, idx,
+                window=kernel_window, softcap=self.softcap,
+                block_kv=int(blk) if blk is not None else None,
+                pruned=bool(ctx.extra.get("flash_pruned", True)),
+                tables=block_tables, kv_len=kv_len,
+            )
+            return out, new_cache
+
+        # XLA reference: gather the logical view through the table, then the
+        # exact dense decode math (bit-identical — same values, same mask).
+        nb = block_tables.shape[1]
+        k_log = k_all[block_tables].reshape(B, nb * ps, *k_all.shape[2:])
+        v_log = v_all[block_tables].reshape(B, nb * ps, *v_all.shape[2:])
+        k_log, v_log = k_log[:, :kv_len], v_log[:, :kv_len]
+        k_c, v_c, kv_axis = self._maybe_expand_kv(k_log, v_log, ctx)
+        # mask from the caller's positions (== index on the hot path): the
+        # XLA reference keeps the dense path's re-scoring escape hatch
+        mask = _mask_dense(positions, kv_pos, self.mask,
+                           self.window)[:, None, None]
+        out = xla_attention(q, k_c, v_c, mask, softcap=self.softcap,
+                            accum_dtype=policy.accum_dtype)
+        return out, new_cache
+
     # -- cross attention (whisper decoder) ----------------------------------------
 
-    def _cross(self, params, q, ctx, policy, cache, kv_src):
+    def _cross(self, params, q, ctx, policy, cache, kv_src, mode="dense"):
+        """Cross-attention over the (static-length) encoder states.
+
+        Decode steps (one q token against the cached encoder K/V) dispatch
+        through `flash_decode`: the encoder length is fixed, so the stream
+        schedule is simply the whole prefix — `index = T - 1` marks every
+        slot live and the kernel's causal clamp degenerates to the full
+        mask, with no per-step index bookkeeping.  The XLA path stays as
+        the reference (and covers prefill / dense / meshed calls).
+        """
         if cache is not None and "ck" in cache:
             k, v = cache["ck"], cache["cv"]
             new_cache = cache
@@ -497,6 +601,19 @@ class Attention(Module):
             new_cache = {"ck": k, "cv": v}
         B, S = q.shape[0], q.shape[1]
         T = k.shape[1]
+        impl = ctx.impl("attention", "xla")
+        if (mode == "decode" and S == 1 and impl == "pallas"
+                and self._pallas_ok() and ctx.mesh is None):
+            from repro.kernels.flash_attention.ops import flash_decode
+
+            blk = ctx.extra.get("flash_block_kv_dec")
+            out = flash_decode(
+                q, k, v, jnp.full((B,), T - 1, jnp.int32),
+                softcap=self.softcap,
+                block_kv=int(blk) if blk is not None else None,
+                pruned=bool(ctx.extra.get("flash_pruned", True)),
+            )
+            return out, new_cache
         mask = jnp.ones((B, 1, 1, S, T), bool)
         out = xla_attention(q, k, v, mask, softcap=self.softcap,
                             accum_dtype=policy.accum_dtype)

@@ -1,0 +1,408 @@
+"""Paged KV-cache pool: the vLLM block-table layout for the serving runtime.
+
+`stack_request_caches` (PR 3) batches variable-length requests by padding
+every per-request cache to the same length — HBM scales with
+batch x max_len even when most requests are short.  This module replaces
+that with one shared pool of fixed-size pages per layer:
+
+  PagePool            host-side free-list allocator: physical pages are
+                      allocated on admission, appended at the logical tail
+                      as a request's cache grows past a page boundary
+                      (decode writes are strictly sequential in slot space,
+                      so growth is always contiguous-tail), and released
+                      when the request retires.  Admission is
+                      reservation-aware: a request is only admitted when
+                      the pool can cover every active request's *worst
+                      case* growth, so decode can never deadlock on pages.
+
+  PagedCacheManager   device-side owner of the per-layer page pools.  It
+                      packs per-request (batch=1) prefill caches into pool
+                      pages, re-forms the batched decode cache pytree for
+                      whatever set of requests is active *this step*
+                      (continuous batching: the batch is recomposed every
+                      token), and absorbs the post-step pools / ring `pos`
+                      rows / `kv_pos` rows back into per-request state.
+
+The resulting cache pytree is what `Attention._decode`'s paged branch and
+the block-table `flash_decode` kernel consume: per layer `{"pk", "pv"}`
+pools of shape (P, page_size, K, D) (leading layer dim under a scanned
+stack) with per-request `index`, ring `pos`, and one shared top-level
+`block_tables` (B, num_blocks) — the scalar-prefetch operand that lets the
+kernel resolve logical cache blocks to physical pages with no HBM gather.
+
+The page count and `page_size` are DSE-tunable knobs (the `paged_decode`
+kernel space in repro.autotune.kernel_tuner); paged decode stays
+bit-identical to the dense stacked path because the kernel streams the
+same logical blocks in the same order — only the DMA source moves.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.kernel import cdiv
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an alloc/grow asks for more pages than the free list holds."""
+
+
+# ---------------------------------------------------------------------------
+# Host-side allocator
+# ---------------------------------------------------------------------------
+
+
+class PagePool:
+    """Free-list page allocator with per-request block tables.
+
+    Pure host-side bookkeeping: physical page ids are ints in
+    [0, num_pages); a request's block table maps logical page i (cache
+    slots [i*page_size, (i+1)*page_size)) to its physical page.  The free
+    list is LIFO so released pages are reused first — the pool's working
+    set stays compact under admit/retire churn.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError(f"bad pool geometry ({num_pages=}, {page_size=})")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        self.tables: dict[Any, list[int]] = {}
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def pages_for(self, length: int) -> int:
+        """Pages needed to back `length` cache slots."""
+        return cdiv(max(int(length), 0), self.page_size)
+
+    def alloc(self, rid, n_pages: int) -> list[int]:
+        if rid in self.tables:
+            raise KeyError(f"request {rid!r} already holds pages")
+        if n_pages > len(self._free):
+            raise PoolExhausted(
+                f"need {n_pages} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n_pages)]
+        self.tables[rid] = pages
+        return pages
+
+    def grow_to(self, rid, n_pages: int) -> list[int]:
+        """Contiguous-tail growth: append pages until the table covers
+        n_pages logical pages.  Returns the newly appended physical ids."""
+        table = self.tables[rid]
+        need = n_pages - len(table)
+        if need <= 0:
+            return []
+        if need > len(self._free):
+            raise PoolExhausted(
+                f"grow {rid!r} needs {need} pages, {len(self._free)} free")
+        new = [self._free.pop() for _ in range(need)]
+        table.extend(new)
+        return new
+
+    def release(self, rid) -> list[int]:
+        pages = self.tables.pop(rid)
+        # reversed: LIFO reuse hands back the request's pages tail-first
+        self._free.extend(reversed(pages))
+        return pages
+
+    def table_rows(self, rids: Iterable[Any], width: int) -> np.ndarray:
+        """(B, width) int32 block tables, unallocated tail entries 0 (a
+        valid page id: dead blocks may DMA it, never enter the math)."""
+        rids = list(rids)
+        rows = np.zeros((len(rids), width), np.int32)
+        for i, rid in enumerate(rids):
+            table = self.tables[rid]
+            if len(table) > width:
+                raise ValueError(
+                    f"table of {rid!r} ({len(table)}) exceeds width {width}")
+            rows[i, : len(table)] = table
+        return rows
+
+
+# ---------------------------------------------------------------------------
+# Device-side paged cache manager
+# ---------------------------------------------------------------------------
+
+
+def _is_kv_group(value: Any) -> bool:
+    return isinstance(value, dict) and "k" in value and "v" in value \
+        and "ck" not in value
+
+
+def paged_compatible(cache: dict) -> bool:
+    """True when every stateful leaf group of a per-request decode cache is
+    an attention KV cache — the families the paged pool can host.  SSM /
+    recurrent states (rwkv, rglru) and cross-attention caches keep the
+    dense stacked layout (`stack_request_caches`)."""
+    if not isinstance(cache, dict):
+        return False
+    seen_kv = False
+    for name, value in cache.items():
+        if name == "kv_pos" or value is None:
+            continue
+        if not _is_kv_group(value):
+            return False
+        seen_kv = True
+    return seen_kv
+
+
+class PagedCacheManager:
+    """Owns the per-layer page pools + per-request paged cache state.
+
+    One manager serves one `Server.serve_continuous` call (or a test's
+    hand-driven decode loop): `admit` packs a request's prefill cache into
+    freshly allocated pages, `batch` re-forms the decode cache for the
+    currently active requests (growing tail pages for the token about to
+    be written), `absorb` stores the post-step state back, and `retire`
+    returns the request's pages to the free list.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        self.pool = PagePool(num_pages, page_size)
+        self.page_size = page_size
+        self._pools: dict[str, dict[str, jax.Array]] = {}
+        self._groups: dict[str, dict[str, Any]] = {}  # structure, 1st admit
+        self._meta: dict[Any, dict[str, Any]] = {}    # per-request state
+
+    # -- admission -------------------------------------------------------------
+
+    def _slots_needed(self, length: int) -> int:
+        """Worst-case pages to back `length` slots across all groups (ring
+        groups clamp to their window — the slot space wraps there)."""
+        return max(
+            self.pool.pages_for(min(length, info["length"]))
+            for info in self._groups.values()
+        )
+
+    def can_admit(self, final_len: int) -> bool:
+        """Admission control: free pages must cover this request's worst
+        case *plus* every active request's outstanding growth, so decode
+        never hits PoolExhausted mid-flight."""
+        if not self._groups:  # first request defines the structure
+            return self.pool.free_pages > 0
+        reserved = sum(
+            self._slots_needed(m["final_len"]) - len(self.pool.tables[rid])
+            for rid, m in self._meta.items()
+        )
+        return (self.pool.free_pages - reserved
+                >= self._slots_needed(final_len))
+
+    def _scan_structure(self, cache: dict) -> None:
+        if not paged_compatible(cache):
+            raise ValueError(
+                "cache has non-KV state groups; paged serving supports "
+                "attention-cache models — use Server.serve_batch")
+        for name, value in cache.items():
+            if name == "kv_pos" or value is None:
+                continue
+            k = value["k"]
+            scanned = k.ndim == 5  # (n, 1, T, K, D) under a scanned stack
+            self._groups[name] = {
+                "scanned": scanned,
+                "n": k.shape[0] if scanned else None,
+                "ring": "pos" in value,
+                "length": k.shape[-3],  # W (ring) or max_len (linear)
+                "kv_heads": k.shape[-2],
+                "head_dim": k.shape[-1],
+                "dtype": k.dtype,
+            }
+
+    def _ensure_pools(self, num_pages: int) -> None:
+        ps = self.page_size
+        for name, info in self._groups.items():
+            if name in self._pools:
+                continue
+            shape = (num_pages, ps, info["kv_heads"], info["head_dim"])
+            if info["scanned"]:
+                shape = (info["n"], *shape)
+            self._pools[name] = {
+                "pk": jnp.zeros(shape, info["dtype"]),
+                "pv": jnp.zeros(shape, info["dtype"]),
+            }
+
+    @property
+    def table_width(self) -> int:
+        ps = self.page_size
+        return max(cdiv(info["length"], ps) for info in self._groups.values())
+
+    def admit(self, rid, cache: dict, *, final_len: int) -> None:
+        """Pack a per-request (batch=1) prefill cache into pool pages.
+
+        `final_len` is the most cache slots this request will ever occupy
+        (prompt + decode budget), reserved for deadlock-free growth.
+        """
+        if not self._groups:
+            self._scan_structure(cache)
+            self._ensure_pools(self.pool.num_pages)
+        else:
+            # every request must pack the same cache family per group:
+            # Attention._build_cache rings only when window < prompt_len,
+            # so a sliding-window batch straddling W would otherwise mix
+            # ring and linear layouts in one pool — refuse loudly.
+            for name, info in self._groups.items():
+                group = cache[name]
+                if ("pos" in group) != info["ring"] \
+                        or group["k"].shape[-3] != info["length"]:
+                    raise ValueError(
+                        f"request cache family mismatch in group {name!r} "
+                        f"(ring={'pos' in group}, "
+                        f"len={group['k'].shape[-3]}) vs the pool's "
+                        f"(ring={info['ring']}, len={info['length']}); "
+                        "sliding-window serving needs prompts on one side "
+                        "of the window — use serve_batch otherwise")
+        ps = self.page_size
+        length = None
+        for name, info in self._groups.items():
+            idx = cache[name]["index"]
+            length = int(np.asarray(idx).reshape(-1)[0])
+            break
+        pages = self.pool.alloc(rid, self._slots_needed(length))
+        pages_arr = np.asarray(pages, np.int32)
+
+        for name, info in self._groups.items():
+            group = cache[name]
+            for src_key, dst_key in (("k", "pk"), ("v", "pv")):
+                arr = group[src_key]
+                if info["scanned"]:
+                    arr = arr[:, 0]  # (n, T, K, D)
+                else:
+                    arr = arr[0]     # (T, K, D)
+                need = len(pages) * ps
+                T = arr.shape[-3]
+                if need > T:
+                    pad = [(0, 0)] * arr.ndim
+                    pad[-3] = (0, need - T)
+                    arr = jnp.pad(arr, pad)
+                else:
+                    arr = arr[..., :need, :, :]
+                paged = arr.reshape(*arr.shape[:-3], len(pages), ps,
+                                    *arr.shape[-2:])
+                pool = self._pools[name][dst_key]
+                if info["scanned"]:
+                    pool = pool.at[:, pages_arr].set(paged)
+                else:
+                    pool = pool.at[pages_arr].set(paged)
+                self._pools[name][dst_key] = pool
+
+        meta: dict[str, Any] = {
+            "length": length,
+            "final_len": int(final_len),
+            "pos": {},
+        }
+        for name, info in self._groups.items():
+            if info["ring"]:
+                meta["pos"][name] = cache[name]["pos"]  # (W,) or (n, W)
+        if "kv_pos" in cache:
+            meta["kv_pos"] = cache["kv_pos"][0]  # (max_len,)
+        self._meta[rid] = meta
+
+    def retire(self, rid) -> None:
+        self.pool.release(rid)
+        del self._meta[rid]
+
+    # -- per-step batch composition ---------------------------------------------
+
+    def batch(self, rids: list[Any]) -> dict:
+        """Decode cache pytree for this step's active set, in `rids` order.
+
+        Grows each request's tail pages to cover the slot its next token
+        writes, then stacks the per-request rows around the shared pools.
+        """
+        for rid in rids:
+            self.pool.grow_to(rid, self._slots_needed(
+                self._meta[rid]["length"] + 1))
+        lengths = np.asarray([self._meta[r]["length"] for r in rids],
+                             np.int32)
+        tables = jnp.asarray(self.pool.table_rows(rids, self.table_width))
+
+        cache: dict[str, Any] = {}
+        for name, info in self._groups.items():
+            group: dict[str, Any] = dict(self._pools[name])
+            if info["scanned"]:
+                group["index"] = jnp.asarray(
+                    np.tile(lengths, (info["n"], 1)))
+            else:
+                group["index"] = jnp.asarray(lengths)
+            if info["ring"]:
+                rows = [self._meta[r]["pos"][name] for r in rids]
+                group["pos"] = jnp.stack(rows,
+                                         axis=1 if info["scanned"] else 0)
+            cache[name] = group
+        cache["block_tables"] = tables
+        if any("kv_pos" in self._meta[r] for r in rids):
+            cache["kv_pos"] = jnp.stack(
+                [self._meta[r]["kv_pos"] for r in rids], axis=0)
+        return cache
+
+    def absorb(self, rids: list[Any], new_cache: dict) -> None:
+        """Store one decode step's outputs back: pools are shared (one
+        assignment), per-request rows split on their batch axis."""
+        for name, info in self._groups.items():
+            group = new_cache[name]
+            self._pools[name] = {"pk": group["pk"], "pv": group["pv"]}
+            if info["ring"]:
+                axis = 1 if info["scanned"] else 0
+                for i, rid in enumerate(rids):
+                    self._meta[rid]["pos"][name] = jnp.take(
+                        group["pos"], i, axis=axis)
+        if "kv_pos" in new_cache:
+            for i, rid in enumerate(rids):
+                self._meta[rid]["kv_pos"] = new_cache["kv_pos"][i]
+        for rid in rids:
+            self._meta[rid]["length"] += 1
+
+    # -- introspection -----------------------------------------------------------
+
+    def hbm_pool_bytes(self) -> int:
+        """Allocated KV bytes: live pages across every layer pool."""
+        total = 0
+        for name, info in self._groups.items():
+            per_page = (self.page_size * info["kv_heads"] * info["head_dim"]
+                        * np.dtype(info["dtype"]).itemsize)
+            layers = info["n"] if info["scanned"] else 1
+            total += 2 * layers * per_page * self.pool.live_pages
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Raw-array pool packing (benches / kernel-level tests)
+# ---------------------------------------------------------------------------
+
+
+def build_linear_pool(ks, vs, page_size: int, *, max_len: int | None = None,
+                      num_pages: int | None = None):
+    """Pack per-request linear cache prefixes (T_i, K, D) into one pool.
+
+    Returns (pk, pv, tables, pool): pool arrays (P, page_size, K, D), block
+    tables (B, ceil(max_len/page_size)), and the PagePool (so callers can
+    inspect live pages / release).  Pure convenience for benches and tests
+    that drive `flash_decode` directly without a model.
+    """
+    lengths = [int(k.shape[0]) for k in ks]
+    max_len = max_len or max(lengths)
+    need = sum(cdiv(l, page_size) for l in lengths)
+    pool = PagePool(num_pages or need, page_size)
+    width = cdiv(max_len, page_size)
+    Kh, D = ks[0].shape[-2], ks[0].shape[-1]
+    pk = np.zeros((pool.num_pages, page_size, Kh, D), np.asarray(ks[0]).dtype)
+    pv = np.zeros_like(pk)
+    for i, (k, v, l) in enumerate(zip(ks, vs, lengths)):
+        pages = pool.alloc(i, cdiv(l, page_size))
+        k, v = np.asarray(k), np.asarray(v)
+        for j, p in enumerate(pages):
+            sl = slice(j * page_size, min((j + 1) * page_size, l))
+            pk[p, : sl.stop - sl.start] = k[sl]
+            pv[p, : sl.stop - sl.start] = v[sl]
+    tables = jnp.asarray(pool.table_rows(range(len(ks)), width))
+    return jnp.asarray(pk), jnp.asarray(pv), tables, pool

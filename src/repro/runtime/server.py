@@ -22,6 +22,7 @@ from repro.memo.table import MemoTable
 from repro.monitor.examon import ExamonBroker, get_default_broker
 from repro.monitor.sensors import apply_wrappers
 from repro.nn.module import init_params
+from repro.runtime.pages import PagedCacheManager, cdiv, paged_compatible
 from repro.runtime.steps import (
     build_decode_step,
     build_prefill_step,
@@ -35,6 +36,10 @@ class ServerConfig:
     max_cache_len: int = 256
     decode_tokens: int = 8
     seed: int = 0
+    # paged / continuous-batching serving (serve_continuous)
+    page_size: int | None = None   # None: woven knob or 128 default
+    pool_pages: int | None = None  # None: sized for full concurrency
+    max_batch: int | None = None   # decode-batch cap (admission gate)
 
 
 class Server:
@@ -66,6 +71,10 @@ class Server:
                                   woven.state.policies)
         self.served = 0
         self.latencies: list[float] = []
+        self.decode_step_latencies: list[float] = []  # serve_continuous steps
+        self._step_lat_by_batch: dict[int, list[float]] = {}
+        self._paged_sig = None  # last paged-decode signature served
+        self._paged_dtype = None
 
     def _variant(self) -> str | None:
         if self.margot is None:
@@ -174,3 +183,185 @@ class Server:
         if self.memo is not None:
             self.memo.update(key, result)
         return result
+
+    # -- paged pool + continuous batching -----------------------------------------
+
+    def _page_size(self, state) -> int:
+        from repro.kernels.flash_attention.ops import DEFAULT_PAGE_SIZE
+
+        ps = self.cfg.page_size or state.extra.get("flash_page_size") \
+            or DEFAULT_PAGE_SIZE
+        return max(1, min(int(ps), self.cfg.max_cache_len))
+
+    def serve_continuous(self, prompts: list[np.ndarray], *,
+                         decode_tokens: int | None = None,
+                         page_size: int | None = None,
+                         pool_pages: int | None = None,
+                         max_batch: int | None = None) -> list[np.ndarray]:
+        """Continuous batching over a paged KV-cache pool.
+
+        Unlike `serve_batch` — which prefils everything up front, pads
+        every request's cache to the same length and decodes the fixed
+        batch in lockstep — this scheduler re-forms the decode batch every
+        step: waiting requests are admitted as soon as the page pool can
+        cover their worst-case growth (and a decode slot is free), each
+        admitted request's prefill cache is packed into freshly allocated
+        pages, and finished requests retire immediately, releasing their
+        pages for the next admission.  HBM scales with the *live* tokens
+        in flight, not batch x max_len, and a long request never blocks a
+        short one from entering mid-flight.
+
+        Greedy decode, bit-identical per request to `serve` / `serve_batch`
+        (the paged kernel streams the same live blocks in the same order —
+        only the DMA source is page-table-indirected).  Requires a cache
+        family the pool can host (attention KV caches); SSM / recurrent
+        state models raise — use `serve_batch`.
+        """
+        if not prompts:
+            return []
+        n = decode_tokens or self.cfg.decode_tokens
+        key = ("serve_continuous",
+               tuple(np.asarray(p).tobytes() for p in prompts), n)
+        if self.memo is not None and self.memo.running:
+            hit, out = self.memo.lookup(key)
+            if hit:
+                return out
+        t0 = time.perf_counter()
+        variant = self._variant()
+        state = self.woven.variant_state(
+            None if variant in (None, "__default__") else variant
+        )
+        state.extra["cache_max_len"] = self.cfg.max_cache_len
+        ps = page_size or self._page_size(state)
+
+        lengths = [int(np.asarray(p).reshape(-1).shape[0]) for p in prompts]
+        finals = [min(S + n - 1, self.cfg.max_cache_len) for S in lengths]
+        max_batch = max_batch or self.cfg.max_batch or len(prompts)
+        pool_pages = pool_pages or self.cfg.pool_pages \
+            or max(sum(cdiv(f, ps) for f in finals), 1)
+        manager = PagedCacheManager(pool_pages, ps)
+        # feedback observations are per-knob-setting: start a fresh window,
+        # bucketed by batch size (a decode step's cost scales with the live
+        # batch, and the DSE signature is keyed to one batch)
+        self.decode_step_latencies = []
+        self._step_lat_by_batch = {}
+
+        waiting = list(range(len(prompts)))  # FIFO arrival order
+        active: dict[int, dict] = {}         # rid -> {"tok", "pos"}
+        outputs: dict[int, list[int]] = {}
+        seen_batches: set[int] = set()       # batch sizes already compiled
+
+        def admit_ready() -> None:
+            while waiting and len(active) < max_batch:
+                rid = waiting[0]
+                if manager._groups and not manager.can_admit(finals[rid]):
+                    return
+                toks = jnp.asarray(prompts[rid], jnp.int32).reshape(1, -1)
+                logits, cache = self.prefill_vc(variant, self.params,
+                                                {"tokens": toks})
+                if not manager._groups and not paged_compatible(cache):
+                    raise ValueError(
+                        "model cache is not paged-compatible (SSM/recurrent "
+                        "state) — use serve_batch")
+                manager.admit(rid, cache, final_len=finals[rid])
+                tok = int(jnp.argmax(logits[0, -1], axis=-1))
+                outputs[rid] = [tok]
+                active[rid] = {"tok": tok, "pos": lengths[rid]}
+                waiting.pop(0)
+
+        admit_ready()
+        while active or waiting:
+            # retire before stepping: requests at their budget free pages
+            done = [r for r in active if len(outputs[r]) >= n]
+            for rid in done:
+                manager.retire(rid)
+                del active[rid]
+            if done:
+                admit_ready()
+            if not active:
+                if waiting:  # pool can't fit the next request's worst case
+                    raise RuntimeError(
+                        f"page pool too small: request {waiting[0]} needs "
+                        f"more pages than the pool holds")
+                break
+
+            rids = list(active)
+            cache = manager.batch(rids)
+            tok = jnp.asarray([[active[r]["tok"]] for r in rids], jnp.int32)
+            pos = jnp.asarray([[active[r]["pos"]] for r in rids], jnp.int32)
+            ts = time.perf_counter()
+            logits, new_cache = self.decode_vc(
+                variant, self.params,
+                {"tokens": tok, "positions": pos}, cache,
+            )
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int64)
+            # first step at each batch size pays jit tracing — excluding it
+            # keeps the tuner-feedback observations compile-free (the DSE
+            # expectations were measured post-compile too)
+            if len(rids) in seen_batches:
+                dt_step = time.perf_counter() - ts
+                self.decode_step_latencies.append(dt_step)
+                self._step_lat_by_batch.setdefault(
+                    len(rids), []).append(dt_step)
+            seen_batches.add(len(rids))
+            manager.absorb(rids, new_cache)
+            for i, rid in enumerate(rids):
+                outputs[rid].append(int(nxt[i]))
+                active[rid]["tok"] = int(nxt[i])
+                active[rid]["pos"] += 1
+
+        self._paged_dtype = next(iter(manager._groups.values()))["dtype"]
+        self._paged_sig = self._paged_signature(
+            batch=min(max_batch, len(prompts)), dtype=self._paged_dtype)
+        result = [np.asarray(outputs[r][:n], np.int64)
+                  for r in range(len(prompts))]
+        dt = time.perf_counter() - t0
+        self.latencies.append(dt)
+        self.served += len(prompts)
+        self.broker.publish(f"serve/latency/@host{jax.process_index()}", dt)
+        if self.margot is not None:
+            self.margot.observe("latency", dt)
+        if self.memo is not None:
+            self.memo.update(key, result)
+        return result
+
+    def _paged_signature(self, *, batch: int, dtype):
+        """The signature `ops.flash_decode`'s tuned_paged_blocks lookup
+        keys on for this server's decode steps — the served KV dtype and
+        the logical cache length the kernel actually sees (the window for
+        ring layouts)."""
+        from repro.autotune.kernel_tuner import paged_decode_signature
+
+        cfg = self.woven.program.cfg
+        cache_len = self.cfg.max_cache_len
+        window = getattr(cfg, "attn_window", None)
+        if window is not None and window < cache_len:
+            cache_len, window = window, None  # ring layout
+        return paged_decode_signature(
+            batch, cache_len, cfg.n_heads, cfg.kv_heads,
+            cfg.resolved_head_dim, dtype, window=window,
+        )
+
+    def refine_kernel_tuner(self, *, latency_budget: float,
+                            tuner=None) -> dict | None:
+        """Feed observed decode-step latencies back into the persistent
+        kernel-tuner cache (repro.autotune.kernel_tuner.refine_from_runtime):
+        serving traffic refines the DSE priors, so the next server process
+        picks page/block knobs selected under *observed* — not predicted —
+        latency.  Returns the re-selected knobs (None if never tuned)."""
+        from repro.autotune.kernel_tuner import refine_from_runtime
+
+        if self._paged_sig is None or not self._step_lat_by_batch:
+            return None
+        # continuous batching shrinks the batch as requests retire; a step's
+        # cost scales with the live batch, so observe only the best-sampled
+        # batch size and refine the signature keyed to *that* batch
+        batch = max(self._step_lat_by_batch,
+                    key=lambda b: len(self._step_lat_by_batch[b]))
+        observed = float(np.mean(self._step_lat_by_batch[batch]))
+        sig = self._paged_signature(batch=batch, dtype=self._paged_dtype)
+        return refine_from_runtime(
+            sig, {"latency_s": observed},
+            tuner=tuner, latency_budget=latency_budget,
+            objective_knob="page_size",
+        )

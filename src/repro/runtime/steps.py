@@ -152,7 +152,11 @@ def build_decode_step(woven: WovenProgram, *, mesh=None, variant: str | None = N
 
 def stack_request_caches(model, caches: list) -> Any:
     """Stack per-request (batch=1) prefill caches into one batched decode
-    cache with per-request `index` — the multi-request serving layout.
+    cache with per-request `index` — the *dense* multi-request serving
+    layout: every request pads to the same cache length, HBM scales with
+    batch x max_len.  `Server.serve_continuous` replaces this with the
+    paged pool (repro.runtime.pages) when the cache family supports it;
+    this stays the reference layout the paged path must match bit-for-bit.
 
     Models that know their cache structure (TransformerLM) stack through
     their own `stack_caches`; the generic fallback concatenates every leaf

@@ -16,9 +16,12 @@ from repro.autotune.kernel_tuner import (
     design_space,
     flash_decode_signature,
     flash_signature,
+    paged_decode_signature,
+    refine_from_runtime,
     rmsnorm_signature,
     tuned_decode_blocks,
     tuned_flash_blocks,
+    tuned_paged_blocks,
 )
 
 
@@ -403,6 +406,34 @@ class TestWiring:
         np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_p),
                                    rtol=1e-6, atol=1e-6)
 
+    def test_paged_knobs_threaded_to_woven_program(self, tmp_path,
+                                                   monkeypatch):
+        """A tuned paged_decode entry must land both the pool geometry
+        (`flash_page_size`) and the jointly-tuned streamed block
+        (`flash_block_kv_dec`, overriding the plain decode entry) in the
+        woven extras the serving runtime reads."""
+        from repro.core.program import Program
+        from repro.core.strategies.kernels import TunedKernelAspect
+        from repro.core.weaver import Weaver
+
+        path = str(tmp_path / "paged.json")
+        monkeypatch.setenv("REPRO_TUNER_CACHE", path)
+        program = Program.from_arch("gemma-2b", reduced=True)
+        aspect = TunedKernelAspect(2, 256, dtype="bfloat16", cache_len=512)
+        sig = aspect.paged_signature(program.cfg)
+        assert sig.kernel == "paged_decode"
+
+        def measure(**kn):  # prefer page_size=256, block_kv_dec=128
+            return (1.0 + abs(kn["page_size"] - 256)
+                    + abs(kn["block_kv_dec"] - 128))
+
+        KernelTuner(path).tune(sig, measure)
+        woven = Weaver(program).weave([aspect])
+        assert woven.state.extra["flash_page_size"] == 256
+        assert woven.state.extra["flash_block_kv_dec"] == 128
+        assert "flash_page_size" in woven.knobs
+        assert woven.knobs["flash_page_size"].default == 256
+
     def test_rglru_blocks_threaded_to_woven_program(self, tmp_path,
                                                     monkeypatch):
         from repro.core.program import Program
@@ -423,3 +454,152 @@ class TestWiring:
         assert woven.state.extra["rglru_block_d"] == 128
         assert woven.state.extra["rglru_chunk"] == 128
         assert "rglru_block_d" in woven.knobs
+
+
+class TestPagedDecodeSpace:
+    """The paged_decode kernel space: pool geometry (page_size) jointly
+    tuned with the streamed block, VMEM-constrained via the effective
+    (page-divisor-clamped) block."""
+
+    def test_signature_distinct_from_decode(self):
+        dec = flash_decode_signature(2, 1024, 8, 2, 64)
+        paged = paged_decode_signature(2, 1024, 8, 2, 64)
+        assert dec.key() != paged.key()
+        assert paged.kernel == "paged_decode"
+
+    def test_space_has_both_knobs_capped_by_cache(self):
+        space = design_space(paged_decode_signature(1, 256, 4, 2, 64))
+        assert max(space["page_size"]) <= 256
+        assert max(space["block_kv_dec"]) <= 256
+        knobs = {k: v[0] for k, v in space.items()}
+        sig = paged_decode_signature(1, 256, 4, 2, 64)
+        assert 0 < config_vmem_bytes(sig, knobs) <= DEFAULT_VMEM_BUDGET
+
+    def test_block_clamped_to_page_divisor_in_vmem_model(self):
+        """block_kv_dec > page_size streams page-sized blocks, so the VMEM
+        working set must stop growing past the page (the knob interaction
+        the DSE explores)."""
+        sig = paged_decode_signature(2, 2048, 8, 2, 64)
+        at_page = config_vmem_bytes(
+            sig, {"page_size": 128, "block_kv_dec": 128})
+        past_page = config_vmem_bytes(
+            sig, {"page_size": 128, "block_kv_dec": 1024})
+        assert at_page == past_page
+        bigger_page = config_vmem_bytes(
+            sig, {"page_size": 512, "block_kv_dec": 1024})
+        assert bigger_page > at_page
+
+    def test_tuned_paged_lookup(self, tmp_path, monkeypatch):
+        path = str(tmp_path / "paged_env.json")
+        monkeypatch.setenv("REPRO_TUNER_CACHE", path)
+        sig = paged_decode_signature(2, 512, 4, 2, 64, "float32")
+
+        def measure(**kn):
+            return (1.0 + abs(kn["page_size"] - 128)
+                    + abs(kn["block_kv_dec"] - 256))
+
+        KernelTuner(path).tune(sig, measure)
+        got = tuned_paged_blocks((2, 1, 4, 64), 512, 2, "float32")
+        assert got == {"page_size": 128, "block_kv_dec": 256}
+
+    def test_untuned_paged_falls_back_to_decode_entry(self, tmp_path,
+                                                      monkeypatch):
+        """A pool built before paged tuning ran still streams the plain
+        flash_decode entry's tuned block."""
+        path = str(tmp_path / "fb.json")
+        monkeypatch.setenv("REPRO_TUNER_CACHE", path)
+        dec = flash_decode_signature(2, 512, 4, 2, 64, "float32")
+
+        def measure(**kn):
+            return 1.0 + abs(kn["block_kv_dec"] - 128)
+
+        KernelTuner(path).tune(dec, measure)
+        got = tuned_paged_blocks((2, 1, 4, 64), 512, 2, "float32")
+        assert got == {"block_kv_dec": 128}
+        monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path / "none.json"))
+        assert tuned_paged_blocks((2, 1, 4, 64), 512, 2, "float32") == {}
+
+
+class TestRuntimeFeedback:
+    """refine_from_runtime: mARGOt error coefficients over the persisted
+    DSE rows — serving traffic refines the priors (ROADMAP feedback-loop
+    item)."""
+
+    def _seed_entry(self, path, sig):
+        """Synthetic DSE result: latency grows with page_size (bigger pool
+        granularity, bigger worst-case DMA), so a latency budget caps how
+        big a page the objective (maximize page_size) may pick."""
+        tuner = KernelTuner(path)
+        ops = []
+        for ps, lat in ((64, 0.4e-3), (128, 0.6e-3), (256, 0.9e-3)):
+            knobs = {"page_size": ps, "block_kv_dec": 256}
+            ops.append({
+                "knobs": knobs,
+                "metrics": {
+                    "latency_s": [lat, 1e-5],
+                    "vmem_bytes": [float(config_vmem_bytes(sig, knobs)), 0.0],
+                },
+            })
+        tuner.cache.put(sig.key(), {
+            "knobs": dict(ops[-1]["knobs"]),
+            "metrics": dict(ops[-1]["metrics"]),
+            "ops": ops,
+        })
+        return tuner
+
+    def test_observation_shifts_selected_knob(self, tmp_path):
+        """Observed latency 2x the expectation on the current operating
+        point rescales every op; only the small page now fits the budget,
+        so the persisted selection must move."""
+        path = str(tmp_path / "rt.json")
+        sig = paged_decode_signature(2, 1024, 8, 2, 64)
+        tuner = self._seed_entry(path, sig)
+        assert tuner.lookup(sig)["page_size"] == 256
+
+        # accurate observations: selection stays (largest page under budget)
+        got = refine_from_runtime(sig, {"latency_s": 0.9e-3}, tuner=tuner,
+                                  latency_budget=1.0e-3)
+        assert got["page_size"] == 256
+
+        # drifted context: current op observed at 1.8ms (2x) -> coef 2 ->
+        # adjusted latencies (0.8, 1.2, 1.8)ms -> only page_size=64 fits
+        got = refine_from_runtime(sig, {"latency_s": 1.8e-3}, tuner=tuner,
+                                  latency_budget=1.0e-3)
+        assert got["page_size"] == 64
+        assert tuner.lookup(sig)["page_size"] == 64
+
+    def test_adjusted_ops_persisted(self, tmp_path):
+        """The error-coefficient-adjusted operating points land in the JSON
+        cache: a fresh process starts from traffic-refined priors."""
+        path = str(tmp_path / "persist.json")
+        sig = paged_decode_signature(2, 1024, 8, 2, 64)
+        tuner = self._seed_entry(path, sig)
+        refine_from_runtime(sig, {"latency_s": 1.8e-3}, tuner=tuner,
+                            latency_budget=1.0e-3)
+
+        data = json.load(open(path))
+        entry = data[sig.key()]
+        assert entry["runtime"]["error_coef"]["latency_s"] == pytest.approx(2.0)
+        by_ps = {row["knobs"]["page_size"]: row for row in entry["ops"]}
+        assert by_ps[64]["metrics"]["latency_s"][0] == pytest.approx(0.8e-3)
+        assert by_ps[256]["metrics"]["latency_s"][0] == pytest.approx(1.8e-3)
+        # fresh tuner over the same file serves the refined knob
+        assert KernelTuner(path).lookup(sig)["page_size"] == 64
+
+    def test_refinement_compounds_across_observations(self, tmp_path):
+        """Coefficients apply to the *persisted* (already adjusted) ops, so
+        a second accurate observation keeps the refined expectations."""
+        path = str(tmp_path / "compound.json")
+        sig = paged_decode_signature(2, 1024, 8, 2, 64)
+        tuner = self._seed_entry(path, sig)
+        refine_from_runtime(sig, {"latency_s": 1.8e-3}, tuner=tuner,
+                            latency_budget=1.0e-3)  # -> page 64 @ 0.8ms
+        got = refine_from_runtime(sig, {"latency_s": 0.8e-3}, tuner=tuner,
+                                  latency_budget=1.0e-3)
+        assert got["page_size"] == 64  # coef 1: expectations already match
+
+    def test_never_tuned_returns_none(self, tmp_path):
+        tuner = KernelTuner(str(tmp_path / "cold.json"))
+        sig = paged_decode_signature(2, 1024, 8, 2, 64)
+        assert refine_from_runtime(sig, {"latency_s": 1e-3},
+                                   tuner=tuner, latency_budget=1e-3) is None

@@ -1,0 +1,318 @@
+"""Paged KV-cache pool + continuous batching (the PR 4 serving layer).
+
+Covers:
+  - PagePool allocator invariants, property-tested over random op
+    sequences: no double allocation, free-list reuse, block tables only
+    ever reference live pages, conservation of pages;
+  - reservation-aware admission (deadlock-free growth);
+  - PagedCacheManager round-trips (admit -> batch -> absorb -> retire);
+  - Server.serve_continuous == serve_batch == per-request serve, including
+    under interleaved admit/retire (tiny pool / batch caps) — the
+    continuous-batching acceptance criterion.
+"""
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from _hypothesis_compat import given, settings, st
+
+from repro.runtime.pages import (
+    PagePool,
+    PagedCacheManager,
+    PoolExhausted,
+    build_linear_pool,
+    cdiv,
+    paged_compatible,
+)
+
+
+class TestPagePool:
+    def test_alloc_release_roundtrip(self):
+        pool = PagePool(8, 16)
+        a = pool.alloc("a", 3)
+        b = pool.alloc("b", 2)
+        assert len(set(a) | set(b)) == 5  # disjoint
+        assert pool.free_pages == 3
+        pool.release("a")
+        assert pool.free_pages == 6
+        c = pool.alloc("c", 4)
+        assert set(c) & set(a)  # freed pages are reused
+        assert not (set(c) & set(b))
+
+    def test_lifo_reuse_keeps_working_set_compact(self):
+        pool = PagePool(16, 8)
+        first = pool.alloc("a", 2)
+        pool.release("a")
+        again = pool.alloc("b", 2)
+        assert set(again) == set(first)
+
+    def test_exhaustion_raises_and_rolls_back_nothing(self):
+        pool = PagePool(4, 8)
+        pool.alloc("a", 3)
+        with pytest.raises(PoolExhausted):
+            pool.alloc("b", 2)
+        assert pool.free_pages == 1
+        assert "b" not in pool.tables
+
+    def test_grow_appends_at_tail(self):
+        pool = PagePool(8, 8)
+        start = list(pool.alloc("a", 2))
+        new = pool.grow_to("a", 4)
+        assert pool.tables["a"][:2] == start  # prefix untouched
+        assert pool.tables["a"][2:] == new
+        assert pool.grow_to("a", 3) == []  # already covered
+
+    def test_double_alloc_rejected(self):
+        pool = PagePool(4, 8)
+        pool.alloc("a", 1)
+        with pytest.raises(KeyError):
+            pool.alloc("a", 1)
+
+    def test_table_rows_pads_with_valid_page(self):
+        pool = PagePool(8, 8)
+        pool.alloc("a", 2)
+        pool.alloc("b", 3)
+        rows = pool.table_rows(["a", "b"], width=4)
+        assert rows.shape == (2, 4)
+        assert (rows >= 0).all() and (rows < 8).all()
+        assert list(rows[1, :3]) == pool.tables["b"]
+
+    @given(st.lists(st.tuples(st.integers(0, 2), st.integers(1, 5)),
+                    min_size=1, max_size=60))
+    @settings(max_examples=50, deadline=None)
+    def test_invariants_under_random_churn(self, ops):
+        """Random alloc/grow/release sequences preserve the allocator
+        invariants: live tables are pairwise disjoint, live + free is a
+        partition of the pool, and every table entry is a valid page."""
+        pool = PagePool(24, 8)
+        rid = 0
+        live = {}
+        for op, arg in ops:
+            if op == 0:  # alloc a new request
+                try:
+                    live[rid] = pool.alloc(rid, arg)
+                except PoolExhausted:
+                    assert pool.free_pages < arg
+                rid += 1
+            elif op == 1 and live:  # grow the oldest live request
+                target = next(iter(live))
+                want = len(pool.tables[target]) + arg
+                try:
+                    pool.grow_to(target, want)
+                    live[target] = pool.tables[target]
+                except PoolExhausted:
+                    assert pool.free_pages < arg
+            elif op == 2 and live:  # release the oldest live request
+                target = next(iter(live))
+                pool.release(target)
+                del live[target]
+
+            allocated = [p for t in pool.tables.values() for p in t]
+            assert len(allocated) == len(set(allocated))  # no double alloc
+            assert len(allocated) + pool.free_pages == pool.num_pages
+            assert all(0 <= p < pool.num_pages for p in allocated)
+            assert set(pool.tables) == set(live)
+
+
+class TestBuildLinearPool:
+    def test_pool_packs_prefixes_and_tables_resolve(self):
+        ks = [np.arange(l * 2 * 4, dtype=np.float32).reshape(l, 2, 4)
+              for l in (5, 12)]
+        pk, pv, tables, pool = build_linear_pool(ks, ks, 4, max_len=16)
+        assert pool.live_pages == cdiv(5, 4) + cdiv(12, 4)
+        for i, l in enumerate((5, 12)):
+            got = np.asarray(pk[tables[i]]).reshape(-1, 2, 4)[:l]
+            np.testing.assert_array_equal(got, ks[i])
+
+
+class TestPagedCacheManager:
+    def _prefill_cache(self, model, params, pol, toks):
+        from repro.nn.module import Ctx
+
+        ctx = Ctx(policies=pol, extra={"cache_max_len": 24})
+        _, cache = model(params, {"tokens": toks}, ctx=ctx, mode="prefill")
+        return cache
+
+    def _setup(self):
+        from repro.models.registry import build_model, reduced_config
+        from repro.nn.dtypes import PolicyResolver
+        from repro.nn.module import init_params
+
+        pol = PolicyResolver.default("double")
+        cfg = reduced_config("yi-6b")
+        model = build_model(cfg)
+        params = init_params(model, jax.random.PRNGKey(0), pol)
+        return model, params, pol
+
+    def test_admit_batch_absorb_retire_roundtrip(self):
+        model, params, pol = self._setup()
+        manager = PagedCacheManager(num_pages=12, page_size=8)
+        for rid, S in enumerate((3, 7)):
+            toks = jnp.ones((1, S), jnp.int32)
+            cache = self._prefill_cache(model, params, pol, toks)
+            assert paged_compatible(cache)
+            assert rid == 0 or manager.can_admit(S + 4)
+            manager.admit(rid, cache, final_len=S + 4)
+        cache = manager.batch([0, 1])
+        assert "block_tables" in cache and "kv_pos" in cache
+        group = next(v for k, v in cache.items()
+                     if isinstance(v, dict) and "pk" in v)
+        assert group["index"].shape[-1] == 2
+        np.testing.assert_array_equal(np.asarray(group["index"])[..., 0], 3)
+        manager.absorb([0, 1], cache)  # identity step: lengths advance
+        assert manager._meta[0]["length"] == 4
+        manager.retire(0)
+        assert manager.pool.free_pages > 0
+        cache2 = manager.batch([1])
+        assert cache2["block_tables"].shape[0] == 1
+
+    def test_rejects_mixed_cache_families(self):
+        """Sliding-window models ring only when prompt_len > window, so a
+        batch straddling W would mix ring and linear layouts in one pool —
+        the manager must refuse loudly instead of silently mis-packing."""
+        from repro.models.registry import build_model, reduced_config
+        from repro.nn.dtypes import PolicyResolver
+        from repro.nn.module import Ctx, init_params
+
+        pol = PolicyResolver.default("double")
+        cfg = reduced_config("mixtral-8x22b")  # attn_window=16 reduced
+        model = build_model(cfg)
+        params = init_params(model, jax.random.PRNGKey(0), pol)
+        ctx = Ctx(policies=pol, extra={"cache_max_len": 24})
+        caches = []
+        for S in (3, 20):  # linear (S <= W) then ring (S > W)
+            _, cache = model(params,
+                             {"tokens": jnp.ones((1, S), jnp.int32)},
+                             ctx=ctx, mode="prefill")
+            caches.append(cache)
+        manager = PagedCacheManager(num_pages=16, page_size=8)
+        manager.admit(0, caches[0], final_len=8)
+        with pytest.raises(ValueError, match="family mismatch"):
+            manager.admit(1, caches[1], final_len=23)
+
+    def test_rejects_ssm_state(self):
+        from repro.models.registry import build_model, reduced_config
+        from repro.nn.dtypes import PolicyResolver
+        from repro.nn.module import Ctx, init_params
+
+        pol = PolicyResolver.default("double")
+        cfg = reduced_config("rwkv6-3b")
+        model = build_model(cfg)
+        params = init_params(model, jax.random.PRNGKey(0), pol)
+        ctx = Ctx(policies=pol, extra={"cache_max_len": 16})
+        _, cache = model(params, {"tokens": jnp.ones((1, 4), jnp.int32)},
+                         ctx=ctx, mode="prefill")
+        assert not paged_compatible(cache)
+        manager = PagedCacheManager(num_pages=4, page_size=8)
+        with pytest.raises(ValueError):
+            manager.admit(0, cache, final_len=8)
+
+
+def _server(arch, **cfg_kw):
+    from repro.configs.base import SHAPES
+    from repro.core.program import Program
+    from repro.launch.weave import default_weave
+    from repro.runtime.server import Server, ServerConfig
+
+    program = Program.from_arch(arch, kind="serve", reduced=True)
+    woven = default_weave(program, SHAPES["prefill_32k"], {})
+    return Server(woven, ServerConfig(max_cache_len=24, decode_tokens=4,
+                                      **cfg_kw))
+
+
+PROMPTS = [np.ones((5,), np.int32),
+           (np.arange(1, 9) % 50).astype(np.int32),
+           np.full((3,), 7, np.int32)]
+
+
+class TestContinuousServer:
+    """serve_continuous == serve_batch == per-request serve — bit-identical
+    greedy decode over the paged pool (acceptance criterion), for both the
+    linear (yi) and ring (mixtral sliding-window) cache families."""
+
+    @pytest.mark.parametrize("arch", ["yi-6b", "mixtral-8x22b"])
+    def test_continuous_equals_batch_and_solo(self, arch):
+        srv = _server(arch)
+        batched = srv.serve_batch(PROMPTS)
+        cont = srv.serve_continuous(PROMPTS, page_size=8)
+        for p, b, c in zip(PROMPTS, batched, cont):
+            np.testing.assert_array_equal(b, c)
+            np.testing.assert_array_equal(c, srv.serve(p[None])[0])
+
+    def test_interleaved_admit_retire_parity(self):
+        """A batch cap forces late arrivals to wait for a retirement —
+        the continuous path must still match the all-at-once batch."""
+        srv = _server("yi-6b")
+        batched = srv.serve_batch(PROMPTS)
+        for max_batch in (1, 2):
+            cont = srv.serve_continuous(PROMPTS, page_size=8,
+                                        max_batch=max_batch)
+            for b, c in zip(batched, cont):
+                np.testing.assert_array_equal(b, c)
+
+    def test_page_constrained_admission_parity(self):
+        """A pool that cannot hold every request at once must admit in
+        waves (pages freed by retirement re-admit the waiters) and still
+        match."""
+        srv = _server("yi-6b")
+        batched = srv.serve_batch(PROMPTS)
+        # worst case per request: ceil((8+3)/8) = 2 pages; 4 pages = 2-wide
+        cont = srv.serve_continuous(PROMPTS, page_size=8, pool_pages=4)
+        for b, c in zip(batched, cont):
+            np.testing.assert_array_equal(b, c)
+
+    def test_pool_too_small_raises(self):
+        srv = _server("yi-6b")
+        with pytest.raises((RuntimeError, PoolExhausted)):
+            srv.serve_continuous(PROMPTS, page_size=8, pool_pages=1)
+
+    def test_ssm_family_raises(self):
+        srv = _server("rwkv6-3b")
+        with pytest.raises(ValueError):
+            srv.serve_continuous([np.ones((4,), np.int32)])
+
+    def test_memoized_continuous(self):
+        from repro.memo.table import MemoTable
+
+        srv = _server("yi-6b")
+        srv.memo = MemoTable(size=8)
+        a = srv.serve_continuous(PROMPTS[:2], page_size=8)
+        b = srv.serve_continuous(PROMPTS[:2], page_size=8)
+        assert srv.memo.hits >= 1
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+
+    def test_decode_step_latencies_recorded_and_refine_smoke(self, tmp_path,
+                                                            monkeypatch):
+        """Serving records per-step decode latencies and can push them into
+        the tuner cache once the paged signature has DSE rows."""
+        from repro.autotune.kernel_tuner import KernelTuner, config_vmem_bytes
+
+        monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path / "rt.json"))
+        srv = _server("yi-6b")
+        srv.serve_continuous(PROMPTS, page_size=8)
+        assert srv.decode_step_latencies
+        assert srv._paged_sig is not None
+        assert srv.refine_kernel_tuner(latency_budget=1.0) is None  # untuned
+
+        tuner = KernelTuner(str(tmp_path / "rt.json"))
+        sig = srv._paged_sig
+        knobs = {"page_size": 64, "block_kv_dec": 128}
+        tuner.cache.put(sig.key(), {
+            "knobs": dict(knobs),
+            "metrics": {"latency_s": [1e-3, 0.0]},
+            "ops": [{"knobs": dict(knobs),
+                     "metrics": {
+                         "latency_s": [1e-3, 0.0],
+                         "vmem_bytes": [
+                             float(config_vmem_bytes(sig, knobs)), 0.0]}}],
+        })
+        got = srv.refine_kernel_tuner(latency_budget=10.0, tuner=tuner)
+        assert got == knobs
+        entry = tuner.cache.get(sig.key())
+        assert "runtime" in entry and "error_coef" in entry["runtime"]
