@@ -1,0 +1,172 @@
+"""Prefix-sharing page-pool bench (the PR 5 perf data point).
+
+N requests sharing one long system prompt — the
+millions-of-users-one-template serving shape — served end-to-end through
+`Server.serve_continuous` twice: once with the refcounted prefix-sharing
+pool, once with sharing disabled (every request stores its own prompt
+copy).  Three claims, all asserted here and in CI:
+
+  pool pages      with sharing, peak distinct pages =
+                  pages(prefix) + sum_i pages(suffix_i [+ growth]) — the
+                  shared system prompt is stored ONCE; unshared peak =
+                  sum_i pages(prefix + suffix_i [+ growth]).  The gap is
+                  (N - 1) x pages(prefix) and widens with fan-out.
+  prefill HBM     admission writes K/V straight into pool pages (the
+                  paged-prefill path through Attention): the per-admission
+                  transient is one layer's live-prompt K/V view, never
+                  the all-layer dense max_len cache the packing path used
+                  to build — and with a shared prefix only the *non-shared
+                  suffix* is even computed.
+  bit-parity      shared and unshared serving return identical tokens:
+                  shared pages hold exactly the bytes an exclusive prefill
+                  would have written, and the block-table kernel streams
+                  them identically (the indirection lives in the table).
+
+Merges a `prefix_cache` section into artifacts/bench/BENCH_kernels.json;
+runnable standalone via `benchmarks/run.py --only prefix_cache`.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.base import SHAPES
+from repro.core.program import Program
+from repro.kernels.flash_attention.kernel import cdiv
+from repro.launch.weave import default_weave
+from repro.runtime.server import Server, ServerConfig
+
+
+def run(artifacts: str, *, quick: bool = False) -> list[str]:
+    rows: list[str] = []
+    # geometry: a prefix spanning several pages + short per-request suffixes
+    ps = 8 if quick else 16
+    n_req = 3 if quick else 4
+    prefix_len = 4 * ps           # page-aligned system prompt
+    suffix_len = 3
+    decode_tokens = 4
+    max_cache_len = prefix_len + suffix_len + decode_tokens + ps
+
+    program = Program.from_arch("yi-6b", kind="serve", reduced=True)
+    woven = default_weave(program, SHAPES["prefill_32k"], {})
+    srv = Server(woven, ServerConfig(max_cache_len=max_cache_len,
+                                     decode_tokens=decode_tokens))
+    cfg = program.cfg
+
+    rng = np.random.default_rng(7)
+    prefix = (rng.integers(1, cfg.vocab, prefix_len)).astype(np.int32)
+    prompts = [
+        np.concatenate([prefix,
+                        rng.integers(1, cfg.vocab, suffix_len).astype(np.int32)])
+        for _ in range(n_req)
+    ]
+    finals = [min(len(p) + decode_tokens - 1, max_cache_len) for p in prompts]
+
+    t0 = time.perf_counter()
+    out_shared = srv.serve_continuous(prompts, page_size=ps)
+    t_shared = time.perf_counter() - t0
+    stats_shared = dict(srv.last_pool_stats)
+
+    t0 = time.perf_counter()
+    out_unshared = srv.serve_continuous(prompts, page_size=ps,
+                                        prefix_sharing=False)
+    t_unshared = time.perf_counter() - t0
+    stats_unshared = dict(srv.last_pool_stats)
+
+    # -- bit-parity: shared pages hold exactly the unshared bytes -------------
+    parity = all(
+        np.array_equal(a, b) for a, b in zip(out_shared, out_unshared)
+    )
+    assert parity, "prefix-shared serving diverged from unshared"
+
+    # -- pool-page economics (the acceptance formula) -------------------------
+    # peak pages with sharing: the prefix once + each request's private
+    # pages at its fully-grown final length
+    prefix_pages = prefix_len // ps
+    pages_shared_expect = prefix_pages + sum(
+        cdiv(f, ps) - prefix_pages for f in finals
+    )
+    pages_unshared_expect = sum(cdiv(f, ps) for f in finals)
+    assert stats_shared["peak_live_pages"] == pages_shared_expect, (
+        stats_shared, pages_shared_expect)
+    assert stats_unshared["peak_live_pages"] == pages_unshared_expect, (
+        stats_unshared, pages_unshared_expect)
+    # the logical (mapped) view is identical — sharing is invisible above
+    # the block table
+    assert stats_shared["peak_mapped_pages"] == pages_unshared_expect
+    assert stats_shared["prefix_hits"] >= (n_req - 1) * prefix_pages
+    assert stats_unshared["prefix_hits"] == 0
+
+    # -- prefill-transient: direct-to-pool vs the old dense packing -----------
+    # the dense path is *measurably* gone: every admission above went
+    # through the paged-prefill step (probe is a 1-token unpadded cache),
+    # the max_len-padding prefill step was never dispatched
+    dense_prefill_calls = sum(srv.prefill_vc.dispatch_counts.values())
+    assert dense_prefill_calls == 0, srv.prefill_vc.dispatch_counts
+    assert sum(srv.paged_prefill_vc.dispatch_counts.values()) > 0
+    # K+V scalars materialized outside the pool per admission: the old
+    # packing path returned a max_len-padded dense cache for EVERY layer
+    # at once; the paged path holds one layer's live-prompt view at a time
+    # (the suffix it computes plus, on a prefix hit, the table-gathered
+    # logical KV) — O(live tokens), never O(layers x max_len), and only
+    # the non-shared suffix is *computed*
+    kv_slot = 2 * cfg.kv_heads * cfg.resolved_head_dim  # one layer's slot
+    dense_transient = max_cache_len * kv_slot * cfg.num_layers
+    paged_first = len(prompts[0]) * kv_slot    # full prompt, one layer
+    paged_rest = len(prompts[0]) * kv_slot     # prefix hit: gather + suffix
+    paged_computed = suffix_len * kv_slot      # ...but only this computed
+
+    section = {
+        "config": {
+            "arch": cfg.name,
+            "n_requests": n_req,
+            "prefix_len": prefix_len,
+            "suffix_len": suffix_len,
+            "decode_tokens": decode_tokens,
+            "page_size": ps,
+            "max_cache_len": max_cache_len,
+        },
+        "pages": {
+            "prefix_pages": prefix_pages,
+            "peak_shared": stats_shared["peak_live_pages"],
+            "peak_unshared": stats_unshared["peak_live_pages"],
+            "formula_shared": pages_shared_expect,
+            "formula_unshared": pages_unshared_expect,
+            "page_ratio": (stats_shared["peak_live_pages"]
+                           / stats_unshared["peak_live_pages"]),
+            "prefix_hits": stats_shared["prefix_hits"],
+            "cow_splits": stats_shared["cow_splits"],
+        },
+        "prefill_transient_kv": {
+            "dense_max_len_path": dense_transient,
+            "paged_first_admission": paged_first,
+            "paged_prefix_hit": paged_rest,
+            "paged_prefix_hit_computed": paged_computed,
+            "dense_prefill_dispatches": dense_prefill_calls,
+            "dense_transient_eliminated": dense_prefill_calls == 0,
+        },
+        "parity": {"tokens_equal": bool(parity)},
+        "latency_s": {"shared": t_shared, "unshared": t_unshared},
+    }
+
+    ratio = section["pages"]["page_ratio"]
+    rows.append(
+        f"prefix_cache,{t_shared*1e6:.0f},"
+        f"page_ratio={ratio:.3f};prefix_hits={stats_shared['prefix_hits']};"
+        f"parity={int(parity)}"
+    )
+    print(f"  prefix_cache[{n_req}x({prefix_len}+{suffix_len})]: pool "
+          f"{stats_shared['peak_live_pages']} pages shared vs "
+          f"{stats_unshared['peak_live_pages']} unshared ({ratio:.1%}), "
+          f"{stats_shared['prefix_hits']} prefix hits, "
+          f"{stats_shared['cow_splits']} CoW splits, parity exact, "
+          f"prefill transient {paged_rest}/{dense_transient} kv values "
+          f"(one-layer live prompt vs all-layer dense max_len, "
+          f"{paged_computed} computed)")
+
+    from benchmarks.kernels import merge_bench_sections
+
+    merge_bench_sections(artifacts, {"prefix_cache": section})
+    return rows

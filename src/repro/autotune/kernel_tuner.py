@@ -31,7 +31,11 @@ points and re-select the knobs under the adjusted constraints — the paper's
 "runtime observations as feedback information" closed over the persistent
 knowledge base.  The `paged_decode` space adds the serving pool geometry:
 `page_size` (allocation quantum of the paged KV cache) jointly explored
-with `block_kv_dec` (clamped to a page divisor).
+with `block_kv_dec` (clamped to a page divisor); its DSE rows also record
+`pool_hbm_bytes`, the shared-prefix HBM model (`prefix_shared_pool_bytes`)
+— prefix caching shares full prompt pages across requests, and smaller
+pages share a longer page-aligned prefix, the capacity counterweight to
+large pages' smaller block tables.
 """
 
 from __future__ import annotations
@@ -217,6 +221,29 @@ def config_vmem_bytes(sig: KernelSignature, knobs: Mapping[str, int]) -> int:
     raise KeyError(sig.kernel)
 
 
+def prefix_shared_pool_bytes(sig: KernelSignature, knobs: Mapping[str, int],
+                             *, prefix_len: int | None = None) -> int:
+    """HBM a prefix-shared pool allocates for the signature's batch at the
+    knob's pool geometry: full prefix pages are stored *once* (refcounted
+    copy-on-write sharing in `repro.runtime.pages`), each request adds only
+    its suffix pages plus the prefix/suffix straddling partial.
+
+    This is the shared-page HBM model the pool-geometry DSE weighs against
+    block-stream efficiency: sharing rounds the prefix *down* to a page
+    boundary, so smaller pages share more of it — the counterweight to
+    large pages' smaller tables.  `prefix_len` defaults to half the cache
+    (the serving-mix assumption recorded with the DSE rows); callers with a
+    known system-prompt length pass it explicitly.
+    """
+    B, T, H, K, D = sig.shape
+    ps = int(knobs["page_size"])
+    prefix = min(T // 2 if prefix_len is None else int(prefix_len), T)
+    shared_full = prefix // ps           # stored once, every table maps them
+    per_request = cdiv(T, ps) - shared_full
+    pages = shared_full + B * per_request
+    return pages * ps * K * D * 2 * dtype_bytes(sig.dtype)
+
+
 def design_space(sig: KernelSignature, *,
                  vmem_budget: int = DEFAULT_VMEM_BUDGET) -> dict[str, list[int]]:
     """Per-kernel knob values, pre-filtered so every value is feasible for
@@ -376,6 +403,14 @@ class KernelTuner:
         lat.add_metric(
             "vmem_bytes", lambda **knobs: config_vmem_bytes(sig, knobs)
         )
+        if sig.kernel == "paged_decode":
+            # pool-geometry DSE also records the shared-prefix HBM model:
+            # the rows let refine_from_runtime / offline analysis trade the
+            # page_size knob against prefix-cache capacity, not just VMEM
+            lat.add_metric(
+                "pool_hbm_bytes",
+                lambda **knobs: float(prefix_shared_pool_bytes(sig, knobs)),
+            )
         results = lat.tune(sample=sample, seed=seed)
 
         feasible = [

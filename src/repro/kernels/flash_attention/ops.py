@@ -216,6 +216,22 @@ def _as_tuple(x):
     return (x,)
 
 
+def paged_gather_kv(pk, pv, tables, kv_len: int):
+    """Materialize the logical (B, kv_len, K, D) K/V view of a page pool
+    through per-request block tables — the XLA-reference twin of the
+    indirection the paged `flash_decode` kernel performs in its BlockSpec
+    index_map.  Shared (prefix-cached) pages gather exactly like exclusive
+    ones: the table row is the only addressing, so refcounted pools need no
+    kernel changes.  Used by `Attention._decode_paged`'s reference path and
+    the paged-prefill path (suffix tokens attending over pool-resident
+    prefixes)."""
+    B, nb = tables.shape
+    ps = pk.shape[-3]  # pool layout (P, page_size, K, D)
+    k = pk[tables].reshape(B, nb * ps, *pk.shape[-2:])[:, :kv_len]
+    v = pv[tables].reshape(B, nb * ps, *pv.shape[-2:])[:, :kv_len]
+    return k, v
+
+
 # ---------------------------------------------------------------------------
 # Decode (one token against a cache) — the serving hot path
 # ---------------------------------------------------------------------------
@@ -291,7 +307,10 @@ def flash_decode(
     kernel's blocks.  Passing `tables` selects the paged layout: K/V are
     one shared page pool and every request's cache blocks resolve through
     its block-table row (tuned via the `paged_decode` signature, which
-    also carries the `page_size` knob the pool was built with).
+    also carries the `page_size` knob the pool was built with).  Prefix
+    sharing is pure table plumbing: rows of several requests may name the
+    same physical page and the kernel streams it for each — the body never
+    changes, so shared-pool output stays bit-identical to unshared.
     """
     if interpret is None:
         interpret = _interpret_default()

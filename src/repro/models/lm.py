@@ -71,7 +71,8 @@ class DecoderBlock(Module):
                 "ffn": self.ffn}
 
     def __call__(self, params, x, *, ctx: Ctx, mode="dense", cache=None,
-                 positions=None, kv_pos=None, block_tables=None):
+                 positions=None, kv_pos=None, block_tables=None,
+                 prefix_len=0, skip_cache_write=False):
         with ctx.scope(self.name):
             h = self.norm1(params["norm1"], x, ctx=ctx)
             # single gather point for the sequence-parallel residual (the
@@ -79,7 +80,9 @@ class DecoderBlock(Module):
             h = ctx.constrain(h, ("batch", "seq_act", "embed"))
             h, new_cache = self.attn(params["attn"], h, ctx=ctx, positions=positions,
                                      mode=mode, cache=cache, kv_pos=kv_pos,
-                                     block_tables=block_tables)
+                                     block_tables=block_tables,
+                                     prefix_len=prefix_len,
+                                     skip_cache_write=skip_cache_write)
             x = x + h
             h = self.norm2(params["norm2"], x, ctx=ctx)
             h = ctx.constrain(h, ("batch", "seq_act", "embed"))
@@ -212,7 +215,8 @@ class TransformerLM(Module):
     # -- forward -----------------------------------------------------------------
 
     def __call__(self, params, inputs: dict, *, ctx: Ctx, mode: str = "dense",
-                 cache: dict | None = None):
+                 cache: dict | None = None, prefix_len: int = 0,
+                 skip_cache_write: bool = False):
         cfg = self.cfg
         tokens = inputs["tokens"]
         B = tokens.shape[0]
@@ -229,6 +233,9 @@ class TransformerLM(Module):
         if positions is None:
             if mode == "decode":
                 raise ValueError("decode mode requires explicit positions")
+            if prefix_len:
+                raise ValueError("paged prefill with a shared prefix needs "
+                                 "explicit (prefix-offset) positions")
             positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
 
         new_caches: dict[str, Any] = {}
@@ -242,14 +249,17 @@ class TransformerLM(Module):
         # attention layer — instead of each layer re-deriving an arange(T)
         # mask broadcast to (B, T).  Paged serving caches hoist their
         # block tables the same way: one (B, NB) page map shared by every
-        # layer (the per-layer pools index the same physical page space).
+        # layer (the per-layer pools index the same physical page space) —
+        # in decode mode AND in the paged-prefill mode, where each layer
+        # scatters the prompt suffix K/V straight into its pool pages.
         kv_pos = None
         block_tables = None
         if mode == "decode" and cache is not None and "kv_pos" in cache:
             idx_col = positions[:, -1]
             kv_pos = cache["kv_pos"].at[jnp.arange(B), idx_col].set(idx_col)
             new_caches["kv_pos"] = kv_pos
-        if mode == "decode" and cache is not None and "block_tables" in cache:
+        if mode in ("decode", "prefill") and cache is not None \
+                and "block_tables" in cache:
             block_tables = cache["block_tables"]
             new_caches["block_tables"] = block_tables
         if not ctx.extra.get("skip_trunk"):  # roofline outer-component mode
@@ -261,6 +271,13 @@ class TransformerLM(Module):
                     shared["kv_pos"] = kv_pos
                 if block_tables is not None:
                     shared["block_tables"] = block_tables
+                    if mode == "prefill":
+                        shared["prefix_len"] = prefix_len
+                if skip_cache_write:
+                    # threaded unconditionally: a re-score step against a
+                    # table-less (dense) cache must reach Attention's
+                    # contract guard, not silently write the cache
+                    shared["skip_cache_write"] = True
                 if shared:
                     if isinstance(part, ScannedStack) and isinstance(
                             part.block, DecoderBlock):

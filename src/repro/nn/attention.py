@@ -235,6 +235,8 @@ class Attention(Module):
         kv_src: jax.Array | None = None,  # cross-attention source (B,T,d)
         kv_pos: jax.Array | None = None,  # hoisted (B,T) decode positions
         block_tables: jax.Array | None = None,  # paged caches: (B, NB) pages
+        prefix_len: int = 0,  # paged prefill: shared-prefix slots (static)
+        skip_cache_write: bool = False,  # paged re-score: no cache mutation
     ):
         with ctx.scope(self.name):
             policy = ctx.policy()
@@ -250,7 +252,12 @@ class Attention(Module):
                                              kv_src, mode)
             elif mode == "decode":
                 out, new_cache = self._decode(params, q, x, positions, ctx, policy,
-                                              cache, kv_pos, block_tables)
+                                              cache, kv_pos, block_tables,
+                                              skip_write=skip_cache_write)
+            elif mode == "prefill" and cache is not None and "pk" in cache:
+                out, new_cache = self._prefill_paged(
+                    params, q, x, positions, ctx, policy, cache, block_tables,
+                    prefix_len)
             else:
                 out, new_cache = self._dense(params, q, x, positions, ctx, policy, mode, cache)
 
@@ -268,7 +275,6 @@ class Attention(Module):
     # -- dense (train / prefill) -------------------------------------------------
 
     def _dense(self, params, q, x, positions, ctx, policy, mode, cache):
-        B, S = q.shape[0], q.shape[1]
         k = self._proj(params, x, "k", self.kv_heads, policy)
         v = self._proj(params, x, "v", self.kv_heads, policy)
         k = ctx.constrain(k, ("batch", "seq_act", "kv_heads", None))
@@ -278,8 +284,21 @@ class Attention(Module):
             q = apply_rope(q, sin, cos)
             k = apply_rope(k, sin, cos)
 
-        impl = ctx.impl("attention", "xla")
         k_cache, v_cache = k, v  # cache stores true KV heads, pre-expansion
+        out = self._attend_dense(q, k, v, positions, ctx, policy)
+
+        new_cache = None
+        if mode == "prefill":
+            new_cache = self._build_cache(k_cache, v_cache, positions, ctx, policy)
+        return out, new_cache
+
+    def _attend_dense(self, q, k, v, positions, ctx, policy):
+        """Self-aligned (q_pos == kv_pos) attention through the woven impl
+        dispatch — shared verbatim by the dense/prefill path and the paged
+        prefill's full-prompt and ring branches, so direct-to-pool prefill
+        stays bit-identical to the dense transient it replaces."""
+        S = q.shape[1]
+        impl = ctx.impl("attention", "xla")
         if impl == "proj_only":
             # roofline component mode: keep the projection FLOPs (and the
             # K/V gather collectives — tie k,v into the output so DCE keeps
@@ -328,11 +347,7 @@ class Attention(Module):
                 out = xla_attention(q, k, v, mask, softcap=self.softcap,
                                     accum_dtype=policy.accum_dtype,
                                     constrain=constrain)
-
-        new_cache = None
-        if mode == "prefill":
-            new_cache = self._build_cache(k_cache, v_cache, positions, ctx, policy)
-        return out, new_cache
+        return out
 
     def _maybe_expand_kv(self, k, v, ctx: Ctx):
         """Megatron layout with GQA: replicate KV heads up to q-heads so the
@@ -391,10 +406,108 @@ class Attention(Module):
             k, v = jnp.pad(k, pad), jnp.pad(v, pad)
         return {"k": k, "v": v, "index": jnp.asarray(S, jnp.int32)}
 
+    # -- paged prefill (write K/V straight into pool pages) ------------------------
+
+    def _prefill_paged(self, params, q, x, positions, ctx, policy, cache,
+                       block_tables, prefix_len: int):
+        """Prefill a (possibly prefix-shared) request directly into a page
+        pool: the `prefix_len` leading slots are already resident (shared
+        physical pages mapped by this request's block table), only the
+        non-shared suffix is computed here, and its K/V scatter at the
+        same (page, offset) addressing the decode path uses — admission
+        never materializes a dense max_len cache.
+
+        `prefix_len` is static (the serving layer compiles one step per
+        (prefix, suffix) shape, exactly as it already compiles per prompt
+        length).  With no shared prefix the attention goes through
+        `_attend_dense` — the identical impl dispatch the dense prefill
+        runs, so direct-to-pool output is bit-identical to the transient
+        path it replaces.  With a prefix, suffix queries attend over the
+        pool-resident K/V gathered through the table (XLA path: the masks
+        come from absolute positions, so sliding windows and softcap
+        behave exactly as in the dense math).
+
+        Serving layout only: one request at a time (B = 1).
+        """
+        if block_tables is None:
+            raise ValueError("paged prefill needs block_tables (the model "
+                             "hoists cache['block_tables'] to every layer)")
+        B, S = q.shape[0], q.shape[1]
+        if B != 1:
+            raise ValueError("paged prefill packs one request at a time")
+        k_new = self._proj(params, x, "k", self.kv_heads, policy)
+        v_new = self._proj(params, x, "v", self.kv_heads, policy)
+        if self.use_rope:
+            sin, cos = rope_angles(positions, self.head_dim, self.rope_theta)
+            q = apply_rope(q, sin, cos)
+            k_new = apply_rope(k_new, sin, cos)
+
+        pk, pv = cache["pk"], cache["pv"]
+        ps = pk.shape[1]
+        ring = "pos" in cache
+
+        if ring:
+            # ring pools never share a prefix (slot contents depend on the
+            # wrap), so the whole prompt is here: keep the last W tokens,
+            # scatter at slot = pos % W — `_build_cache`'s ring packing,
+            # addressed through the block table.
+            W = cache["pos"].shape[-1]
+            keep = min(W, S)
+            k_w, v_w = k_new[0, -keep:], v_new[0, -keep:]
+            pos_w = positions[0, -keep:]
+            slots = pos_w % W
+            page = block_tables[0, slots // ps]
+            off = slots % ps
+            pk = pk.at[page, off].set(k_w)
+            pv = pv.at[page, off].set(v_w)
+            pos = jnp.full((W,), -1, jnp.int32).at[slots].set(pos_w)
+            new_cache = {"pk": pk, "pv": pv, "pos": pos,
+                         "index": cache["index"] + S}
+            out = self._attend_dense(q, k_new, v_new, positions, ctx, policy)
+            return out, new_cache
+
+        slots = prefix_len + jnp.arange(S, dtype=jnp.int32)
+        page = block_tables[0, slots // ps]
+        off = slots % ps
+        pk = pk.at[page, off].set(k_new[0])
+        pv = pv.at[page, off].set(v_new[0])
+        new_cache = {"pk": pk, "pv": pv, "index": cache["index"] + S}
+
+        if prefix_len == 0:
+            out = self._attend_dense(q, k_new, v_new, positions, ctx, policy)
+            return out, new_cache
+
+        # suffix queries over the full logical prefix: gather the live
+        # slots (shared prefix pages + the suffix just written) through
+        # the table and mask from absolute positions.  The gather
+        # materializes one layer's (prompt, K, D) logical view at a time —
+        # O(live prompt tokens), never O(max_len), and only the suffix was
+        # *computed*; streaming pages block-by-block instead is the
+        # ROADMAP q_offset-kernel follow-on.
+        from repro.kernels.flash_attention.ops import paged_gather_kv
+
+        total = prefix_len + S  # static
+        k_log, v_log = paged_gather_kv(pk, pv, block_tables, total)
+        k_log, v_log, _ = self._maybe_expand_kv(k_log, v_log, ctx)
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(total, dtype=jnp.int32)[None], (B, total))
+        block = int(ctx.extra.get("xla_attn_block", 1024))
+        if total > 2 * block:  # long prefixes: bounded-memory blocked path
+            out = xla_attention_blocked(
+                q, k_log, v_log, positions, kv_pos, mask_kind=self.mask,
+                window=self.window, softcap=self.softcap, block=block,
+            )
+        else:
+            mask = _mask_dense(positions, kv_pos, self.mask,
+                               self.window)[:, None, None]
+            out = xla_attention(q, k_log, v_log, mask, softcap=self.softcap,
+                                accum_dtype=policy.accum_dtype)
+        return out, new_cache
+
     # -- decode (one token against a cache) ---------------------------------------
 
     def _decode(self, params, q, x, positions, ctx, policy, cache, kv_pos=None,
-                block_tables=None):
+                block_tables=None, skip_write=False):
         """One new token against a linear, ring, or *paged* cache.
 
         The cache is updated in place (`.at[...].set`, so jit donates the
@@ -429,7 +542,12 @@ class Attention(Module):
 
         if "pk" in cache:
             return self._decode_paged(q, k_new, v_new, positions, ctx, policy,
-                                      cache, kv_pos, block_tables)
+                                      cache, kv_pos, block_tables,
+                                      skip_write=skip_write)
+        if skip_write:
+            raise ValueError("skip_cache_write (the re-score step) is a "
+                             "paged-cache contract — dense caches decode "
+                             "normally")
 
         idx = cache["index"]
         per_req = getattr(idx, "ndim", 0) == 1  # stacked multi-request caches
@@ -499,11 +617,16 @@ class Attention(Module):
         return out, new_cache
 
     def _decode_paged(self, q, k_new, v_new, positions, ctx, policy, cache,
-                      kv_pos, block_tables):
+                      kv_pos, block_tables, skip_write=False):
         """Paged-pool decode: the cache slots live in shared page pools
         (`pk`/`pv`: (P, page_size, K, D)) and the request's logical slot s
         maps to physical (tables[b, s // ps], s % ps).  Serving layout
-        only: `index` is per-request (B,)."""
+        only: `index` is per-request (B,).
+
+        `skip_write=True` is the *re-score* contract (a full-prompt prefix
+        hit): the slot at `index` already holds this token's K/V on a
+        shared page, so the step computes logits without mutating the pool
+        — writing would perturb pages other requests still map."""
         if block_tables is None:
             raise ValueError("paged caches need block_tables (the model "
                              "hoists cache['block_tables'] to every layer)")
@@ -531,22 +654,33 @@ class Attention(Module):
             kernel_window = (
                 self.window if self.mask in ("sliding", "local") else None
             )
-        page = block_tables[bidx, slot // ps]
-        off = slot % ps
-        if not ring:
-            # past-the-end writes must vanish exactly like the dense
-            # layout's OOB scatter: the table *gather* clamps to the last
-            # live page, so redirect to an OOB page id and let the scatter
-            # drop it instead of corrupting a live slot
-            page = jnp.where(slot < kv_len, page, pk.shape[0])
-        k_all = pk.at[page, off].set(k_new[:, 0])
-        v_all = pv.at[page, off].set(v_new[:, 0])
-        new_cache = {"pk": k_all, "pv": v_all, "index": idx + 1}
-        if ring:
-            pos = cache["pos"].at[bidx, slot].set(idx)
-            new_cache["pos"] = pos
-            kv_pos = pos
-        elif kv_pos is None:
+        if skip_write:
+            if ring:
+                # ring pools never share a prefix (match_prefix refuses),
+                # so a re-score admission cannot reach them
+                raise ValueError("re-score is a linear prefix-shared "
+                                 "contract — ring pools never share")
+            # re-score: the token's K/V already sit at `slot` (a shared
+            # prefix page) — the cache passes through untouched.
+            k_all, v_all = pk, pv
+            new_cache = {"pk": pk, "pv": pv, "index": idx}
+        else:
+            page = block_tables[bidx, slot // ps]
+            off = slot % ps
+            if not ring:
+                # past-the-end writes must vanish exactly like the dense
+                # layout's OOB scatter: the table *gather* clamps to the
+                # last live page, so redirect to an OOB page id and let the
+                # scatter drop it instead of corrupting a live slot
+                page = jnp.where(slot < kv_len, page, pk.shape[0])
+            k_all = pk.at[page, off].set(k_new[:, 0])
+            v_all = pv.at[page, off].set(v_new[:, 0])
+            new_cache = {"pk": k_all, "pv": v_all, "index": idx + 1}
+            if ring:
+                pos = cache["pos"].at[bidx, slot].set(idx)
+                new_cache["pos"] = pos
+                kv_pos = pos
+        if not ring and kv_pos is None:
             arange = jnp.arange(kv_len, dtype=jnp.int32)
             kv_pos = jnp.where(arange[None] <= idx[:, None], arange[None], -1)
 
@@ -566,10 +700,9 @@ class Attention(Module):
 
         # XLA reference: gather the logical view through the table, then the
         # exact dense decode math (bit-identical — same values, same mask).
-        nb = block_tables.shape[1]
-        k_log = k_all[block_tables].reshape(B, nb * ps, *k_all.shape[2:])
-        v_log = v_all[block_tables].reshape(B, nb * ps, *v_all.shape[2:])
-        k_log, v_log = k_log[:, :kv_len], v_log[:, :kv_len]
+        from repro.kernels.flash_attention.ops import paged_gather_kv
+
+        k_log, v_log = paged_gather_kv(k_all, v_all, block_tables, kv_len)
         k_c, v_c, kv_axis = self._maybe_expand_kv(k_log, v_log, ctx)
         # mask from the caller's positions (== index on the hot path): the
         # XLA reference keeps the dense path's re-scoring escape hatch

@@ -5,23 +5,36 @@ every per-request cache to the same length — HBM scales with
 batch x max_len even when most requests are short.  This module replaces
 that with one shared pool of fixed-size pages per layer:
 
-  PagePool            host-side free-list allocator: physical pages are
-                      allocated on admission, appended at the logical tail
-                      as a request's cache grows past a page boundary
-                      (decode writes are strictly sequential in slot space,
-                      so growth is always contiguous-tail), and released
-                      when the request retires.  Admission is
+  PagePool            host-side refcounted free-list allocator: physical
+                      pages are allocated on admission, appended at the
+                      logical tail as a request's cache grows past a page
+                      boundary (decode writes are strictly sequential in
+                      slot space, so growth is always contiguous-tail),
+                      and released when the request retires.  Pages can be
+                      *shared* across requests (prefix caching): alloc
+                      takes a shared-page prefix whose refcounts bump
+                      instead of consuming free pages, release decrements,
+                      and `cow` splits a shared page (copy -> remap) the
+                      moment its holder needs to write it.  Admission is
                       reservation-aware: a request is only admitted when
                       the pool can cover every active request's *worst
-                      case* growth, so decode can never deadlock on pages.
+                      case* growth (including potential copy-on-write
+                      splits of its shared pages), so decode can never
+                      deadlock on pages.
 
   PagedCacheManager   device-side owner of the per-layer page pools.  It
-                      packs per-request (batch=1) prefill caches into pool
-                      pages, re-forms the batched decode cache pytree for
-                      whatever set of requests is active *this step*
-                      (continuous batching: the batch is recomposed every
-                      token), and absorbs the post-step pools / ring `pos`
-                      rows / `kv_pos` rows back into per-request state.
+                      admits requests by writing their prefill K/V
+                      *directly into pool pages* (the paged-prefill path
+                      through Attention — no transient dense max_len
+                      cache), maps a new request's common prompt prefix
+                      onto existing physical pages through a token-hash
+                      prefix index, re-forms the batched decode cache
+                      pytree for whatever set of requests is active *this
+                      step* (continuous batching: the batch is recomposed
+                      every token), splits shared pages copy-on-write
+                      before the decode step that would write them, and
+                      absorbs the post-step pools / ring `pos` rows /
+                      `kv_pos` rows back into per-request state.
 
 The resulting cache pytree is what `Attention._decode`'s paged branch and
 the block-table `flash_decode` kernel consume: per layer `{"pk", "pv"}`
@@ -29,22 +42,38 @@ pools of shape (P, page_size, K, D) (leading layer dim under a scanned
 stack) with per-request `index`, ring `pos`, and one shared top-level
 `block_tables` (B, num_blocks) — the scalar-prefetch operand that lets the
 kernel resolve logical cache blocks to physical pages with no HBM gather.
+Prefix sharing is invisible to the kernel: two requests whose table rows
+point at the same physical page stream the same bytes the unshared layout
+would, so paged output stays bit-identical.
 
 The page count and `page_size` are DSE-tunable knobs (the `paged_decode`
-kernel space in repro.autotune.kernel_tuner); paged decode stays
-bit-identical to the dense stacked path because the kernel streams the
-same logical blocks in the same order — only the DMA source moves.
+kernel space in repro.autotune.kernel_tuner, whose HBM model now accounts
+for shared-prefix pages); paged decode stays bit-identical to the dense
+stacked path because the kernel streams the same logical blocks in the
+same order — only the DMA source moves.
 """
 
 from __future__ import annotations
 
-from typing import Any, Iterable
+import functools
+import hashlib
+from typing import Any, Iterable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash_attention.kernel import cdiv
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_pool_page(pool, src, dst):
+    """pool[..., dst, :, :, :] = pool[..., src, :, :, :] — the device half
+    of a copy-on-write split.  The page axis is always -4 ((P, ps, K, D),
+    or (n, P, ps, K, D) under a scanned stack).  Donating the pool lets
+    XLA update the buffer in place: O(page bytes) written, never a full
+    eager copy of the pool per split."""
+    return pool.at[..., dst, :, :, :].set(pool[..., src, :, :, :])
 
 
 class PoolExhausted(RuntimeError):
@@ -57,13 +86,19 @@ class PoolExhausted(RuntimeError):
 
 
 class PagePool:
-    """Free-list page allocator with per-request block tables.
+    """Refcounted free-list page allocator with per-request block tables.
 
     Pure host-side bookkeeping: physical page ids are ints in
     [0, num_pages); a request's block table maps logical page i (cache
     slots [i*page_size, (i+1)*page_size)) to its physical page.  The free
     list is LIFO so released pages are reused first — the pool's working
     set stays compact under admit/retire churn.
+
+    Pages carry refcounts so several tables may map the same physical page
+    (prefix sharing).  `alloc` bumps the shared prefix instead of drawing
+    from the free list, `release` decrements and frees only pages whose
+    count hits zero, and `cow` performs the copy-on-write *remap* half of
+    a split (the device-side page copy is the manager's job).
     """
 
     def __init__(self, num_pages: int, page_size: int):
@@ -72,7 +107,10 @@ class PagePool:
         self.num_pages = num_pages
         self.page_size = page_size
         self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        self._refs: list[int] = [0] * num_pages
         self.tables: dict[Any, list[int]] = {}
+        self.peak_live = 0    # max distinct pages ever allocated at once
+        self.peak_mapped = 0  # max table entries (counting shares) at once
 
     @property
     def free_pages(self) -> int:
@@ -80,21 +118,51 @@ class PagePool:
 
     @property
     def live_pages(self) -> int:
+        """Distinct physical pages in use (shared pages count once)."""
         return self.num_pages - len(self._free)
+
+    @property
+    def mapped_pages(self) -> int:
+        """Total table entries — what an unshared pool would have to hold."""
+        return sum(len(t) for t in self.tables.values())
+
+    def refcount(self, page: int) -> int:
+        return self._refs[page]
 
     def pages_for(self, length: int) -> int:
         """Pages needed to back `length` cache slots."""
         return cdiv(max(int(length), 0), self.page_size)
 
-    def alloc(self, rid, n_pages: int) -> list[int]:
+    def _bump_peaks(self) -> None:
+        self.peak_live = max(self.peak_live, self.live_pages)
+        self.peak_mapped = max(self.peak_mapped, self.mapped_pages)
+
+    def alloc(self, rid, n_pages: int, *,
+              shared: Sequence[int] = ()) -> list[int]:
+        """Allocate a table of `n_pages` pages: the `shared` prefix maps
+        existing live pages (refcount bump — no free pages consumed), the
+        remainder comes fresh off the free list."""
         if rid in self.tables:
             raise KeyError(f"request {rid!r} already holds pages")
-        if n_pages > len(self._free):
+        shared = list(shared)
+        if len(shared) > n_pages:
+            raise ValueError(
+                f"shared prefix ({len(shared)}) exceeds table ({n_pages})")
+        for p in shared:
+            if not (0 <= p < self.num_pages) or self._refs[p] <= 0:
+                raise ValueError(f"page {p} is not live — stale prefix share")
+        need = n_pages - len(shared)
+        if need > len(self._free):
             raise PoolExhausted(
-                f"need {n_pages} pages, {len(self._free)} free")
-        pages = [self._free.pop() for _ in range(n_pages)]
-        self.tables[rid] = pages
-        return pages
+                f"need {need} pages, {len(self._free)} free")
+        for p in shared:
+            self._refs[p] += 1
+        fresh = [self._free.pop() for _ in range(need)]
+        for p in fresh:
+            self._refs[p] = 1
+        self.tables[rid] = shared + fresh
+        self._bump_peaks()
+        return list(self.tables[rid])
 
     def grow_to(self, rid, n_pages: int) -> list[int]:
         """Contiguous-tail growth: append pages until the table covers
@@ -107,14 +175,44 @@ class PagePool:
             raise PoolExhausted(
                 f"grow {rid!r} needs {need} pages, {len(self._free)} free")
         new = [self._free.pop() for _ in range(need)]
+        for p in new:
+            self._refs[p] = 1
         table.extend(new)
+        self._bump_peaks()
         return new
 
     def release(self, rid) -> list[int]:
+        """Drop the request's references; returns the pages actually freed
+        (refcount hit zero) — shared pages stay live for their co-owners."""
         pages = self.tables.pop(rid)
+        freed = []
         # reversed: LIFO reuse hands back the request's pages tail-first
-        self._free.extend(reversed(pages))
-        return pages
+        for p in reversed(pages):
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._free.append(p)
+                freed.append(p)
+        return freed
+
+    def cow(self, rid, logical: int) -> tuple[int, int] | None:
+        """Copy-on-write remap: if the request's `logical` table entry is
+        shared (refcount > 1), take a fresh page, point the table at it and
+        drop one reference on the original.  Returns (old, new) physical
+        ids for the caller to copy device-side, or None when the page was
+        already exclusive."""
+        table = self.tables[rid]
+        old = table[logical]
+        if self._refs[old] <= 1:
+            return None
+        if not self._free:
+            raise PoolExhausted(
+                f"copy-on-write split for {rid!r} needs a free page")
+        new = self._free.pop()
+        self._refs[new] = 1
+        self._refs[old] -= 1
+        table[logical] = new
+        self._bump_peaks()
+        return old, new
 
     def table_rows(self, rids: Iterable[Any], width: int) -> np.ndarray:
         """(B, width) int32 block tables, unallocated tail entries 0 (a
@@ -157,48 +255,148 @@ def paged_compatible(cache: dict) -> bool:
     return seen_kv
 
 
+def _prefix_digests(toks: np.ndarray, page_size: int):
+    """(per-boundary digests, whole-prompt digest) of a token sequence —
+    the prefix-index key material.  One incremental blake2b fed page by
+    page (each boundary digest covers tokens[0 : (i+1)*page_size], the
+    tail digest the whole prompt), so hashing a prompt is O(S) bytes, not
+    O(S^2 / page_size)."""
+    data = np.ascontiguousarray(toks, np.int64).tobytes()
+    stride = page_size * 8  # int64 token bytes per page
+    h = hashlib.blake2b(digest_size=16)
+    bounds = []
+    for i in range(len(toks) // page_size):
+        h.update(data[i * stride: (i + 1) * stride])
+        bounds.append(h.copy().digest())
+    h.update(data[len(bounds) * stride:])
+    return bounds, h.digest()
+
+
 class PagedCacheManager:
     """Owns the per-layer page pools + per-request paged cache state.
 
     One manager serves one `Server.serve_continuous` call (or a test's
-    hand-driven decode loop): `admit` packs a request's prefill cache into
-    freshly allocated pages, `batch` re-forms the decode cache for the
-    currently active requests (growing tail pages for the token about to
-    be written), `absorb` stores the post-step state back, and `retire`
-    returns the request's pages to the free list.
+    hand-driven decode loop).  Two admission paths exist:
+
+      * the legacy `admit` packs an already-built per-request prefill
+        cache into freshly allocated pages (kept for tests and callers
+        with dense caches in hand);
+      * the direct-to-pool path — `init_structure` (from a 1-token probe
+        cache) then `match_prefix` / `admit_begin` / `admit_finish` (or
+        `admit_shared` + `rescore_view` on a full-prompt prefix hit) —
+        lets the model's paged-prefill branch scatter K/V straight into
+        pool pages, so admission never materializes a dense max_len cache.
+
+    `batch` re-forms the decode cache for the currently active requests
+    (growing tail pages for the token about to be written and splitting
+    shared pages copy-on-write first), `absorb` stores the post-step state
+    back, and `retire` returns the request's references to the pool.
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, *,
+                 max_len: int | None = None, window: int | None = None,
+                 prefix_sharing: bool = True):
         self.pool = PagePool(num_pages, page_size)
         self.page_size = page_size
+        self.max_len = max_len          # logical linear-cache capacity
+        self.window = window            # model's sliding/local window
+        self.prefix_sharing = prefix_sharing
         self._pools: dict[str, dict[str, jax.Array]] = {}
         self._groups: dict[str, dict[str, Any]] = {}  # structure, 1st admit
         self._meta: dict[Any, dict[str, Any]] = {}    # per-request state
+        # prefix index: token-prefix digest (per page boundary) -> physical
+        # page.  "full" keys freeze at page boundaries and never go stale
+        # while the page lives (decode writes land strictly past every
+        # registered prefix); "tail" keys map a whole prompt's straddling
+        # partial page — valid because sharers mask slots >= their own
+        # length, and any write into the page splits it copy-on-write.
+        self._prefix_index: dict[tuple, int] = {}
+        self._page_keys: dict[int, list[tuple]] = {}
+        # one-entry match memo: can_admit and the admission that follows
+        # probe the same prompt back to back — invalidated whenever the
+        # index mutates (_register_prefix / _purge_keys)
+        self._match_cache: tuple[bytes, list[int], int] | None = None
+        self.prefix_hits = 0  # pages mapped shared at admission
+        self.cow_splits = 0   # copy-on-write page splits performed
 
     # -- admission -------------------------------------------------------------
 
-    def _slots_needed(self, length: int) -> int:
-        """Worst-case pages to back `length` slots across all groups (ring
-        groups clamp to their window — the slot space wraps there)."""
-        return max(
-            self.pool.pages_for(min(length, info["length"]))
-            for info in self._groups.values()
-        )
+    @property
+    def has_structure(self) -> bool:
+        return bool(self._groups)
 
-    def can_admit(self, final_len: int) -> bool:
+    def _slots_needed(self, length: int, *,
+                      prompt_len: int | None = None) -> int:
+        """Worst-case pages to back `length` slots across all groups (ring
+        groups clamp to their window — the slot space wraps there).  Before
+        the structure is known, clamp by the configured capacity — and by
+        the window when `prompt_len` says the request will ring — so
+        admission control works on the very first request too."""
+        if self._groups:
+            return max(
+                self.pool.pages_for(min(length, info["length"]))
+                for info in self._groups.values()
+            )
+        if self.max_len is not None:
+            length = min(length, self.max_len)
+        if (self.window is not None and prompt_len is not None
+                and prompt_len > self.window):
+            length = min(length, self.window)
+        return self.pool.pages_for(length)
+
+    def _linear_len(self) -> int | None:
+        lens = [info["length"] for info in self._groups.values()
+                if not info["ring"]]
+        return max(lens) if lens else None
+
+    def _ring_pool(self) -> bool:
+        return any(info["ring"] for info in self._groups.values())
+
+    def _cow_exposure(self, rid) -> int:
+        """Shared pages this request may still have to split: table entries
+        with refcount > 1 inside its remaining write range."""
+        if not self.prefix_sharing or self._ring_pool():
+            return 0
+        m = self._meta[rid]
+        table = self.pool.tables.get(rid)
+        if table is None:
+            return 0
+        lo = m["length"] // self.page_size
+        hi = min(self._slots_needed(m["final_len"]), len(table))
+        return sum(1 for i in range(lo, hi)
+                   if self.pool.refcount(table[i]) > 1)
+
+    def can_admit(self, final_len: int, tokens=None) -> bool:
         """Admission control: free pages must cover this request's worst
-        case *plus* every active request's outstanding growth, so decode
-        never hits PoolExhausted mid-flight."""
-        if not self._groups:  # first request defines the structure
-            return self.pool.free_pages > 0
+        case — *new* pages only: a matched prompt prefix rides on shared
+        pages, plus one page if its shared tail may need a copy-on-write
+        split — plus every active request's outstanding growth and
+        copy-on-write exposure, so decode never hits PoolExhausted
+        mid-flight.  Works before the first admission too: the structure-
+        free path derives slots-per-token from the configured capacity
+        (and the window, when the prompt rings)."""
+        prompt_len = (len(np.asarray(tokens).reshape(-1))
+                      if tokens is not None else None)
+        need = self._slots_needed(final_len, prompt_len=prompt_len)
+        if tokens is not None and self._groups:
+            pages, shared_len = self.match_prefix(tokens)
+            need -= len(pages)
+            if shared_len and (shared_len % self.page_size
+                               or shared_len >= prompt_len):
+                # a shared tail page may split copy-on-write later — and a
+                # full-prompt hit may be trimmed back to a suffix prefill
+                # (long prompts; see Server._paged_admit), costing one
+                # fresh page the share would otherwise have covered
+                need += 1
         reserved = sum(
             self._slots_needed(m["final_len"]) - len(self.pool.tables[rid])
+            + self._cow_exposure(rid)
             for rid, m in self._meta.items()
         )
-        return (self.pool.free_pages - reserved
-                >= self._slots_needed(final_len))
+        return self.pool.free_pages - reserved >= need
 
-    def _scan_structure(self, cache: dict) -> None:
+    def _scan_structure(self, cache: dict, *, ring: bool | None = None,
+                        length: int | None = None) -> None:
         if not paged_compatible(cache):
             raise ValueError(
                 "cache has non-KV state groups; paged serving supports "
@@ -208,15 +406,35 @@ class PagedCacheManager:
                 continue
             k = value["k"]
             scanned = k.ndim == 5  # (n, 1, T, K, D) under a scanned stack
+            is_ring = ("pos" in value) if ring is None else ring
             self._groups[name] = {
                 "scanned": scanned,
                 "n": k.shape[0] if scanned else None,
-                "ring": "pos" in value,
-                "length": k.shape[-3],  # W (ring) or max_len (linear)
+                "ring": is_ring,
+                # W (ring) or max_len (linear); an explicit override wins —
+                # the probe path scans a 1-token cache whose shapes say
+                # nothing about capacity
+                "length": length if length is not None else k.shape[-3],
                 "kv_heads": k.shape[-2],
                 "head_dim": k.shape[-1],
                 "dtype": k.dtype,
             }
+
+    def init_structure(self, probe_cache: dict, *, ring: bool = False) -> None:
+        """Learn the pool structure (groups, dtypes, head shapes) from a
+        1-token probe prefill cache and build the page pools — the
+        direct-to-pool admission path's replacement for scanning a full
+        dense prefill.  `ring` declares the cache family the *first real
+        request* will pack (prompt longer than the window rings)."""
+        if self._groups:
+            raise RuntimeError("pool structure already initialised")
+        if self.max_len is None:
+            raise ValueError("init_structure needs the manager's max_len")
+        if ring and self.window is None:
+            raise ValueError("ring structure needs the manager's window")
+        length = min(self.window, self.max_len) if ring else self.max_len
+        self._scan_structure(probe_cache, ring=ring, length=length)
+        self._ensure_pools(self.pool.num_pages)
 
     def _ensure_pools(self, num_pages: int) -> None:
         ps = self.page_size
@@ -235,6 +453,183 @@ class PagedCacheManager:
     def table_width(self) -> int:
         ps = self.page_size
         return max(cdiv(info["length"], ps) for info in self._groups.values())
+
+    # -- prefix sharing ---------------------------------------------------------
+
+    def match_prefix(self, tokens) -> tuple[list[int], int]:
+        """Longest registered prefix of `tokens` already resident in the
+        pool: ([physical pages], shared slot count).  Full pages chain at
+        page boundaries; a whole-prompt match may extend onto the donor's
+        partial tail page (shared_len == len(tokens) — the rescore path).
+        Ring pools never share (slot contents depend on the wrap)."""
+        if not self.prefix_sharing or not self._groups or self._ring_pool():
+            return [], 0
+        toks = np.asarray(tokens, np.int64).reshape(-1)
+        S = len(toks)
+        lin = self._linear_len()
+        if lin is None or S > lin:
+            return [], 0
+        key = toks.tobytes()
+        if self._match_cache is not None and self._match_cache[0] == key:
+            return list(self._match_cache[1]), self._match_cache[2]
+        ps = self.page_size
+        bounds, whole = _prefix_digests(toks, ps)
+        pages: list[int] = []
+        for i, digest in enumerate(bounds):
+            page = self._prefix_index.get(("full", i, digest))
+            if page is None:
+                break
+            pages.append(page)
+        shared_len = len(pages) * ps
+        if len(pages) == len(bounds) and S % ps:
+            page = self._prefix_index.get(("tail", S, whole))
+            if page is not None:
+                pages.append(page)
+                shared_len = S
+        self._match_cache = (key, list(pages), shared_len)
+        return pages, shared_len
+
+    def _register_prefix(self, rid, tokens) -> None:
+        if not self.prefix_sharing or self._ring_pool():
+            return
+        toks = np.asarray(tokens, np.int64).reshape(-1)
+        S = len(toks)
+        table = self.pool.tables[rid]
+        ps = self.page_size
+        self._match_cache = None
+
+        def put(key, page):
+            if key in self._prefix_index:
+                return
+            self._prefix_index[key] = page
+            self._page_keys.setdefault(page, []).append(key)
+
+        bounds, whole = _prefix_digests(toks, ps)
+        for i in range(min(len(bounds), len(table))):
+            put(("full", i, bounds[i]), table[i])
+        if S % ps and S // ps < len(table):
+            put(("tail", S, whole), table[S // ps])
+
+    def _purge_keys(self, pages: Iterable[int]) -> None:
+        for page in pages:
+            keys = self._page_keys.pop(page, ())
+            if keys:
+                self._match_cache = None
+            for key in keys:
+                if self._prefix_index.get(key) == page:
+                    del self._prefix_index[key]
+
+    # -- direct-to-pool admission ------------------------------------------------
+
+    def _check_family(self, prompt_len: int) -> None:
+        ring_req = self.window is not None and self.window < prompt_len
+        if ring_req != self._ring_pool():
+            raise ValueError(
+                f"request cache family mismatch (ring={ring_req}, "
+                f"len={prompt_len}) vs the pool's "
+                f"(ring={self._ring_pool()}); sliding-window serving needs "
+                "prompts on one side of the window — use serve_batch "
+                "otherwise")
+
+    def _new_meta(self, rid, prompt_len: int, final_len: int) -> None:
+        meta: dict[str, Any] = {
+            "length": int(prompt_len),
+            "final_len": int(final_len),
+            "pos": {},
+        }
+        lin = self._linear_len()
+        if lin is not None:
+            ar = jnp.arange(lin, dtype=jnp.int32)
+            meta["kv_pos"] = jnp.where(ar < prompt_len, ar, -1)
+        self._meta[rid] = meta
+
+    def _table_row(self, rid) -> jax.Array:
+        return jnp.asarray(self.pool.table_rows([rid], self.table_width))
+
+    def admit_begin(self, rid, tokens, *, final_len: int,
+                    shared_pages: Sequence[int] = (),
+                    shared_len: int = 0):
+        """Allocate the block table (shared prompt prefix + fresh pages)
+        and return the paged *prefill* cache view the model scatters the
+        non-shared suffix into, plus the static prefix length.
+
+        `final_len` is the most cache slots this request will ever occupy
+        (prompt + decode budget), reserved for deadlock-free growth.
+        """
+        if not self._groups:
+            raise RuntimeError("init_structure (or admit) must run first")
+        toks = np.asarray(tokens, np.int64).reshape(-1)
+        S = len(toks)
+        self._check_family(S)
+        start = shared_len
+        if start >= S:
+            raise ValueError("full-prompt prefix hits go through admit_shared")
+        if start and (shared_len % self.page_size
+                      or len(shared_pages) * self.page_size != shared_len):
+            raise ValueError("partial shared prefixes must be page-aligned")
+        lin = self._linear_len()
+        if not self._ring_pool() and lin is not None and S > lin:
+            raise ValueError(
+                f"prompt ({S} tokens) exceeds the pool's linear capacity "
+                f"({lin}) — raise max_cache_len")
+        table = self.pool.alloc(rid, self._slots_needed(S),
+                                shared=shared_pages)
+        self.prefix_hits += len(shared_pages)
+        self._new_meta(rid, S, final_len)
+
+        view: dict[str, Any] = {}
+        for name, info in self._groups.items():
+            group: dict[str, Any] = dict(self._pools[name])
+            idx = np.full((1,), start, np.int32)
+            if info["scanned"]:
+                group["index"] = jnp.asarray(np.tile(idx, (info["n"], 1)))
+            else:
+                group["index"] = jnp.asarray(idx)
+            if info["ring"]:
+                W = info["length"]
+                shape = (info["n"], W) if info["scanned"] else (W,)
+                group["pos"] = jnp.full(shape, -1, jnp.int32)
+            view[name] = group
+        view["block_tables"] = self._table_row(rid)
+        return view, start
+
+    def admit_finish(self, rid, new_cache: dict, tokens) -> None:
+        """Absorb the paged-prefill step's outputs (pools now hold the
+        suffix K/V) and register the prompt in the prefix index."""
+        meta = self._meta[rid]
+        for name, info in self._groups.items():
+            group = new_cache[name]
+            self._pools[name] = {"pk": group["pk"], "pv": group["pv"]}
+            if info["ring"]:
+                meta["pos"][name] = group["pos"]  # (W,) or (n, W)
+        self._register_prefix(rid, tokens)
+
+    def admit_shared(self, rid, tokens, *, final_len: int,
+                     pages: Sequence[int]) -> None:
+        """Admit a full-prompt prefix hit: every prompt page is already
+        resident, no prefill runs — the caller re-scores the last prompt
+        token (`rescore_view`) for its first output logits.  The first
+        decode write into the shared tail page splits it copy-on-write."""
+        if not self._groups:
+            raise RuntimeError("init_structure (or admit) must run first")
+        toks = np.asarray(tokens, np.int64).reshape(-1)
+        S = len(toks)
+        self._check_family(S)
+        if len(pages) != self._slots_needed(S):
+            raise ValueError(
+                f"full-prompt share needs {self._slots_needed(S)} pages, "
+                f"got {len(pages)}")
+        self.pool.alloc(rid, len(pages), shared=pages)
+        self.prefix_hits += len(pages)
+        self._new_meta(rid, S, final_len)
+
+    def rescore_view(self, rid) -> dict:
+        """Single-request decode cache view with index = length - 1: the
+        no-write re-score of the last prompt token that yields a shared-
+        admission's first output logits."""
+        return self._compose([rid], index_offset=-1)
+
+    # -- legacy admission (pack an existing dense prefill cache) -----------------
 
     def admit(self, rid, cache: dict, *, final_len: int) -> None:
         """Pack a per-request (batch=1) prefill cache into pool pages.
@@ -308,22 +703,57 @@ class PagedCacheManager:
         self._meta[rid] = meta
 
     def retire(self, rid) -> None:
-        self.pool.release(rid)
+        freed = self.pool.release(rid)
+        self._purge_keys(freed)
         del self._meta[rid]
 
     # -- per-step batch composition ---------------------------------------------
+
+    def _cow_for_write(self, rid) -> None:
+        """Split the page the request's next decode token writes if another
+        request still maps it: copy page -> remap table -> (the step then)
+        write.  Runs before the decode step so the scatter lands in the
+        private copy and the shared page is never mutated."""
+        if not self.prefix_sharing or self._ring_pool():
+            return
+        m = self._meta[rid]
+        slot = m["length"]
+        lin = self._linear_len()
+        if lin is not None and slot >= lin:
+            return  # past-the-end write is dropped, nothing to split
+        pidx = slot // self.page_size
+        table = self.pool.tables[rid]
+        if pidx >= len(table):
+            return
+        split = self.pool.cow(rid, pidx)
+        if split is None:
+            return
+        old, new = split
+        for name in self._groups:
+            for key in ("pk", "pv"):
+                self._pools[name][key] = _copy_pool_page(
+                    self._pools[name][key], old, new)
+        self.cow_splits += 1
 
     def batch(self, rids: list[Any]) -> dict:
         """Decode cache pytree for this step's active set, in `rids` order.
 
         Grows each request's tail pages to cover the slot its next token
-        writes, then stacks the per-request rows around the shared pools.
+        writes — clamped at the reserved `final_len`, so growth can never
+        outrun the admission-time reservation — splits shared pages the
+        step would write (copy-on-write), then stacks the per-request rows
+        around the shared pools.
         """
         for rid in rids:
-            self.pool.grow_to(rid, self._slots_needed(
-                self._meta[rid]["length"] + 1))
-        lengths = np.asarray([self._meta[r]["length"] for r in rids],
-                             np.int32)
+            m = self._meta[rid]
+            target = min(m["length"] + 1, m["final_len"])
+            self.pool.grow_to(rid, self._slots_needed(target))
+            self._cow_for_write(rid)
+        return self._compose(rids)
+
+    def _compose(self, rids: list[Any], *, index_offset: int = 0) -> dict:
+        lengths = np.asarray(
+            [self._meta[r]["length"] + index_offset for r in rids], np.int32)
         tables = jnp.asarray(self.pool.table_rows(rids, self.table_width))
 
         cache: dict[str, Any] = {}
@@ -341,8 +771,19 @@ class PagedCacheManager:
             cache[name] = group
         cache["block_tables"] = tables
         if any("kv_pos" in self._meta[r] for r in rids):
-            cache["kv_pos"] = jnp.stack(
-                [self._meta[r]["kv_pos"] for r in rids], axis=0)
+            rows = []
+            for r in rids:
+                kvp = self._meta[r].get("kv_pos")
+                if kvp is None:
+                    # a legacy admit() of a hand-built cache may lack the
+                    # hoisted map; synthesize it (slot s -> s while live —
+                    # exactly what the decode steps would have maintained)
+                    width = self._linear_len() or self.max_len
+                    ar = jnp.arange(int(width), dtype=jnp.int32)
+                    kvp = jnp.where(ar < self._meta[r]["length"], ar, -1)
+                    self._meta[r]["kv_pos"] = kvp
+                rows.append(kvp)
+            cache["kv_pos"] = jnp.stack(rows, axis=0)
         return cache
 
     def absorb(self, rids: list[Any], new_cache: dict) -> None:
@@ -365,7 +806,8 @@ class PagedCacheManager:
     # -- introspection -----------------------------------------------------------
 
     def hbm_pool_bytes(self) -> int:
-        """Allocated KV bytes: live pages across every layer pool."""
+        """Allocated KV bytes: *distinct* live pages across every layer
+        pool — shared prefix pages count once."""
         total = 0
         for name, info in self._groups.items():
             per_page = (self.page_size * info["kv_heads"] * info["head_dim"]
@@ -373,6 +815,21 @@ class PagedCacheManager:
             layers = info["n"] if info["scanned"] else 1
             total += 2 * layers * per_page * self.pool.live_pages
         return total
+
+    def stats(self) -> dict[str, Any]:
+        """Pool economics snapshot: distinct vs mapped pages (the gap is
+        the prefix-sharing saving), peak values, hit/split counters."""
+        return {
+            "num_pages": self.pool.num_pages,
+            "page_size": self.page_size,
+            "live_pages": self.pool.live_pages,
+            "mapped_pages": self.pool.mapped_pages,
+            "peak_live_pages": self.pool.peak_live,
+            "peak_mapped_pages": self.pool.peak_mapped,
+            "prefix_hits": self.prefix_hits,
+            "cow_splits": self.cow_splits,
+            "hbm_pool_bytes": self.hbm_pool_bytes(),
+        }
 
 
 # ---------------------------------------------------------------------------

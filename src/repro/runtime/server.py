@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Any, Callable
 
 import jax
@@ -25,6 +26,7 @@ from repro.nn.module import init_params
 from repro.runtime.pages import PagedCacheManager, cdiv, paged_compatible
 from repro.runtime.steps import (
     build_decode_step,
+    build_paged_prefill_step,
     build_prefill_step,
     stack_request_caches,
 )
@@ -40,6 +42,7 @@ class ServerConfig:
     page_size: int | None = None   # None: woven knob or 128 default
     pool_pages: int | None = None  # None: sized for full concurrency
     max_batch: int | None = None   # decode-batch cap (admission gate)
+    prefix_sharing: bool = True    # map common prompt prefixes onto shared pages
 
 
 class Server:
@@ -59,14 +62,47 @@ class Server:
                 v = None if variant == "__default__" else variant
                 if kind == "prefill":
                     fn = build_prefill_step(self.woven, mesh=self.mesh, variant=v)
+                elif kind == "probe":
+                    # 1-token structure probe for the paged pool: a copied
+                    # state pins cache_max_len=0 so the probe cache never
+                    # materializes a dense max_len transient
+                    fn = build_prefill_step(self.woven, mesh=self.mesh,
+                                            variant=v, cache_max_len=0)
+                elif kind == "paged_prefill":
+                    # the pool cache is donated: the suffix scatter updates
+                    # the page buffers in place, so admission's transient
+                    # is bounded by the live prompt (one layer at a
+                    # time), never a functional copy of the whole pool
+                    # (admit_finish replaces the manager's handles with
+                    # the step's outputs immediately after)
+                    fn = build_paged_prefill_step(self.woven, mesh=self.mesh,
+                                                  variant=v)
+                    return jax.jit(fn, static_argnames=("prefix_len",),
+                                   donate_argnums=(2,))
+                elif kind == "rescore":
+                    # NOT donated: the re-score step passes the pool
+                    # buffers through untouched and its output is
+                    # discarded — donating would invalidate the manager's
+                    # live handles with nothing to replace them
+                    fn = build_decode_step(self.woven, mesh=self.mesh,
+                                           variant=v, rescore=True)
                 else:
+                    # the cache is donated on the decode hot path: the
+                    # in-place scatter updates the (possibly pool-sized)
+                    # buffers without a functional copy per token; every
+                    # caller rebinds the cache to the step's output
+                    # (serve/serve_batch loops, manager.absorb)
                     fn = build_decode_step(self.woven, mesh=self.mesh, variant=v)
+                    return jax.jit(fn, donate_argnums=(2,))
                 return jax.jit(fn)
 
             return LibVC(builder, error_strategy="fallback")
 
         self.prefill_vc = build("prefill")
         self.decode_vc = build("decode")
+        self.probe_vc = build("probe")
+        self.paged_prefill_vc = build("paged_prefill")
+        self.rescore_vc = build("rescore")
         self.params = init_params(woven.program.model, jax.random.PRNGKey(cfg.seed),
                                   woven.state.policies)
         self.served = 0
@@ -75,6 +111,7 @@ class Server:
         self._step_lat_by_batch: dict[int, list[float]] = {}
         self._paged_sig = None  # last paged-decode signature served
         self._paged_dtype = None
+        self.last_pool_stats: dict[str, Any] | None = None  # serve_continuous
 
     def _variant(self) -> str | None:
         if self.margot is None:
@@ -193,29 +230,103 @@ class Server:
             or DEFAULT_PAGE_SIZE
         return max(1, min(int(ps), self.cfg.max_cache_len))
 
+    def _paged_admit(self, manager: PagedCacheManager, rid, prompt,
+                     final_len: int, variant) -> int:
+        """Admit one request into the page pool, prefilling *directly into
+        pool pages*, and return its first output token.
+
+        The first admission runs a 1-token structure probe (cheap: the
+        probe cache is unpadded) to learn the pool's group structure and
+        dtypes; every admission then matches the prompt against the prefix
+        index — full-page hits map shared physical pages and only the
+        non-shared suffix is prefilled, a full-prompt hit skips prefill
+        entirely and re-scores the last prompt token for its logits.
+        Peak HBM per admission is O(live prompt tokens) for one layer
+        at a time — only the non-shared suffix is *computed* — never the
+        all-layer dense O(max_len) cache the packing path used to build.
+        """
+        toks = jnp.asarray(prompt, jnp.int32).reshape(1, -1)
+        toks_np = np.asarray(prompt, np.int64).reshape(-1)
+        S = int(toks.shape[1])
+        if not manager.has_structure:
+            _, probe = self.probe_vc(variant, self.params,
+                                     {"tokens": toks[:, :1]})
+            if not paged_compatible(probe):
+                raise ValueError(
+                    "model cache is not paged-compatible (SSM/recurrent "
+                    "state) — use serve_batch")
+            ring = manager.window is not None and manager.window < S
+            manager.init_structure(probe, ring=ring)
+        shared_pages, shared_len = manager.match_prefix(toks_np)
+        if shared_len >= S:
+            # Long prompts compute their unshared first token through the
+            # blocked online-softmax path (_attend_dense, S > 2*block);
+            # the re-score step's one-shot decode softmax is a different
+            # numeric family, so a full-prompt share would break shared ==
+            # unshared bit-parity.  Trim the share to keep >= 1 suffix
+            # token: the suffix prefill uses the same blocked path.
+            state_extra = self.woven.variant_state(
+                None if variant in (None, "__default__") else variant
+            ).extra
+            if S > 2 * int(state_extra.get("xla_attn_block", 1024)):
+                ps = manager.page_size
+                if shared_len % ps:      # drop the shared tail page
+                    shared_pages = shared_pages[:-1]
+                    shared_len = (S // ps) * ps
+                if shared_len >= S:      # page-aligned prompt: drop a page
+                    shared_pages = shared_pages[:-1]
+                    shared_len -= ps
+        if shared_len >= S:
+            manager.admit_shared(rid, toks_np, final_len=final_len,
+                                 pages=shared_pages)
+            view = manager.rescore_view(rid)
+            logits, _ = self.rescore_vc(
+                variant, self.params,
+                {"tokens": toks[:, -1:],
+                 "positions": jnp.full((1, 1), S - 1, jnp.int32)},
+                view,
+            )
+        else:
+            view, start = manager.admit_begin(
+                rid, toks_np, final_len=final_len,
+                shared_pages=shared_pages, shared_len=shared_len)
+            pos = jnp.arange(start, S, dtype=jnp.int32)[None]
+            logits, new_cache = self.paged_prefill_vc(
+                variant, self.params,
+                {"tokens": toks[:, start:], "positions": pos},
+                view, prefix_len=start,
+            )
+            manager.admit_finish(rid, new_cache, toks_np)
+        return int(jnp.argmax(logits[0, -1], axis=-1))
+
     def serve_continuous(self, prompts: list[np.ndarray], *,
                          decode_tokens: int | None = None,
                          page_size: int | None = None,
                          pool_pages: int | None = None,
-                         max_batch: int | None = None) -> list[np.ndarray]:
-        """Continuous batching over a paged KV-cache pool.
+                         max_batch: int | None = None,
+                         prefix_sharing: bool | None = None) -> list[np.ndarray]:
+        """Continuous batching over a prefix-shared paged KV-cache pool.
 
         Unlike `serve_batch` — which prefils everything up front, pads
         every request's cache to the same length and decodes the fixed
         batch in lockstep — this scheduler re-forms the decode batch every
         step: waiting requests are admitted as soon as the page pool can
         cover their worst-case growth (and a decode slot is free), each
-        admitted request's prefill cache is packed into freshly allocated
-        pages, and finished requests retire immediately, releasing their
-        pages for the next admission.  HBM scales with the *live* tokens
-        in flight, not batch x max_len, and a long request never blocks a
-        short one from entering mid-flight.
+        admitted request prefils its *non-shared prompt suffix* straight
+        into freshly allocated pool pages (common prefixes map existing
+        physical pages through the refcounted prefix index; the first
+        write into a still-shared page splits it copy-on-write), and
+        finished requests retire immediately, releasing their references
+        for the next admission.  HBM scales with the *distinct live*
+        tokens in flight — shared system prompts are stored once — and a
+        long request never blocks a short one from entering mid-flight.
 
         Greedy decode, bit-identical per request to `serve` / `serve_batch`
         (the paged kernel streams the same live blocks in the same order —
-        only the DMA source is page-table-indirected).  Requires a cache
-        family the pool can host (attention KV caches); SSM / recurrent
-        state models raise — use `serve_batch`.
+        only the DMA source is page-table-indirected, and shared pages
+        hold exactly the bytes an exclusive prefill would have written).
+        Requires a cache family the pool can host (attention KV caches);
+        SSM / recurrent state models raise — use `serve_batch`.
         """
         if not prompts:
             return []
@@ -225,6 +336,16 @@ class Server:
         if self.memo is not None and self.memo.running:
             hit, out = self.memo.lookup(key)
             if hit:
+                # a memo hit serves no decode steps and builds no pool:
+                # clear the feedback window, the paged signature and the
+                # pool stats so a following refine_kernel_tuner (or a
+                # stats reader) never sees stale state from an earlier
+                # (differently-shaped or differently-knobbed) serve
+                self.decode_step_latencies = []
+                self._step_lat_by_batch = {}
+                self._paged_sig = None
+                self._paged_dtype = None
+                self.last_pool_stats = None
                 return out
         t0 = time.perf_counter()
         variant = self._variant()
@@ -239,35 +360,55 @@ class Server:
         max_batch = max_batch or self.cfg.max_batch or len(prompts)
         pool_pages = pool_pages or self.cfg.pool_pages \
             or max(sum(cdiv(f, ps) for f in finals), 1)
-        manager = PagedCacheManager(pool_pages, ps)
+        share = self.cfg.prefix_sharing if prefix_sharing is None \
+            else prefix_sharing
+        if self.woven.program.cfg.family == "moe":
+            # Capacity-routed MoE couples tokens within a sequence group
+            # (the capacity C and drop decisions depend on the whole
+            # group), so prefix K/V are not request-independent — a
+            # sharer's recompute could write *different* bytes into pages
+            # the donor still maps.  Prefix sharing stays off; the
+            # direct-to-pool paged prefill still applies.
+            share = False
+        if share and any(kind == "attention" and impl == "pallas"
+                         for _, kind, impl in state.impls):
+            # The suffix-over-prefix attention runs the XLA path (the
+            # flash kernel's causal mask assumes q_pos == kv_pos), so a
+            # pallas-woven prefill would break shared == unshared
+            # bit-parity.  Sharing stays off until the q_offset kernel
+            # variant lands (ROADMAP); paged prefill itself is unaffected
+            # (prefix-free admissions dispatch through the woven impl).
+            share = False
+        manager = PagedCacheManager(
+            pool_pages, ps, max_len=self.cfg.max_cache_len,
+            window=getattr(self.woven.program.cfg, "attn_window", None),
+            prefix_sharing=share,
+        )
         # feedback observations are per-knob-setting: start a fresh window,
         # bucketed by batch size (a decode step's cost scales with the live
         # batch, and the DSE signature is keyed to one batch)
         self.decode_step_latencies = []
         self._step_lat_by_batch = {}
 
-        waiting = list(range(len(prompts)))  # FIFO arrival order
-        active: dict[int, dict] = {}         # rid -> {"tok", "pos"}
+        waiting = deque(range(len(prompts)))  # FIFO arrival order
+        active: dict[int, dict] = {}          # rid -> {"tok", "pos"}
         outputs: dict[int, list[int]] = {}
-        seen_batches: set[int] = set()       # batch sizes already compiled
+        seen_batches: set[int] = set()        # batch sizes already compiled
 
         def admit_ready() -> None:
             while waiting and len(active) < max_batch:
                 rid = waiting[0]
-                if manager._groups and not manager.can_admit(finals[rid]):
+                # capacity-checked for the very first admission too: an
+                # oversized request is rejected *before* its prefill runs,
+                # landing on the clean "page pool too small" path below
+                # instead of a raw PoolExhausted out of pool.alloc
+                if not manager.can_admit(finals[rid], tokens=prompts[rid]):
                     return
-                toks = jnp.asarray(prompts[rid], jnp.int32).reshape(1, -1)
-                logits, cache = self.prefill_vc(variant, self.params,
-                                                {"tokens": toks})
-                if not manager._groups and not paged_compatible(cache):
-                    raise ValueError(
-                        "model cache is not paged-compatible (SSM/recurrent "
-                        "state) — use serve_batch")
-                manager.admit(rid, cache, final_len=finals[rid])
-                tok = int(jnp.argmax(logits[0, -1], axis=-1))
+                tok = self._paged_admit(manager, rid, prompts[rid],
+                                        finals[rid], variant)
                 outputs[rid] = [tok]
                 active[rid] = {"tok": tok, "pos": lengths[rid]}
-                waiting.pop(0)
+                waiting.popleft()
 
         admit_ready()
         while active or waiting:
@@ -310,6 +451,7 @@ class Server:
                 active[rid]["tok"] = int(nxt[i])
                 active[rid]["pos"] += 1
 
+        self.last_pool_stats = manager.stats()
         self._paged_dtype = next(iter(manager._groups.values()))["dtype"]
         self._paged_sig = self._paged_signature(
             batch=min(max_batch, len(prompts)), dtype=self._paged_dtype)

@@ -124,9 +124,17 @@ def build_train_step(woven: WovenProgram, *, mesh=None, variant: str | None = No
     return train_step
 
 
-def build_prefill_step(woven: WovenProgram, *, mesh=None, variant: str | None = None):
+def build_prefill_step(woven: WovenProgram, *, mesh=None, variant: str | None = None,
+                       cache_max_len: int | None = None):
+    """`cache_max_len` pins the prefill cache padding on a *copied* weave
+    state — the serving probe path uses 0 (no growth room: a 1-token
+    structure probe must not materialize a dense max_len cache) without
+    disturbing the shared state the ordinary prefill traces read."""
     program = woven.program
     state = woven.variant_state(variant)
+    if cache_max_len is not None:
+        state = state.copy()
+        state.extra["cache_max_len"] = cache_max_len
     model = program.model
 
     def prefill_step(params, inputs):
@@ -137,14 +145,44 @@ def build_prefill_step(woven: WovenProgram, *, mesh=None, variant: str | None = 
     return prefill_step
 
 
-def build_decode_step(woven: WovenProgram, *, mesh=None, variant: str | None = None):
+def build_paged_prefill_step(woven: WovenProgram, *, mesh=None,
+                             variant: str | None = None):
+    """Prefill straight into a paged KV pool: `cache` carries the per-layer
+    `{"pk", "pv"}` pools + the request's block-table row, `prefix_len`
+    (static) is how many leading slots are already resident via prefix
+    sharing — the model computes and scatters only the non-shared suffix,
+    so admission peak HBM is O(live tokens), never O(max_len)."""
     program = woven.program
     state = woven.variant_state(variant)
     model = program.model
 
+    def paged_prefill_step(params, inputs, cache, prefix_len: int = 0):
+        ctx = state.make_ctx(mesh=mesh)
+        logits, new_cache = model(params, inputs, ctx=ctx, mode="prefill",
+                                  cache=cache, prefix_len=prefix_len)
+        return logits, new_cache
+
+    return paged_prefill_step
+
+
+def build_decode_step(woven: WovenProgram, *, mesh=None, variant: str | None = None,
+                      rescore: bool = False):
+    """`rescore=True` builds the no-write decode step (paged caches only):
+    a full-prompt prefix hit re-scores its last prompt token — whose K/V
+    already sit on shared pool pages — for the first output logits,
+    without mutating pages other requests still map."""
+    program = woven.program
+    state = woven.variant_state(variant)
+    model = program.model
+
+    # only paged-capable models (TransformerLM) know the re-score contract;
+    # the ordinary decode step stays signature-compatible with every family
+    extra_kw = {"skip_cache_write": True} if rescore else {}
+
     def decode_step(params, inputs, cache):
         ctx = state.make_ctx(mesh=mesh)
-        logits, new_cache = model(params, inputs, ctx=ctx, mode="decode", cache=cache)
+        logits, new_cache = model(params, inputs, ctx=ctx, mode="decode",
+                                  cache=cache, **extra_kw)
         return logits, new_cache
 
     return decode_step

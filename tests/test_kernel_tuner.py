@@ -519,6 +519,50 @@ class TestPagedDecodeSpace:
         monkeypatch.setenv("REPRO_TUNER_CACHE", str(tmp_path / "none.json"))
         assert tuned_paged_blocks((2, 1, 4, 64), 512, 2, "float32") == {}
 
+    def test_shared_prefix_hbm_model(self):
+        """prefix_shared_pool_bytes: full prefix pages are stored once,
+        suffixes per request — and sharing rounds the prefix *down* to a
+        page boundary, so smaller pages share more of it (monotone
+        page-size penalty at fixed prefix)."""
+        from repro.autotune.kernel_tuner import prefix_shared_pool_bytes
+
+        sig = paged_decode_signature(4, 1024, 8, 2, 64, "float32")
+        kv_bytes = 2 * 64 * 2 * 4  # K+V per slot: K heads x D x fp32
+        # page-aligned prefix, page-aligned cache: geometry cancels out
+        assert prefix_shared_pool_bytes(sig, {"page_size": 64},
+                                        prefix_len=512) \
+            == prefix_shared_pool_bytes(sig, {"page_size": 512},
+                                        prefix_len=512) \
+            == (8 + 4 * 8) * 64 * kv_bytes
+        # an unaligned prefix rounds DOWN to the page boundary: small pages
+        # keep sharing almost all of it, a cache-sized page shares nothing
+        small = prefix_shared_pool_bytes(sig, {"page_size": 64},
+                                         prefix_len=511)
+        big = prefix_shared_pool_bytes(sig, {"page_size": 512},
+                                       prefix_len=511)
+        assert small == (7 + 4 * 9) * 64 * kv_bytes  # 448 slots still shared
+        assert big == 4 * 2 * 512 * kv_bytes         # 2 private pages each
+        assert small < big  # finer pages -> more of the prefix shared
+
+    def test_paged_tune_records_pool_hbm_metric(self, tmp_path, monkeypatch):
+        """The paged_decode DSE rows persist the shared-prefix HBM model
+        alongside latency/VMEM, so refinement and offline analysis can
+        weigh page_size against prefix-cache capacity."""
+        path = str(tmp_path / "hbm.json")
+        monkeypatch.setenv("REPRO_TUNER_CACHE", path)
+        sig = paged_decode_signature(2, 512, 4, 2, 64, "float32")
+        tuner = KernelTuner(path)
+        tuner.tune(sig, lambda **kn: 1.0)
+        entry = tuner.cache.get(sig.key())
+        rows = entry["ops"]
+        assert all("pool_hbm_bytes" in r["metrics"] for r in rows)
+        by_ps = {}
+        for r in rows:
+            by_ps.setdefault(r["knobs"]["page_size"],
+                             r["metrics"]["pool_hbm_bytes"][0])
+        sizes = sorted(by_ps)
+        assert [by_ps[s] for s in sizes] == sorted(by_ps[s] for s in sizes)
+
 
 class TestRuntimeFeedback:
     """refine_from_runtime: mARGOt error coefficients over the persisted

@@ -1,14 +1,19 @@
-"""Paged KV-cache pool + continuous batching (the PR 4 serving layer).
+"""Paged KV-cache pool + continuous batching (the PR 4/5 serving layer).
 
 Covers:
   - PagePool allocator invariants, property-tested over random op
-    sequences: no double allocation, free-list reuse, block tables only
-    ever reference live pages, conservation of pages;
-  - reservation-aware admission (deadlock-free growth);
+    sequences — now including refcounted prefix *sharing* and
+    copy-on-write splits: refcounts >= 1 for every table entry, no page
+    both free and referenced, conservation (free + distinct live =
+    num_pages), CoW never touches a page another request still maps;
+  - reservation-aware admission (deadlock-free growth, including CoW
+    exposure and the first-admission capacity check);
   - PagedCacheManager round-trips (admit -> batch -> absorb -> retire);
   - Server.serve_continuous == serve_batch == per-request serve, including
-    under interleaved admit/retire (tiny pool / batch caps) — the
-    continuous-batching acceptance criterion.
+    under interleaved admit/retire (tiny pool / batch caps), shared
+    prompt prefixes (linear + ring families, GQA + softcap), full-prompt
+    re-score admissions and copy-on-write divergence — the
+    continuous-batching + prefix-caching acceptance criteria.
 """
 
 import sys
@@ -117,6 +122,127 @@ class TestPagePool:
             assert len(allocated) + pool.free_pages == pool.num_pages
             assert all(0 <= p < pool.num_pages for p in allocated)
             assert set(pool.tables) == set(live)
+
+
+class TestRefcountedPool:
+    def test_shared_alloc_bumps_refcounts_not_free_list(self):
+        pool = PagePool(8, 8)
+        a = pool.alloc("a", 3)
+        free_before = pool.free_pages
+        b = pool.alloc("b", 4, shared=a[:2])
+        assert b[:2] == a[:2]
+        assert pool.free_pages == free_before - 2  # only the fresh pages
+        assert all(pool.refcount(p) == 2 for p in a[:2])
+        assert pool.refcount(a[2]) == 1
+        assert pool.live_pages == 5  # distinct: 3 + 2 fresh
+        assert pool.mapped_pages == 7
+
+    def test_release_frees_only_at_zero(self):
+        pool = PagePool(8, 8)
+        a = pool.alloc("a", 2)
+        pool.alloc("b", 2, shared=a)
+        freed = pool.release("a")
+        assert freed == []  # b still maps both pages
+        assert all(pool.refcount(p) == 1 for p in a)
+        freed = pool.release("b")
+        assert set(freed) == set(a)
+        assert pool.free_pages == 8
+
+    def test_stale_share_rejected(self):
+        pool = PagePool(4, 8)
+        a = pool.alloc("a", 1)
+        pool.release("a")
+        with pytest.raises(ValueError, match="stale"):
+            pool.alloc("b", 1, shared=a)
+
+    def test_cow_splits_shared_and_skips_exclusive(self):
+        pool = PagePool(8, 8)
+        a = pool.alloc("a", 2)
+        pool.alloc("b", 2, shared=a)
+        assert pool.cow("a", 0) is not None
+        old_new = pool.tables["a"][0], pool.tables["b"][0]
+        assert old_new[0] != old_new[1]           # remapped, not mutated
+        assert pool.tables["b"][0] == a[0]        # b keeps the original
+        assert pool.refcount(a[0]) == 1
+        assert pool.cow("a", 0) is None           # now exclusive: no split
+        assert pool.cow("a", 1) is not None       # second shared page splits
+
+    def test_cow_exhaustion_raises(self):
+        pool = PagePool(2, 8)
+        a = pool.alloc("a", 2)
+        pool.alloc("b", 2, shared=a)
+        with pytest.raises(PoolExhausted):
+            pool.cow("b", 0)
+
+    @given(st.lists(st.tuples(st.integers(0, 4), st.integers(1, 5)),
+                    min_size=1, max_size=80))
+    @settings(max_examples=50, deadline=None)
+    def test_refcount_invariants_under_shared_churn(self, ops):
+        """Random alloc/grow/release/share/cow sequences preserve the
+        refcounted-pool invariants: every table entry's refcount >= 1, no
+        page is both free and referenced, free + distinct live pages
+        partition the pool, total references equal total table entries,
+        tables never alias a page twice, and a CoW split leaves the
+        original page in every *other* table that mapped it."""
+        pool = PagePool(24, 8)
+        rid = 0
+        for op, arg in ops:
+            live = list(pool.tables)
+            if op == 0:  # alloc a new request
+                try:
+                    pool.alloc(rid, arg)
+                except PoolExhausted:
+                    assert pool.free_pages < arg
+                rid += 1
+            elif op == 1 and live:  # grow the oldest live request
+                target = live[0]
+                want = len(pool.tables[target]) + arg
+                try:
+                    pool.grow_to(target, want)
+                except PoolExhausted:
+                    assert pool.free_pages < arg
+            elif op == 2 and live:  # release the oldest live request
+                pool.release(live[0])
+            elif op == 3 and live:  # share a donor's prefix + fresh tail
+                donor = live[arg % len(live)]
+                prefix = pool.tables[donor][: max(1, arg)]
+                extra = arg % 3
+                try:
+                    got = pool.alloc(rid, len(prefix) + extra, shared=prefix)
+                    assert got[: len(prefix)] == prefix
+                except PoolExhausted:
+                    assert pool.free_pages < extra
+                rid += 1
+            elif op == 4 and live:  # copy-on-write split
+                target = live[arg % len(live)]
+                table = pool.tables[target]
+                logical = arg % len(table)
+                before = table[logical]
+                holders = [r for r, t in pool.tables.items()
+                           if r != target and before in t]
+                try:
+                    split = pool.cow(target, logical)
+                except PoolExhausted:
+                    assert pool.free_pages == 0
+                    split = None
+                if split is not None:
+                    old, new = split
+                    assert old == before and new != old
+                    # the original stays mapped by every other holder
+                    for r in holders:
+                        assert old in pool.tables[r]
+
+            entries = [p for t in pool.tables.values() for p in t]
+            refs = [pool.refcount(p) for p in range(pool.num_pages)]
+            referenced = {p for p in range(pool.num_pages) if refs[p] > 0}
+            free = set(pool._free)
+            assert all(pool.refcount(p) >= 1 for p in entries)
+            assert not (free & referenced)  # never both free and referenced
+            assert len(free) + len(referenced) == pool.num_pages
+            assert set(entries) == referenced
+            assert sum(refs) == len(entries) == pool.mapped_pages
+            for t in pool.tables.values():  # no within-table aliasing
+                assert len(t) == len(set(t))
 
 
 class TestBuildLinearPool:
@@ -316,3 +442,296 @@ class TestContinuousServer:
         assert got == knobs
         entry = tuner.cache.get(sig.key())
         assert "runtime" in entry and "error_coef" in entry["runtime"]
+
+    def test_memo_hit_clears_refine_state(self):
+        """Regression: a memo hit used to return before the paged
+        signature / latency window were refreshed, so a following
+        refine_kernel_tuner read stale state from the previous serve.
+        Now the hit clears both and refine declines cleanly."""
+        from repro.memo.table import MemoTable
+
+        srv = _server("yi-6b")
+        srv.memo = MemoTable(size=8)
+        srv.serve_continuous(PROMPTS[:2], page_size=8)
+        assert srv._paged_sig is not None
+        srv.serve_continuous(PROMPTS[:2], page_size=8)  # memo hit
+        assert srv.memo.hits >= 1
+        assert srv._paged_sig is None and srv._paged_dtype is None
+        assert not srv.decode_step_latencies and not srv._step_lat_by_batch
+        assert srv.refine_kernel_tuner(latency_budget=1.0) is None
+
+
+class TestAdmissionControl:
+    def test_first_admission_capacity_checked(self):
+        """Regression: the first admission used to bypass can_admit (no
+        structure yet), wasting a full prefill and dying with a raw
+        PoolExhausted out of pool.alloc.  The capacity check now derives
+        slots-per-token before packing, so an oversized *first* request
+        hits the clean 'page pool too small' path without prefilling."""
+        srv = _server("yi-6b")
+        big = (np.arange(12) % 9 + 1).astype(np.int32)  # final 15 -> 2 pages
+        with pytest.raises(RuntimeError, match="page pool too small"):
+            srv.serve_continuous([big], page_size=8, pool_pages=1)
+        for vc in (srv.prefill_vc, srv.probe_vc, srv.paged_prefill_vc,
+                   srv.rescore_vc):
+            assert not vc.dispatch_counts  # nothing was prefilled
+
+    def test_clipped_final_len_interleaves_safely(self):
+        """Regression: requests whose final_len is clipped by
+        max_cache_len must not grow past their reservation (batch() clamps
+        at final_len), so a clipped long request interleaved with waiting
+        short ones on a tight pool completes without PoolExhausted and
+        matches the batch path."""
+        srv = _server("yi-6b")  # max_cache_len=24: S=20, n=8 clips to 24
+        long_p = (np.arange(20) % 40 + 1).astype(np.int32)
+        pr = [long_p, np.full((4,), 9, np.int32), np.full((4,), 11, np.int32)]
+        batched = srv.serve_batch(pr, decode_tokens=8)
+        # 3 pages (clipped long) + 2 pages (one short): the second short
+        # must wait for a retirement
+        cont = srv.serve_continuous(pr, decode_tokens=8, page_size=8,
+                                    pool_pages=5)
+        for b, c in zip(batched, cont):
+            np.testing.assert_array_equal(b, c)
+
+
+BASE16 = np.arange(1, 17, dtype=np.int32)  # two full pages at page_size=8
+SHARED_PROMPTS = [
+    np.concatenate([BASE16, np.array([21, 22, 23], np.int32)]),
+    np.concatenate([BASE16, np.array([31, 32], np.int32)]),
+    np.full((3,), 7, np.int32),  # unrelated short request rides along
+]
+
+
+def _softcap_gqa_server():
+    """Dense-family GQA config with grok's logit soft-cap: the softcap
+    acceptance axis for prefix sharing (the MoE softcap arch can't share —
+    capacity routing makes prefix K/V request-dependent)."""
+    from repro.configs.base import SHAPES
+    from repro.core.program import Program
+    from repro.launch.weave import default_weave
+    from repro.models.registry import build_model, reduced_config
+    from repro.runtime.server import Server, ServerConfig
+
+    cfg = reduced_config("yi-6b").replace(attn_softcap=30.0)
+    program = Program(model=build_model(cfg), cfg=cfg, kind="serve")
+    woven = default_weave(program, SHAPES["prefill_32k"], {})
+    return Server(woven, ServerConfig(max_cache_len=24, decode_tokens=4))
+
+
+class TestPrefixSharing:
+    """Shared-prefix serving is bit-identical to unshared serving at the
+    server level (the acceptance criterion), across the linear GQA family
+    (yi), GQA + softcap (dense grok-style cap), and the ring family
+    (mixtral, prompts past the window — sharing disabled, direct-to-pool
+    ring prefill still exact).  Capacity-routed MoE keeps sharing off
+    (prefix K/V are group-coupled, not request-independent) but the paged
+    prefill must still match exactly."""
+
+    @pytest.mark.parametrize("arch", ["yi-6b", "softcap-gqa"])
+    def test_shared_prefix_bit_identical(self, arch):
+        srv = _softcap_gqa_server() if arch == "softcap-gqa" \
+            else _server(arch)
+        batched = srv.serve_batch(SHARED_PROMPTS)
+        shared = srv.serve_continuous(SHARED_PROMPTS, page_size=8)
+        unshared = srv.serve_continuous(SHARED_PROMPTS, page_size=8,
+                                        prefix_sharing=False)
+        for b, s, u in zip(batched, shared, unshared):
+            np.testing.assert_array_equal(b, s)
+            np.testing.assert_array_equal(s, u)
+        # the 16-token prefix is two pages, mapped (not copied) for req 1
+        assert srv.last_pool_stats["prefix_hits"] == 0  # unshared run
+        srv.serve_continuous(SHARED_PROMPTS, page_size=8)
+        stats = srv.last_pool_stats
+        assert stats["prefix_hits"] >= 2
+        assert stats["peak_live_pages"] < stats["peak_mapped_pages"]
+
+    def test_pallas_weave_disables_sharing(self):
+        """A pallas-woven attention impl turns prefix sharing off: the
+        suffix-over-prefix attention runs the XLA path, so sharing under a
+        flash prefill would break the shared == unshared bit-parity
+        guarantee.  Serving itself must still match the batch path."""
+        from repro.configs.base import SHAPES
+        from repro.core.program import Program
+        from repro.core.strategies.kernels import KernelAspect
+        from repro.launch.weave import default_weave
+        from repro.runtime.server import Server, ServerConfig
+
+        program = Program.from_arch("yi-6b", kind="serve", reduced=True)
+        woven = default_weave(
+            program, SHAPES["prefill_32k"], {},
+            extra_aspects=[KernelAspect("*", "attention", "pallas")])
+        srv = Server(woven, ServerConfig(max_cache_len=24, decode_tokens=4))
+        batched = srv.serve_batch(SHARED_PROMPTS)
+        cont = srv.serve_continuous(SHARED_PROMPTS, page_size=8)
+        for b, c in zip(batched, cont):
+            np.testing.assert_array_equal(b, c)
+        assert srv.last_pool_stats["prefix_hits"] == 0
+
+    def test_moe_family_keeps_sharing_off_and_matches(self):
+        """grok (MoE + softcap + GQA): the scheduler must not share prefix
+        pages — capacity routing couples tokens across the group, so a
+        sharer's prefix K/V could differ from the donor's — but the
+        direct-to-pool paged prefill still serves bit-identically."""
+        srv = _server("grok-1-314b")
+        batched = srv.serve_batch(SHARED_PROMPTS)
+        cont = srv.serve_continuous(SHARED_PROMPTS, page_size=8)
+        for b, c in zip(batched, cont):
+            np.testing.assert_array_equal(b, c)
+        assert srv.last_pool_stats["prefix_hits"] == 0
+        assert srv.last_pool_stats["cow_splits"] == 0
+
+    def test_ring_family_paged_prefill_parity(self):
+        """Prompts past the sliding window ring the pool: prefix sharing
+        stays off (slot contents depend on the wrap) but the direct-to-
+        pool ring prefill must still match the batch path exactly."""
+        srv = _server("mixtral-8x22b")  # reduced window 16
+        prompts = [(np.arange(20) % 50 + 1).astype(np.int32),
+                   (np.arange(18) % 31 + 2).astype(np.int32)]
+        batched = srv.serve_batch(prompts)
+        cont = srv.serve_continuous(prompts, page_size=8)
+        for b, c in zip(batched, cont):
+            np.testing.assert_array_equal(b, c)
+        assert srv.last_pool_stats["prefix_hits"] == 0
+
+    def test_identical_prompts_rescore_and_cow(self):
+        """A full-prompt prefix hit admits with zero prefill (the re-score
+        decode step supplies the first logits) and the first decode write
+        into the shared tail page splits it copy-on-write — outputs stay
+        bit-identical to solo serving."""
+        srv = _server("yi-6b")
+        p = np.array([3, 1, 4, 1, 5], np.int32)  # S % page_size != 0
+        out = srv.serve_continuous([p, p], page_size=8)
+        solo = srv.serve(p[None])[0]
+        np.testing.assert_array_equal(out[0], solo)
+        np.testing.assert_array_equal(out[1], solo)
+        stats = srv.last_pool_stats
+        assert stats["prefix_hits"] >= 1  # the whole prompt rode one page
+        assert stats["cow_splits"] >= 1   # first decode write split it
+        assert srv.rescore_vc.dispatch_counts  # no-prefill admission ran
+
+    def test_long_prompt_full_share_falls_back_to_suffix_prefill(self):
+        """Prompts past the blocked-attention threshold must not take the
+        re-score shortcut (their unshared first token comes from the
+        blocked online-softmax path — a different numeric family than the
+        decode softmax): the share is trimmed so a suffix prefill runs,
+        and parity still holds."""
+        from repro.configs.base import SHAPES
+        from repro.core.program import Program
+        from repro.launch.weave import default_weave
+        from repro.runtime.server import Server, ServerConfig
+
+        program = Program.from_arch("yi-6b", kind="serve", reduced=True)
+        woven = default_weave(program, SHAPES["prefill_32k"], {})
+        woven.state.extra["xla_attn_block"] = 2  # S=5 > 2*block
+        srv = Server(woven, ServerConfig(max_cache_len=24, decode_tokens=4))
+        p = np.array([3, 1, 4, 1, 5], np.int32)
+        out = srv.serve_continuous([p, p], page_size=2)
+        solo = srv.serve(p[None])[0]
+        np.testing.assert_array_equal(out[0], solo)
+        np.testing.assert_array_equal(out[1], solo)
+        assert not srv.rescore_vc.dispatch_counts  # gate held
+        # the trimmed share still maps the full prefix pages
+        assert srv.last_pool_stats["prefix_hits"] >= 2
+
+    def test_aligned_full_share_trim_is_reserved(self):
+        """Regression: a page-aligned full-prompt hit that the long-prompt
+        gate trims back to a suffix prefill costs one fresh page the share
+        would have covered — can_admit must reserve it, so a tight pool
+        defers the admission instead of hitting PoolExhausted mid-serve."""
+        from repro.configs.base import SHAPES
+        from repro.core.program import Program
+        from repro.launch.weave import default_weave
+        from repro.runtime.server import Server, ServerConfig
+
+        program = Program.from_arch("yi-6b", kind="serve", reduced=True)
+        woven = default_weave(program, SHAPES["prefill_32k"], {})
+        woven.state.extra["xla_attn_block"] = 2  # S=6 > 2*block
+        srv = Server(woven, ServerConfig(max_cache_len=24, decode_tokens=4))
+        p = np.array([3, 1, 4, 1, 5, 9], np.int32)  # S % page_size == 0
+        # final = 9 -> 5 pages each; 7 pages force the second admission to
+        # wait (5 growth + trim page > remaining) rather than overcommit
+        out = srv.serve_continuous([p, p], page_size=2, pool_pages=7)
+        solo = srv.serve(p[None])[0]
+        np.testing.assert_array_equal(out[0], solo)
+        np.testing.assert_array_equal(out[1], solo)
+        assert not srv.rescore_vc.dispatch_counts  # gate held
+
+    def test_mixed_legacy_and_direct_admissions_compose(self):
+        """A batch mixing a legacy admit() of a hand-built cache (no
+        hoisted kv_pos) with a direct-to-pool admission must still
+        compose: the manager synthesizes the missing map."""
+        import jax.numpy as jnp
+
+        from repro.runtime.pages import PagedCacheManager
+
+        srv = _server("yi-6b")
+        manager = PagedCacheManager(8, 8, max_len=24, window=None)
+        p = np.array([3, 1, 4, 1, 5], np.int32)
+        srv._paged_admit(manager, 0, p, 12, None)
+        # hand-built dense cache without kv_pos, matching the pool groups
+        legacy = {}
+        for name, info in manager._groups.items():
+            shape = (info["n"], 1, info["length"], info["kv_heads"],
+                     info["head_dim"])
+            legacy[name] = {
+                "k": jnp.zeros(shape, info["dtype"]),
+                "v": jnp.zeros(shape, info["dtype"]),
+                "index": jnp.full((info["n"],), 4, jnp.int32),
+            }
+        manager.admit(1, legacy, final_len=8)
+        cache = manager.batch([0, 1])
+        assert cache["kv_pos"].shape == (2, 24)
+        np.testing.assert_array_equal(
+            np.asarray(cache["kv_pos"][1]),
+            np.where(np.arange(24) < 4, np.arange(24), -1))
+
+    def test_cow_divergence_isolates_requests(self):
+        """Two requests that share a whole prompt then *diverge* (forced
+        different continuations) must never see each other's tokens: the
+        split remaps the writer's table, the donor keeps the original
+        page, and each stream's logits match its own solo run exactly."""
+        import jax.numpy as jnp
+
+        from repro.runtime.pages import PagedCacheManager
+
+        srv = _server("yi-6b")
+        state = srv.woven.variant_state(None)
+        state.extra["cache_max_len"] = 24
+        p = np.array([3, 1, 4, 1, 5], np.int32)
+        manager = PagedCacheManager(8, 8, max_len=24, window=None)
+        first = [srv._paged_admit(manager, rid, p, 12, None)
+                 for rid in (0, 1)]
+        assert first[0] == first[1]
+        assert manager.prefix_hits >= 1
+        shared_page = manager.pool.tables[0][0]
+        assert manager.pool.tables[1][0] == shared_page
+
+        forced = {0: [5, 6], 1: [9, 10]}  # divergent continuations
+        paged_logits = {0: [], 1: []}
+        for step in range(2):
+            cache = manager.batch([0, 1])
+            tok = jnp.asarray([[forced[0][step]], [forced[1][step]]],
+                              jnp.int32)
+            pos = jnp.full((2, 1), 5 + step, jnp.int32)
+            logits, new_cache = srv.decode_vc(
+                None, srv.params, {"tokens": tok, "positions": pos}, cache)
+            manager.absorb([0, 1], new_cache)
+            paged_logits[0].append(np.asarray(logits[0]))
+            paged_logits[1].append(np.asarray(logits[1]))
+        assert manager.cow_splits >= 1
+        t0, t1 = manager.pool.tables[0], manager.pool.tables[1]
+        assert t0[0] != t1[0]  # the written tail page split
+        assert shared_page in (t0[0], t1[0])  # one side kept the original
+
+        # each stream matches a solo dense run of the same forced tokens
+        for rid in (0, 1):
+            toks = jnp.asarray(p, jnp.int32).reshape(1, -1)
+            _, cache = srv.prefill_vc(None, srv.params, {"tokens": toks})
+            for step in range(2):
+                tok = jnp.asarray([[forced[rid][step]]], jnp.int32)
+                pos = jnp.full((1, 1), 5 + step, jnp.int32)
+                logits, cache = srv.decode_vc(
+                    None, srv.params, {"tokens": tok, "positions": pos},
+                    cache)
+                np.testing.assert_array_equal(paged_logits[rid][step],
+                                              np.asarray(logits[0]))
