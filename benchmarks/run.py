@@ -14,6 +14,7 @@ BENCH_kernels.json: pruned-vs-dense grid + tuned-vs-default blocks).
   flash_decode       (kernels)    pruned decode kernel vs dense-XLA cache sweep
   paged_decode       (kernels)    paged pool vs dense-stacked mixed-length batch
   prefix_cache       (kernels)    shared-prefix pool pages + direct-to-pool prefill
+  speculative        (kernels)    draft/verify loop vs plain greedy + streamed-KV oracle
   roofline_report    §Roofline    table from dry-run artifacts
 
 Flags:
@@ -34,7 +35,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
 QUICK_MODULES = ("weaving", "kernels", "flash_bwd", "flash_decode",
-                 "paged_decode", "prefix_cache")
+                 "paged_decode", "prefix_cache", "speculative")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -57,12 +58,13 @@ def main(argv: list[str] | None = None) -> None:
         precision_versions,
         prefix_cache,
         roofline_report,
+        speculative,
         weaving,
     )
 
     modules = [weaving, precision_versions, kernels, flash_bwd, flash_decode,
-               paged_decode, prefix_cache, betweenness, docking_dse,
-               navigation_autotune, roofline_report]
+               paged_decode, prefix_cache, speculative, betweenness,
+               docking_dse, navigation_autotune, roofline_report]
     if args.only:
         names = {n.strip() for n in args.only.split(",")}
         modules = [m for m in modules
@@ -72,8 +74,9 @@ def main(argv: list[str] | None = None) -> None:
             valid = ", ".join(m.__name__.split(".")[-1] for m in
                               (weaving, precision_versions, kernels,
                                flash_bwd, flash_decode, paged_decode,
-                               prefix_cache, betweenness, docking_dse,
-                               navigation_autotune, roofline_report))
+                               prefix_cache, speculative, betweenness,
+                               docking_dse, navigation_autotune,
+                               roofline_report))
             ap.error(f"--only {args.only!r} matches no benchmark; "
                      f"valid names: {valid}")
     elif args.quick:

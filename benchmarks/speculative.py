@@ -1,0 +1,163 @@
+"""Speculative-decoding bench (the PR 6 perf data point).
+
+Plain greedy `serve_continuous` vs the draft/verify loop at equal output,
+self-drafting (the target proposes for itself — acceptance 1, the
+mechanism's upper bound).  Three claims, all asserted here and in CI:
+
+  token parity    speculative greedy == plain greedy bit for bit: every
+                  emitted token is a target argmax — the draft only
+                  changes how many target steps the output costs.
+  target steps    at acceptance 1, the n-1 plain decode steps collapse to
+                  ceil((n-1)/(draft_len+1)) widened verify steps — the
+                  >= 1.5x step-reduction acceptance criterion, measured
+                  by counting actual target-model dispatches.
+  streamed bytes  one widened verify step streams the *union* of the
+                  per-token live KV intervals once; draft_len+1 sequential
+                  single-token steps each re-stream their whole prefix.
+                  The `decode_schedule` q_span oracle (exactly what the
+                  kernel's clamp-and-elide walk DMAs) quantifies the gap.
+
+A cross-model round (the registry's draft pairing) records the acceptance
+a *foreign* draft actually achieves — correctness never depends on it.
+
+Merges a `speculative` section into artifacts/bench/BENCH_kernels.json;
+runnable standalone via `benchmarks/run.py --only speculative`.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.base import SHAPES
+from repro.core.program import Program
+from repro.kernels.flash_attention.decode import decode_schedule
+from repro.launch.weave import default_weave
+from repro.runtime.server import Server, ServerConfig
+
+
+def _server(arch: str, *, max_cache_len: int, decode_tokens: int) -> Server:
+    program = Program.from_arch(arch, kind="serve", reduced=True)
+    woven = default_weave(program, SHAPES["prefill_32k"], {})
+    return Server(woven, ServerConfig(max_cache_len=max_cache_len,
+                                      decode_tokens=decode_tokens))
+
+
+def run(artifacts: str, *, quick: bool = False) -> list[str]:
+    rows: list[str] = []
+    ps = 8
+    n_req = 2 if quick else 3
+    decode_tokens = 8                 # 7 plain decode steps per request
+    draft_len = 3                     # -> ceil(7/4) = 2 verify steps
+    max_cache_len = 24
+
+    srv = _server("yi-6b", max_cache_len=max_cache_len,
+                  decode_tokens=decode_tokens)
+    cfg = srv.woven.program.cfg
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, cfg.vocab, 4 + i).astype(np.int32)
+               for i in range(n_req)]
+
+    # count actual target-model step launches (the decode variant cache
+    # tallies dispatches; the speculative serve reports its own step stats)
+    base_decode = sum(srv.decode_vc.dispatch_counts.values())
+    t0 = time.perf_counter()
+    out_plain = srv.serve_continuous(prompts, page_size=ps)
+    t_plain = time.perf_counter() - t0
+    plain_steps = sum(srv.decode_vc.dispatch_counts.values()) - base_decode
+
+    t0 = time.perf_counter()
+    out_spec = srv.serve_continuous(prompts, page_size=ps,
+                                    draft_len=draft_len)
+    t_spec = time.perf_counter() - t0
+    stats = dict(srv.last_spec_stats)
+
+    parity = all(np.array_equal(a, b) for a, b in zip(out_plain, out_spec))
+    assert parity, "speculative greedy diverged from plain greedy"
+    spec_steps = stats["target_steps"]
+    assert spec_steps < plain_steps, (spec_steps, plain_steps)
+    step_ratio = plain_steps / spec_steps
+    assert step_ratio >= 1.5, (plain_steps, spec_steps)
+    assert stats["acceptance"] == 1.0  # self-draft: every proposal matches
+
+    # -- streamed-KV oracle: one widened step vs k+1 single-token steps -----
+    # at a representative round (the longest prompt's first verify), the
+    # widened step streams the union interval once; sequential decode
+    # re-streams the whole live prefix per token
+    bkv = 8
+    idx = int(max(len(p) for p in prompts))
+    span = draft_len + 1
+    verify_blocks = len(decode_schedule(max_cache_len, idx, bkv,
+                                        q_span=span))
+    sequential_blocks = sum(
+        len(decode_schedule(max_cache_len, idx + s, bkv))
+        for s in range(span))
+    assert verify_blocks < sequential_blocks
+
+    # -- cross-model draft: the registry pairing's observed acceptance -----
+    cross_acceptance = None
+    if not quick:
+        from repro.models.registry import draft_for
+
+        dsrv = _server(draft_for("yi-6b"), max_cache_len=max_cache_len,
+                       decode_tokens=decode_tokens)
+        out_cross = srv.serve_continuous(prompts, page_size=ps,
+                                         draft_len=draft_len, draft=dsrv)
+        assert all(np.array_equal(a, b)
+                   for a, b in zip(out_plain, out_cross))
+        cross_acceptance = srv.last_spec_stats["acceptance"]
+
+    section = {
+        "config": {
+            "arch": cfg.name,
+            "n_requests": n_req,
+            "decode_tokens": decode_tokens,
+            "draft_len": draft_len,
+            "page_size": ps,
+            "max_cache_len": max_cache_len,
+        },
+        "parity": {"tokens_equal": bool(parity)},
+        "steps": {
+            "plain": int(plain_steps),
+            "speculative": int(spec_steps),
+            "verify": int(stats["verify_steps"]),
+            "fallback_decode": int(stats["decode_steps"]),
+            "ratio": float(step_ratio),
+        },
+        "acceptance": {
+            "self_draft": float(stats["acceptance"]),
+            "cross_model": (float(cross_acceptance)
+                            if cross_acceptance is not None else None),
+        },
+        "tokens_per_verify": float(stats["mean_tokens_per_verify"]),
+        "streamed": {
+            "block_kv": bkv,
+            "index": idx,
+            "q_span": span,
+            "verify_blocks": int(verify_blocks),
+            "sequential_blocks": int(sequential_blocks),
+            "ratio": verify_blocks / sequential_blocks,
+        },
+        "latency_s": {"plain": t_plain, "speculative": t_spec},
+    }
+
+    rows.append(
+        f"speculative,{t_spec*1e6:.0f},"
+        f"step_ratio={step_ratio:.2f};"
+        f"tokens_per_verify={stats['mean_tokens_per_verify']:.2f};"
+        f"parity={int(parity)}"
+    )
+    cross = (f", cross-model acceptance {cross_acceptance:.0%}"
+             if cross_acceptance is not None else "")
+    print(f"  speculative[{n_req}req x {decode_tokens}tok, k={draft_len}]: "
+          f"{plain_steps} plain target steps -> {spec_steps} "
+          f"({step_ratio:.1f}x fewer), "
+          f"{stats['mean_tokens_per_verify']:.2f} tokens/verify, "
+          f"verify streams {verify_blocks}/{sequential_blocks} KV blocks "
+          f"of {span} sequential steps, parity exact{cross}")
+
+    from benchmarks.kernels import merge_bench_sections
+
+    merge_bench_sections(artifacts, {"speculative": section})
+    return rows

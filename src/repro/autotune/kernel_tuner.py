@@ -130,6 +130,24 @@ def paged_decode_signature(batch: int, cache_len: int, n_heads: int,
     )
 
 
+def speculative_signature(batch: int, cache_len: int, n_heads: int,
+                          kv_heads: int, head_dim: int, dtype="bfloat16",
+                          *, window: int | None = None) -> KernelSignature:
+    """Speculative-decoding verify step: a widened-q flash_decode call
+    scoring `draft_len + 1` tokens per request in one kernel instance.
+    Its own kernel space because the governing knob is the draft span
+    itself — `draft_len` scales the q tile (rows = (draft_len+1)·group)
+    and the per-step work, while the *useful* tokens per step scale with
+    the draft's acceptance rate, which only serving traffic can observe
+    (`Server.refine_speculative` feeds it back as `tokens_per_step`)."""
+    return KernelSignature(
+        kernel="speculative",
+        shape=(batch, cache_len, n_heads, kv_heads, head_dim),
+        dtype=str(getattr(dtype, "name", dtype)), causal=True,
+        window=window, gqa=n_heads // max(kv_heads, 1),
+    )
+
+
 def rmsnorm_signature(rows: int, dim: int, dtype="bfloat16") -> KernelSignature:
     """Fused RMSNorm problem: (rows, d) with rows = batch * seq."""
     return KernelSignature(
@@ -173,6 +191,10 @@ KERNEL_SPACES: dict[str, dict[str, tuple[int, ...]]] = {
         "page_size": (64, 128, 256, 512),
         "block_kv_dec": (128, 256, 512, 1024),
     },
+    "speculative": {
+        "draft_len": (1, 2, 4, 8),
+        "block_kv_dec": (128, 256, 512, 1024),
+    },
     "rwkv6": {"chunk": (16, 32, 64, 128)},
     "rglru": {"block_d": (128, 256, 512, 1024), "chunk": (64, 128, 256)},
     "rmsnorm": {"block_rows": (64, 128, 256, 512)},
@@ -206,6 +228,12 @@ def config_vmem_bytes(sig: KernelSignature, knobs: Mapping[str, int]) -> int:
         return vmem_bytes_dec(
             H // max(K, 1), min(eff, max(T, 128)), D, b, kv_dtype_bytes=b,
         ) + 4 * cdiv(max(T, 1), ps)  # + the SMEM block-table row
+    if sig.kernel == "speculative":
+        B, T, H, K, D = sig.shape
+        return vmem_bytes_dec(
+            H // max(K, 1), min(int(knobs["block_kv_dec"]), max(T, 128)),
+            D, b, kv_dtype_bytes=b, q_span=int(knobs["draft_len"]) + 1,
+        )
     if sig.kernel == "rwkv6":
         B, S, H, C = sig.shape
         L = int(knobs["chunk"])
@@ -265,6 +293,14 @@ def design_space(sig: KernelSignature, *,
         space["block_kv_dec"] = [
             v for v in space["block_kv_dec"] if v <= max(T, 128)
         ]
+    elif sig.kernel == "speculative":
+        T = sig.shape[1]
+        space["block_kv_dec"] = [
+            v for v in space["block_kv_dec"] if v <= max(T, 128)
+        ]
+        # the draft block must fit under the request's decode budget slack
+        space["draft_len"] = [v for v in space["draft_len"]
+                              if v < max(T, 2)]
     elif sig.kernel == "rwkv6":
         S = sig.shape[1]
         space["chunk"] = [v for v in space["chunk"] if v <= max(S, 16)]
@@ -410,6 +446,14 @@ class KernelTuner:
             lat.add_metric(
                 "pool_hbm_bytes",
                 lambda **knobs: float(prefix_shared_pool_bytes(sig, knobs)),
+            )
+        if sig.kernel == "speculative":
+            # expected useful tokens per verify step under the acceptance-1
+            # prior; serving traffic's observed mean (acceptance < 1)
+            # rescales these expectations through refine_from_runtime
+            lat.add_metric(
+                "tokens_per_step",
+                lambda **knobs: float(int(knobs["draft_len"]) + 1),
             )
         results = lat.tune(sample=sample, seed=seed)
 
@@ -559,6 +603,41 @@ def _default_measure(sig: KernelSignature) -> Callable[..., float]:
 
         return measure
 
+    if sig.kernel == "speculative":
+        from repro.kernels.flash_attention.ops import flash_decode
+
+        B, T, H, K, D = sig.shape
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        kv_full = jax.random.normal(ks[1], (B, T, K, D), dt)
+
+        def measure(**knobs):
+            # one widened-q verify step: write the draft block in place,
+            # then score all draft_len+1 positions in a single kernel call
+            # — what a speculative serving round pays on the target model.
+            S = int(knobs["draft_len"]) + 1
+            q = jax.random.normal(ks[0], (B, S, H, D), dt)
+            kv_new = jax.random.normal(ks[3], (B, S, K, D), dt)
+            index = jnp.full((B,), T - S, jnp.int32)  # worst case: near-full
+
+            @jax.jit
+            def step(q, k, v, kv_new, index):
+                bidx = jnp.arange(B)
+                slots = index[:, None] + jnp.arange(S)
+                k = k.at[bidx[:, None], slots].set(kv_new)
+                v = v.at[bidx[:, None], slots].set(kv_new)
+                return flash_decode(
+                    q, k, v, index, window=sig.window,
+                    block_kv=int(knobs["block_kv_dec"]),
+                )
+
+            args = (q, kv_full, kv_full, kv_new, index)
+            jax.block_until_ready(step(*args))  # compile
+            t0 = time.perf_counter()
+            jax.block_until_ready(step(*args))
+            return time.perf_counter() - t0
+
+        return measure
+
     if sig.kernel == "rwkv6":
         from repro.kernels.rwkv6.ops import wkv_pallas
 
@@ -676,6 +755,20 @@ def tuned_paged_blocks(q_shape, cache_len: int, kv_heads: int, dtype, *,
         return tuned_decode_blocks(q_shape, cache_len, kv_heads, dtype,
                                    window=window)
     except Exception:  # pragma: no cover - never break the kernel call
+        return {}
+
+
+def tuned_speculative_knobs(batch: int, cache_len: int, n_heads: int,
+                            kv_heads: int, head_dim: int, dtype, *,
+                            window: int | None = None) -> dict[str, int]:
+    """Non-failing speculative-knob lookup (the serving runtime reads
+    `draft_len` through the woven "speculative_draft_len" extra): {} when
+    untuned — serving then falls back to plain one-token decode."""
+    try:
+        sig = speculative_signature(batch, cache_len, n_heads, kv_heads,
+                                    head_dim, dtype, window=window)
+        return default_tuner().lookup(sig) or {}
+    except Exception:  # pragma: no cover - never break the serve path
         return {}
 
 

@@ -108,6 +108,21 @@ class TunedKernelAspect(Aspect):
             cfg.resolved_head_dim, self.dtype, window=window,
         )
 
+    def speculative_signature(self, cfg):
+        """Speculative verify step: same problem geometry as the decode
+        signatures, but the knob is the draft span itself (`draft_len`
+        scales the widened q tile; acceptance-refined at runtime)."""
+        from repro.autotune.kernel_tuner import speculative_signature
+
+        cache_len = self.cache_len or self.seq_len
+        window = cfg.attn_window
+        if window is not None and window < cache_len:
+            cache_len, window = window, None  # ring layout
+        return speculative_signature(
+            self.batch, cache_len, cfg.n_heads, cfg.kv_heads,
+            cfg.resolved_head_dim, self.dtype, window=window,
+        )
+
     def rmsnorm_signature(self, cfg):
         from repro.autotune.kernel_tuner import rmsnorm_signature
 
@@ -179,6 +194,15 @@ class TunedKernelAspect(Aspect):
                 self._weave(weaver, "paged_decode", paged_knobs, {
                     "page_size": "flash_page_size",
                     "block_kv_dec": "flash_block_kv_dec",
+                })
+            spec_knobs = self._knobs_for(tuner,
+                                         self.speculative_signature(cfg))
+            if spec_knobs:
+                # a tuned draft span turns speculative serving on: the
+                # server reads "speculative_draft_len" from the woven
+                # extras and drafts/verifies in k+1-token rounds
+                self._weave(weaver, "speculative", spec_knobs, {
+                    "draft_len": "speculative_draft_len",
                 })
 
         norm_jps = weaver.select(kind="norm").all()

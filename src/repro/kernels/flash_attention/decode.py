@@ -52,6 +52,18 @@ so the O(min(W, index+1)) live-block bound per token carries over verbatim,
 and requests of wildly different lengths share one HBM pool instead of each
 padding to max_len.  `block_kv` is clamped to a divisor of `page_size`
 (`page_block_kv`) so a streamed block never straddles a page boundary.
+
+Widened q (`q_span` > 1, the `q_offset` variant): the q tile grows from one
+token's folded group (G, D) to a draft block's (q_span * G, D) — row
+r = s*G + g is draft token s, head-group lane g, and the causal boundary
+becomes *per-row*: token s attends through cache position index + s, where
+`index` is the position of the *first* new token.  Everything else —
+clamp-and-elide walk (hi now covers index + q_span - 1), online softmax
+(rows are independent), the paged table indirection — is unchanged, so one
+verify step over a k-token draft streams the cache once instead of k times.
+The same shape with index = prefix_len and q_span = suffix length is
+suffix-over-prefix chunked prefill, which is how the paged prefix-sharing
+path runs through Pallas.
 """
 
 from __future__ import annotations
@@ -97,34 +109,40 @@ def _dec_lo(index, block_kv: int, window: int | None, hi):
     return jnp.clip(lo, 0, hi - 1)
 
 
-def decode_steps_for(T: int, block_kv: int, window: int | None = None) -> int:
+def decode_steps_for(T: int, block_kv: int, window: int | None = None,
+                     q_span: int = 1) -> int:
     """Max live KV blocks one decode step can stream, over all indices.
 
-    Without a window that is the full cache; with one, the W in-window slots
-    span at most ceil((W-1)/block_kv) + 1 blocks (worst case: the window
+    Without a window that is the full cache; with one, the in-window slots
+    of `q_span` stacked tokens span window + q_span - 1 positions, i.e. at
+    most ceil((W + q_span - 2)/block_kv) + 1 blocks (worst case: the span
     straddles block edges on both sides)."""
     nk = cdiv(T, block_kv)
     if window is None:
         return nk
-    return max(1, min(nk, cdiv(max(window - 1, 1), block_kv) + 1))
+    span = window + q_span - 1
+    return max(1, min(nk, cdiv(max(span - 1, 1), block_kv) + 1))
 
 
 def decode_schedule(
     T: int, index: int, block_kv: int, *,
-    window: int | None = None, pruned: bool = True,
+    window: int | None = None, pruned: bool = True, q_span: int = 1,
 ) -> list[int]:
-    """KV blocks one decode token actually *streams* from a length-T cache.
+    """KV blocks one decode step actually *streams* from a length-T cache.
 
     Mirrors the kernel's clamp-and-elide index remapping: the pruned path
     walks [lo, hi) and overshoot steps repeat the last block (no DMA).  For
     ring caches (T == window, window=None here) this is exactly
     range(ceil(min(T, index+1) / block_kv)); the dense path streams every
-    block.
+    block.  With `q_span` > 1 the interval widens to cover the *last*
+    stacked token (position index + q_span - 1) while lo stays anchored on
+    the first — one widened step streams the union of the per-token
+    intervals.
     """
     nk = cdiv(T, block_kv)
     if not pruned:
         return list(range(nk))
-    hi = _dec_hi(int(index), block_kv, T)
+    hi = _dec_hi(int(index) + q_span - 1, block_kv, T)
     lo = _dec_lo(int(index), block_kv, window, hi)
     return list(range(int(lo), int(hi)))
 
@@ -141,9 +159,9 @@ def page_block_kv(block_kv: int, page_size: int) -> int:
 
 def paged_decode_schedule(
     kv_len: int, index: int, block_kv: int, page_size: int, table,
-    *, window: int | None = None, pruned: bool = True,
+    *, window: int | None = None, pruned: bool = True, q_span: int = 1,
 ) -> list[tuple[int, int]]:
-    """Physical (page, sub_block) pairs one decode token streams from the
+    """Physical (page, sub_block) pairs one decode step streams from the
     pool — `decode_schedule` mapped through the request's block table.
 
     `table` is the request's row: table[i] = physical page of logical page
@@ -151,7 +169,8 @@ def paged_decode_schedule(
     the live logical blocks are touched, in logical order."""
     bkv = page_block_kv(block_kv, page_size)
     spb = page_size // bkv
-    logical = decode_schedule(kv_len, index, bkv, window=window, pruned=pruned)
+    logical = decode_schedule(kv_len, index, bkv, window=window, pruned=pruned,
+                              q_span=q_span)
     return [(int(table[jb // spb]), jb % spb) for jb in logical]
 
 
@@ -161,11 +180,11 @@ def paged_decode_schedule(
 
 
 def _flash_decode_kernel(
-    idx_ref,  # scalar prefetch: (B,) int32, per-request index
-    q_ref,    # (1, 1, Gp, D)
+    idx_ref,  # scalar prefetch: (B,) int32, per-request index (first token)
+    q_ref,    # (1, 1, Rp, D) — q_span tokens' folded groups, row r = s*G + g
     k_ref,    # (1, 1, block_kv, D)
     v_ref,
-    o_ref,    # (1, 1, Gp, D)
+    o_ref,    # (1, 1, Rp, D)
     m_scratch, l_scratch, acc_scratch,
     *,
     block_kv: int,
@@ -174,6 +193,8 @@ def _flash_decode_kernel(
     softcap: float | None,
     scale: float,
     pruned: bool,
+    group: int = 1,   # q rows per token (GQA fold); row // group = token off
+    q_span: int = 1,  # stacked q tokens; token s sits at position index + s
 ):
     b = pl.program_id(0)
     j = pl.program_id(2)
@@ -186,8 +207,7 @@ def _flash_decode_kernel(
         acc_scratch[...] = jnp.zeros_like(acc_scratch)
 
     index = idx_ref[b]
-    live = jnp.clip(index + 1, 1, kv_len)  # tokens in the cache this step
-    hi = _dec_hi(index, block_kv, kv_len)
+    hi = _dec_hi(index + q_span - 1, block_kv, kv_len)
     lo = _dec_lo(index, block_kv, window, hi)
     if pruned:
         # the index_map streamed block min(lo+j, hi-1); overshoot steps
@@ -212,9 +232,13 @@ def _flash_decode_kernel(
             s = jnp.tanh(s / softcap) * softcap
 
         kp = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = kp < live  # ring: filled slots; linear: causal slots <= index
+        # per-row causal boundary: q row r is draft token r // group, which
+        # sits at position index + r // group and attends slots <= it
+        off = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        live = jnp.clip(index + off + 1, 1, kv_len)
+        mask = kp < live  # ring: filled slots; linear: causal slots <= pos
         if window is not None:  # linear cache under a sliding window
-            mask = jnp.logical_and(mask, kp > index - window)
+            mask = jnp.logical_and(mask, kp > index + off - window)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scratch[...]
@@ -248,10 +272,10 @@ def _flash_decode_kernel_paged(idx_ref, tbl_ref, *refs, **kw):
 
 
 def flash_decode_fwd(
-    q: jax.Array,      # (B, K, G, D) — one token, group folded into rows
+    q: jax.Array,      # (B, K, q_span * G, D) — row r = token r//G, lane r%G
     k: jax.Array,      # (B, K, T, D) cache — or (P, K, page_size, D) pool
     v: jax.Array,
-    index: jax.Array,  # (B,) int32: new token's position / #cached tokens
+    index: jax.Array,  # (B,) int32: *first* new token's position
     *,
     window: int | None = None,  # linear caches only; ring passes None
     softcap: float | None = None,
@@ -260,6 +284,7 @@ def flash_decode_fwd(
     interpret: bool = False,
     tables: jax.Array | None = None,  # (B, num_blocks) int32 page table
     kv_len: int | None = None,        # logical cache length (paged only)
+    q_span: int = 1,   # stacked q tokens (draft block / q_offset suffix)
 ) -> jax.Array:
     """One decode step.  Streams ceil((hi-lo)) live KV blocks per (b, kv
     head); with `pruned=False` every block streams (the dense baseline).
@@ -267,8 +292,17 @@ def flash_decode_fwd(
     With `tables`, K/V are one shared page pool (P, K, page_size, D) and
     each request's logical blocks resolve through its block-table row; the
     logical cache length must then come in as `kv_len` (the pool carries no
-    per-request extent)."""
-    B, K, G, D = q.shape
+    per-request extent).
+
+    With `q_span` > 1 the q operand stacks q_span tokens' folded groups
+    (rows ordered token-major: row r = token r // G), `index` is the first
+    token's position, and token s attends through slot index + s — the
+    widened-q / q_offset variant used by speculative verify and by
+    suffix-over-prefix paged prefill."""
+    B, K, R, D = q.shape
+    if R % q_span:
+        raise ValueError(f"q rows {R} not divisible by q_span={q_span}")
+    G = R // q_span
     paged = tables is not None
     if paged:
         if kv_len is None:
@@ -289,11 +323,11 @@ def flash_decode_fwd(
         T = k.shape[2]
         block_kv = min(block_kv, max(T, 1))
 
-    # TPU sublane tiling wants >= 8 q rows; pad the folded group (the padded
+    # TPU sublane tiling wants >= 8 q rows; pad the folded rows (the padded
     # rows compute garbage that is sliced off — rows are softmax-independent).
-    Gp = max(8, G) if not interpret else G
-    if Gp != G:
-        q = jnp.pad(q, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    Rp = max(8, R) if not interpret else R
+    if Rp != R:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Rp - R), (0, 0)))
 
     if not paged:
         # Ragged cache length: zero-pad KV to a block multiple; `kp < live`
@@ -311,11 +345,11 @@ def flash_decode_fwd(
     # more than decode_steps_for blocks (ceil((W-1)/bkv)+1 under a window),
     # so the grid itself shrinks — the same trick as the prefill kernel's
     # kv_steps_for.  The per-index interval [lo, hi) then elides within it.
-    steps = decode_steps_for(T, block_kv, window) if pruned else nk
+    steps = decode_steps_for(T, block_kv, window, q_span) if pruned else nk
 
     def logical_block(b, j, idx_ref):
         if pruned:
-            hi = _dec_hi(idx_ref[b], block_kv, T)
+            hi = _dec_hi(idx_ref[b] + q_span - 1, block_kv, T)
             lo = _dec_lo(idx_ref[b], block_kv, window, hi)
             return jnp.minimum(lo + j, hi - 1)
         return j
@@ -346,30 +380,31 @@ def flash_decode_fwd(
         kernel_fn,
         block_kv=block_kv, kv_len=T, window=window,
         softcap=softcap, scale=1.0 / np.sqrt(D), pruned=pruned,
+        group=G, q_span=q_span,
     )
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=num_prefetch,
         grid=(B, K, steps),
         in_specs=[
-            pl.BlockSpec((1, 1, Gp, D), qo_index),
+            pl.BlockSpec((1, 1, Rp, D), qo_index),
             pl.BlockSpec((1, 1, block_kv, D), kv_index),
             pl.BlockSpec((1, 1, block_kv, D), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, 1, Gp, D), qo_index),
+        out_specs=pl.BlockSpec((1, 1, Rp, D), qo_index),
         scratch_shapes=[
-            pltpu.VMEM((Gp, 1), jnp.float32),
-            pltpu.VMEM((Gp, 1), jnp.float32),
-            pltpu.VMEM((Gp, D), jnp.float32),
+            pltpu.VMEM((Rp, 1), jnp.float32),
+            pltpu.VMEM((Rp, 1), jnp.float32),
+            pltpu.VMEM((Rp, D), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, K, Gp, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, K, Rp, D), q.dtype),
         interpret=interpret,
     )(*operands)
-    return out[:, :, :G, :]
+    return out[:, :, :R, :]
 
 
 def vmem_bytes_dec(
@@ -379,18 +414,19 @@ def vmem_bytes_dec(
     dtype_bytes: int = 2,
     *,
     kv_dtype_bytes: int | None = None,
+    q_span: int = 1,
 ) -> int:
     """Analytic VMEM working set of one decode step — the autotuner's
     capacity constraint for the `block_kv_dec` knob.
 
-    The q/o tiles are (max(8, group) x D) at the Q dtype, K and V blocks at
-    the KV dtype, double-buffered as Pallas pipelines them, plus the fp32
-    scratch (acc + m + l) and the fp32 (group x block_kv) score tile.  The
-    per-request index scalars are noise (4·B bytes in SMEM).
+    The q/o tiles are (max(8, q_span·group) x D) at the Q dtype, K and V
+    blocks at the KV dtype, double-buffered as Pallas pipelines them, plus
+    the fp32 scratch (acc + m + l) and the fp32 (rows x block_kv) score
+    tile.  The per-request index scalars are noise (4·B bytes in SMEM).
     """
     if kv_dtype_bytes is None:
         kv_dtype_bytes = dtype_bytes
-    g = max(8, group)
+    g = max(8, group * q_span)
     qo = 2 * g * head_dim * dtype_bytes                # q in + o out
     kv = 2 * block_kv * head_dim * kv_dtype_bytes      # k + v
     scratch = (g * (head_dim + 2)) * 4                 # fp32 acc + m + l

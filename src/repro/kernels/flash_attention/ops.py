@@ -233,8 +233,29 @@ def paged_gather_kv(pk, pv, tables, kv_len: int):
 
 
 # ---------------------------------------------------------------------------
-# Decode (one token against a cache) — the serving hot path
+# Decode (a small block of new tokens against a cache) — the serving hot path
 # ---------------------------------------------------------------------------
+
+
+def _fold_decode_q(q, K):
+    """Model layout (B, S, H, D) -> widened kernel layout (B, K, S*G, D).
+
+    Heads h = kh*G + g fold into the (K, G) grid/row split the kernel's
+    per-KV-head instances expect; with S > 1 (speculative verify / q_offset
+    suffix) the S tokens stack token-major so row r = token r // G."""
+    B, S, H, D = q.shape
+    G = H // K
+    qt = q.reshape(B, S, K, G, D)
+    qt = jnp.moveaxis(qt, 2, 1)  # (B, K, S, G, D)
+    return qt.reshape(B, K, S * G, D)
+
+
+def _unfold_decode_o(out, B, S, H, D, K):
+    """Inverse of `_fold_decode_q`: (B, K, S*G, D) -> (B, S, H, D)."""
+    G = H // K
+    o = out.reshape(B, K, S, G, D)
+    o = jnp.moveaxis(o, 1, 2)  # (B, S, K, G, D)
+    return o.reshape(B, S, H, D)
 
 
 @functools.partial(
@@ -247,18 +268,13 @@ def _flash_decode_local(q, k, v, index, *, window, softcap, block_kv, pruned,
 
     B, S, H, D = q.shape
     K = k.shape[2]
-    G = H // K
-    # model layout -> kernel layout: heads h = kh*G + g fold into a
-    # (K, G) grid/row split, matching the kernel's per-KV-head instances
-    qt = q.reshape(B, H, D).reshape(B, K, G, D)
-    kt = jnp.swapaxes(k, 1, 2)  # (B, K, T, D)
-    vt = jnp.swapaxes(v, 1, 2)
     out = flash_decode_fwd(
-        qt, kt, vt, index,
+        _fold_decode_q(q, K), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        index,
         window=window, softcap=softcap, block_kv=block_kv,
-        pruned=pruned, interpret=interpret,
+        pruned=pruned, interpret=interpret, q_span=S,
     )
-    return out.reshape(B, 1, H, D)
+    return _unfold_decode_o(out, B, S, H, D, K)
 
 
 @functools.partial(
@@ -272,24 +288,21 @@ def _flash_decode_paged_local(q, k, v, index, tables, *, kv_len, window,
 
     B, S, H, D = q.shape
     K = k.shape[2]  # pool layout (P, page_size, K, D)
-    G = H // K
-    qt = q.reshape(B, H, D).reshape(B, K, G, D)
-    kt = jnp.swapaxes(k, 1, 2)  # (P, K, page_size, D)
-    vt = jnp.swapaxes(v, 1, 2)
     out = flash_decode_fwd(
-        qt, kt, vt, index, tables=tables, kv_len=kv_len,
+        _fold_decode_q(q, K), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        index, tables=tables, kv_len=kv_len,
         window=window, softcap=softcap, block_kv=block_kv,
-        pruned=pruned, interpret=interpret,
+        pruned=pruned, interpret=interpret, q_span=S,
     )
-    return out.reshape(B, 1, H, D)
+    return _unfold_decode_o(out, B, S, H, D, K)
 
 
 def flash_decode(
-    q: jax.Array,        # (B, 1, H, D) — the one new token, post-RoPE
-    k_cache: jax.Array,  # (B, T, K, D) cache *with the new token written*,
+    q: jax.Array,        # (B, S, H, D) — the S >= 1 new tokens, post-RoPE
+    k_cache: jax.Array,  # (B, T, K, D) cache *with the new tokens written*,
                          # or the (P, page_size, K, D) page pool when paged
     v_cache: jax.Array,
-    index: jax.Array,    # () or (B,) int32: the new token's position
+    index: jax.Array,    # () or (B,) int32: the *first* new token's position
     *,
     window: int | None = None,  # linear caches only; ring caches pass None
     softcap: float | None = None,
@@ -311,6 +324,12 @@ def flash_decode(
     sharing is pure table plumbing: rows of several requests may name the
     same physical page and the kernel streams it for each — the body never
     changes, so shared-pool output stays bit-identical to unshared.
+
+    With S > 1 q tokens (the widened-q / q_offset variant) token s attends
+    through cache slot index + s: one kernel launch verifies a whole draft
+    block, or prefills a suffix over a pool-resident shared prefix.  Each q
+    row runs the same online softmax over the same block walk as a
+    single-token call, so S=1 and sequential decode stay bit-identical.
     """
     if interpret is None:
         interpret = _interpret_default()

@@ -255,8 +255,10 @@ class TransformerLM(Module):
         kv_pos = None
         block_tables = None
         if mode == "decode" and cache is not None and "kv_pos" in cache:
-            idx_col = positions[:, -1]
-            kv_pos = cache["kv_pos"].at[jnp.arange(B), idx_col].set(idx_col)
+            # S >= 1 new columns (S > 1: the speculative verify step writes
+            # the whole draft block's positions in one O(B·S) scatter)
+            kv_pos = cache["kv_pos"].at[
+                jnp.arange(B)[:, None], positions].set(positions)
             new_caches["kv_pos"] = kv_pos
         if mode in ("decode", "prefill") and cache is not None \
                 and "block_tables" in cache:

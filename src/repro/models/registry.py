@@ -24,6 +24,28 @@ ARCHS = {
     "rwkv6-3b": "repro.configs.rwkv6_3b",
 }
 
+# Speculative-decoding pairings: target arch -> the small arch that drafts
+# for it.  A pairing is only meaningful when the two models share a token
+# space (same tokenizer/vocab — true for the reduced smoke configs, which
+# all use vocab=512); the draft proposes ids the target verifies in one
+# widened-q decode step, so a vocab mismatch would feed the target
+# out-of-range ids.  Targets absent from this table self-draft (the server
+# uses its own weights — the degenerate pairing with 100% acceptance).
+# Only attention-cache (paged-compatible) archs can draft: the draft runs
+# its own page pool inside serve_continuous.
+DRAFTS = {
+    "qwen2-72b": "gemma-2b",
+    "yi-6b": "gemma-2b",
+    "nemotron-4-340b": "gemma-2b",
+    "grok-1-314b": "yi-6b",
+    "mixtral-8x22b": "yi-6b",
+}
+
+
+def draft_for(name: str) -> str | None:
+    """The registry's draft pairing for `name` (None: self-draft)."""
+    return DRAFTS.get(name)
+
 
 def get_config(name: str) -> ModelConfig:
     if name not in ARCHS:

@@ -477,16 +477,39 @@ class Attention(Module):
             out = self._attend_dense(q, k_new, v_new, positions, ctx, policy)
             return out, new_cache
 
+        total = prefix_len + S  # static
+
+        impl = ctx.impl("attention", "xla")
+        if impl == "pallas" and self._pallas_ok() and ctx.mesh is None:
+            # suffix-q over the pool-resident prefix through the widened-q
+            # decode kernel (the q_offset variant): index = prefix_len puts
+            # suffix token s's causal boundary at slot prefix_len + s, and
+            # the pages stream block-by-block through the table — no
+            # logical-view gather, O(live blocks) HBM traffic.  Same online
+            # fp32 softmax per q row as the prefill kernel the unshared
+            # path runs, so woven-pallas sharing keeps bit-parity.
+            from repro.kernels.flash_attention.ops import flash_decode
+
+            blk = ctx.extra.get("flash_block_kv_dec")  # woven extras win
+            out = flash_decode(
+                q, pk, pv, jnp.full((B,), prefix_len, jnp.int32),
+                window=(self.window if self.mask in ("sliding", "local")
+                        else None),
+                softcap=self.softcap,
+                block_kv=int(blk) if blk is not None else None,
+                pruned=bool(ctx.extra.get("flash_pruned", True)),
+                tables=block_tables, kv_len=total,
+            )
+            return out, new_cache
+
         # suffix queries over the full logical prefix: gather the live
         # slots (shared prefix pages + the suffix just written) through
         # the table and mask from absolute positions.  The gather
         # materializes one layer's (prompt, K, D) logical view at a time —
         # O(live prompt tokens), never O(max_len), and only the suffix was
-        # *computed*; streaming pages block-by-block instead is the
-        # ROADMAP q_offset-kernel follow-on.
+        # *computed*.
         from repro.kernels.flash_attention.ops import paged_gather_kv
 
-        total = prefix_len + S  # static
         k_log, v_log = paged_gather_kv(pk, pv, block_tables, total)
         k_log, v_log, _ = self._maybe_expand_kv(k_log, v_log, ctx)
         kv_pos = jnp.broadcast_to(
@@ -504,11 +527,11 @@ class Attention(Module):
                                 accum_dtype=policy.accum_dtype)
         return out, new_cache
 
-    # -- decode (one token against a cache) ---------------------------------------
+    # -- decode (a block of S >= 1 new tokens against a cache) --------------------
 
     def _decode(self, params, q, x, positions, ctx, policy, cache, kv_pos=None,
                 block_tables=None, skip_write=False):
-        """One new token against a linear, ring, or *paged* cache.
+        """S >= 1 new tokens against a linear, ring, or *paged* cache.
 
         The cache is updated in place (`.at[...].set`, so jit donates the
         buffers) and the attention dispatches through the same impl-weaving
@@ -525,14 +548,25 @@ class Attention(Module):
         bit-identical to the dense layout because the streamed values and
         mask are unchanged.
 
-        Contract: the new token's `positions` must equal `cache["index"]`
-        (the autoregressive invariant — the token is written at that slot).
-        The kernel derives its causal boundary from the index alone, so a
-        caller re-scoring an earlier position against a fuller cache must
-        use the XLA impl, which masks from `positions`/`kv_pos`.
+        S > 1 (the speculative verify step) writes the whole draft block at
+        slots index..index+S-1 and attends it in one widened-q kernel call:
+        token s's causal boundary is slot index + s, so the later draft
+        slots are masked exactly as if they were not yet written — linear
+        and paged caches stay bit-identical to S sequential decodes.  Ring
+        caches are the exception: writing token s *evicts* position
+        index+s-W, which earlier draft tokens can still see, so the ring
+        branch unrolls the S tokens sequentially (same per-token math and
+        eviction order as plain decode — bit-exact by construction, still
+        one compiled step).
+
+        Contract: the first new token's `positions` must equal
+        `cache["index"]` (the autoregressive invariant — tokens are written
+        from that slot).  The kernel derives its causal boundary from the
+        index alone, so a caller re-scoring an earlier position against a
+        fuller cache must use the XLA impl, which masks from
+        `positions`/`kv_pos`.
         """
         assert cache is not None, "decode mode requires a cache"
-        B = q.shape[0]
         k_new = self._proj(params, x, "k", self.kv_heads, policy)
         v_new = self._proj(params, x, "v", self.kv_heads, policy)
         if self.use_rope:
@@ -549,11 +583,31 @@ class Attention(Module):
                              "paged-cache contract — dense caches decode "
                              "normally")
 
+        S = q.shape[1]
+        if "pos" in cache and S > 1:
+            # ring eviction: unroll the draft block token-by-token (see
+            # docstring) — one compiled step, exact sequential semantics
+            outs = []
+            for s in range(S):
+                o, cache = self._decode_written(
+                    q[:, s:s + 1], k_new[:, s:s + 1], v_new[:, s:s + 1],
+                    positions[:, s:s + 1], ctx, policy, cache, None)
+                outs.append(o)
+            return jnp.concatenate(outs, axis=1), cache
+        return self._decode_written(q, k_new, v_new, positions, ctx, policy,
+                                    cache, kv_pos)
+
+    def _decode_written(self, q, k_new, v_new, positions, ctx, policy, cache,
+                        kv_pos):
+        """Write S projected tokens into a dense (linear/ring) cache and
+        attend them — the post-projection body of `_decode`."""
+        B, S = q.shape[0], q.shape[1]
         idx = cache["index"]
         per_req = getattr(idx, "ndim", 0) == 1  # stacked multi-request caches
         ring = "pos" in cache
         bidx = jnp.arange(B)
         if ring:
+            assert S == 1, "ring caches decode one token at a time (unrolled)"
             W = cache["k"].shape[1]
             slot = idx % W
             if per_req:
@@ -571,8 +625,11 @@ class Attention(Module):
         else:
             T = cache["k"].shape[1]
             if per_req:
-                k_all = cache["k"].at[bidx, idx].set(k_new[:, 0])
-                v_all = cache["v"].at[bidx, idx].set(v_new[:, 0])
+                # slots index..index+S-1 per request; OOB slots (cache full)
+                # drop in the scatter, matching the single-token behaviour
+                slots = jnp.reshape(idx, (-1, 1)) + jnp.arange(S)
+                k_all = cache["k"].at[bidx[:, None], slots].set(k_new)
+                v_all = cache["v"].at[bidx[:, None], slots].set(v_new)
             else:
                 k_all = jax.lax.dynamic_update_slice_in_dim(
                     cache["k"], k_new, idx, axis=1)
@@ -582,10 +639,10 @@ class Attention(Module):
                 # fallback for single-layer callers; the model hoists this
                 # into the cache pytree so all layers share one kv_pos
                 arange = jnp.arange(T, dtype=jnp.int32)
-                kv_pos = jnp.where(arange[None] <= jnp.reshape(idx, (-1, 1)),
-                                   arange[None], -1)
+                last = jnp.reshape(idx, (-1, 1)) + (S - 1)
+                kv_pos = jnp.where(arange[None] <= last, arange[None], -1)
                 kv_pos = jnp.broadcast_to(kv_pos, (B, T))
-            new_cache = {"k": k_all, "v": v_all, "index": idx + 1}
+            new_cache = {"k": k_all, "v": v_all, "index": idx + S}
             kernel_window = (
                 self.window if self.mask in ("sliding", "local") else None
             )
@@ -626,7 +683,12 @@ class Attention(Module):
         `skip_write=True` is the *re-score* contract (a full-prompt prefix
         hit): the slot at `index` already holds this token's K/V on a
         shared page, so the step computes logits without mutating the pool
-        — writing would perturb pages other requests still map."""
+        — writing would perturb pages other requests still map.
+
+        S > 1 (speculative verify) writes the draft block at logical slots
+        index..index+S-1 through the table and attends it with the
+        widened-q kernel — linear pools only (ring pools evict on write;
+        the server falls back to plain decode for ring-pool archs)."""
         if block_tables is None:
             raise ValueError("paged caches need block_tables (the model "
                              "hoists cache['block_tables'] to every layer)")
@@ -634,13 +696,17 @@ class Attention(Module):
         if getattr(idx, "ndim", 0) != 1:
             raise ValueError("paged caches are per-request: index must be "
                              f"(B,), got shape {getattr(idx, 'shape', ())}")
-        B = q.shape[0]
+        B, S = q.shape[0], q.shape[1]
         bidx = jnp.arange(B)
         pk, pv = cache["pk"], cache["pv"]
         ps = pk.shape[1]
         ring = "pos" in cache
 
         if ring:
+            if S > 1:
+                raise ValueError("ring pools decode one token at a time "
+                                 "(eviction breaks the widened-q mask); the "
+                                 "server gates speculative to linear pools")
             W = cache["pos"].shape[-1]
             slot = idx % W
             kv_len = W
@@ -665,24 +731,33 @@ class Attention(Module):
             k_all, v_all = pk, pv
             new_cache = {"pk": pk, "pv": pv, "index": idx}
         else:
-            page = block_tables[bidx, slot // ps]
-            off = slot % ps
-            if not ring:
+            if ring:
+                page = block_tables[bidx, slot // ps]
+                off = slot % ps
+            else:
+                slots = slot[:, None] + jnp.arange(S)  # (B, S) logical slots
+                page = block_tables[bidx[:, None], slots // ps]
+                off = slots % ps
                 # past-the-end writes must vanish exactly like the dense
                 # layout's OOB scatter: the table *gather* clamps to the
                 # last live page, so redirect to an OOB page id and let the
                 # scatter drop it instead of corrupting a live slot
-                page = jnp.where(slot < kv_len, page, pk.shape[0])
-            k_all = pk.at[page, off].set(k_new[:, 0])
-            v_all = pv.at[page, off].set(v_new[:, 0])
-            new_cache = {"pk": k_all, "pv": v_all, "index": idx + 1}
+                page = jnp.where(slots < kv_len, page, pk.shape[0])
+            if ring:
+                k_all = pk.at[page, off].set(k_new[:, 0])
+                v_all = pv.at[page, off].set(v_new[:, 0])
+            else:
+                k_all = pk.at[page, off].set(k_new)
+                v_all = pv.at[page, off].set(v_new)
+            new_cache = {"pk": k_all, "pv": v_all, "index": idx + S}
             if ring:
                 pos = cache["pos"].at[bidx, slot].set(idx)
                 new_cache["pos"] = pos
                 kv_pos = pos
         if not ring and kv_pos is None:
             arange = jnp.arange(kv_len, dtype=jnp.int32)
-            kv_pos = jnp.where(arange[None] <= idx[:, None], arange[None], -1)
+            kv_pos = jnp.where(arange[None] <= idx[:, None] + (S - 1),
+                               arange[None], -1)
 
         impl = ctx.impl("attention", "xla")
         if impl == "pallas" and self._pallas_ok() and ctx.mesh is None:

@@ -194,6 +194,24 @@ class PagePool:
                 freed.append(p)
         return freed
 
+    def truncate(self, rid, n_pages: int) -> list[int]:
+        """Misprediction rollback: drop the request's table entries beyond
+        `n_pages`, tail-first.  Each released page is an O(1) refcount
+        decrement — pages hitting zero return to the free list, shared
+        (donor) pages just lose this request's reference and their bytes
+        are never touched or copied.  Returns the pages actually freed."""
+        if n_pages < 0:
+            raise ValueError(f"cannot truncate to {n_pages} pages")
+        table = self.tables[rid]
+        freed = []
+        while len(table) > n_pages:
+            p = table.pop()
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._free.append(p)
+                freed.append(p)
+        return freed
+
     def cow(self, rid, logical: int) -> tuple[int, int] | None:
         """Copy-on-write remap: if the request's `logical` table entry is
         shared (refcount > 1), take a fresh page, point the table at it and
@@ -709,46 +727,49 @@ class PagedCacheManager:
 
     # -- per-step batch composition ---------------------------------------------
 
-    def _cow_for_write(self, rid) -> None:
-        """Split the page the request's next decode token writes if another
-        request still maps it: copy page -> remap table -> (the step then)
-        write.  Runs before the decode step so the scatter lands in the
-        private copy and the shared page is never mutated."""
+    def _cow_for_write(self, rid, tokens: int = 1) -> None:
+        """Split every shared page the request's next `tokens` decode slots
+        would write: copy page -> remap table -> (the step then) writes.
+        Runs before the decode step so the scatter lands in the private
+        copies and shared pages are never mutated."""
         if not self.prefix_sharing or self._ring_pool():
             return
         m = self._meta[rid]
-        slot = m["length"]
+        start = m["length"]
+        stop = start + tokens
         lin = self._linear_len()
-        if lin is not None and slot >= lin:
-            return  # past-the-end write is dropped, nothing to split
-        pidx = slot // self.page_size
+        if lin is not None:
+            stop = min(stop, lin)  # past-the-end writes are dropped
+        if stop <= start:
+            return
         table = self.pool.tables[rid]
-        if pidx >= len(table):
-            return
-        split = self.pool.cow(rid, pidx)
-        if split is None:
-            return
-        old, new = split
-        for name in self._groups:
-            for key in ("pk", "pv"):
-                self._pools[name][key] = _copy_pool_page(
-                    self._pools[name][key], old, new)
-        self.cow_splits += 1
+        for pidx in range(start // self.page_size,
+                          min(cdiv(stop, self.page_size), len(table))):
+            split = self.pool.cow(rid, pidx)
+            if split is None:
+                continue
+            old, new = split
+            for name in self._groups:
+                for key in ("pk", "pv"):
+                    self._pools[name][key] = _copy_pool_page(
+                        self._pools[name][key], old, new)
+            self.cow_splits += 1
 
-    def batch(self, rids: list[Any]) -> dict:
+    def batch(self, rids: list[Any], *, tokens: int = 1) -> dict:
         """Decode cache pytree for this step's active set, in `rids` order.
 
-        Grows each request's tail pages to cover the slot its next token
-        writes — clamped at the reserved `final_len`, so growth can never
-        outrun the admission-time reservation — splits shared pages the
-        step would write (copy-on-write), then stacks the per-request rows
-        around the shared pools.
+        Grows each request's tail pages to cover the `tokens` slots the
+        step writes (tokens > 1: the speculative verify step's draft block)
+        — clamped at the reserved `final_len`, so growth can never outrun
+        the admission-time reservation — splits shared pages the step would
+        write (copy-on-write), then stacks the per-request rows around the
+        shared pools.
         """
         for rid in rids:
             m = self._meta[rid]
-            target = min(m["length"] + 1, m["final_len"])
+            target = min(m["length"] + tokens, m["final_len"])
             self.pool.grow_to(rid, self._slots_needed(target))
-            self._cow_for_write(rid)
+            self._cow_for_write(rid, tokens)
         return self._compose(rids)
 
     def _compose(self, rids: list[Any], *, index_offset: int = 0) -> dict:
@@ -786,9 +807,13 @@ class PagedCacheManager:
             cache["kv_pos"] = jnp.stack(rows, axis=0)
         return cache
 
-    def absorb(self, rids: list[Any], new_cache: dict) -> None:
+    def absorb(self, rids: list[Any], new_cache: dict, *,
+               advance: int = 1) -> None:
         """Store one decode step's outputs back: pools are shared (one
-        assignment), per-request rows split on their batch axis."""
+        assignment), per-request rows split on their batch axis.  A
+        speculative verify step passes `advance` = its q span so lengths
+        provisionally cover the whole draft block (rollback() then trims
+        rejected tokens)."""
         for name, info in self._groups.items():
             group = new_cache[name]
             self._pools[name] = {"pk": group["pk"], "pv": group["pv"]}
@@ -801,7 +826,37 @@ class PagedCacheManager:
             for i, rid in enumerate(rids):
                 self._meta[rid]["kv_pos"] = new_cache["kv_pos"][i]
         for rid in rids:
-            self._meta[rid]["length"] += 1
+            self._meta[rid]["length"] += advance
+
+    def rollback(self, rid, new_length: int) -> list[int]:
+        """Speculative-misprediction rollback: shrink the request to
+        `new_length` live tokens in O(1) pool operations per tail page.
+
+        Table entries past the slots `new_length` needs are released
+        tail-first (refcount decrement — donor pages shared with other
+        requests just lose this reference, their bytes are never touched
+        or copied), freed pages are purged from the prefix index, and the
+        hoisted `kv_pos` map is rewound so stale draft slots mask dead.
+        The over-written K/V bytes in still-held pages are left in place:
+        they sit past the live boundary, so attention never reads them and
+        the next decode step overwrites them.  CoW splits performed for
+        the rejected write are *not* undone — the private copy holds the
+        request's valid prefix slots.  Returns the pages actually freed.
+        """
+        m = self._meta[rid]
+        if new_length < 0 or new_length > m["length"]:
+            raise ValueError(
+                f"rollback({rid!r}) to {new_length} outside [0, "
+                f"{m['length']}]")
+        m["length"] = new_length
+        freed = self.pool.truncate(rid, self._slots_needed(new_length))
+        if freed:
+            self._purge_keys(freed)
+        if "kv_pos" in m:
+            kvp = m["kv_pos"]
+            ar = jnp.arange(kvp.shape[-1], dtype=jnp.int32)
+            m["kv_pos"] = jnp.where(ar < new_length, kvp, -1)
+        return freed
 
     # -- introspection -----------------------------------------------------------
 

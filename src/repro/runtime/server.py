@@ -43,14 +43,22 @@ class ServerConfig:
     pool_pages: int | None = None  # None: sized for full concurrency
     max_batch: int | None = None   # decode-batch cap (admission gate)
     prefix_sharing: bool = True    # map common prompt prefixes onto shared pages
+    # speculative decoding (serve_continuous): tokens the draft model
+    # proposes per verify round; None/0 falls back to the woven
+    # "speculative_draft_len" knob, then to plain one-token decode
+    draft_len: int | None = None
 
 
 class Server:
     def __init__(self, woven: WovenProgram, cfg: ServerConfig, *, mesh=None,
                  margot=None, broker: ExamonBroker | None = None,
-                 memo: MemoTable | None = None):
+                 memo: MemoTable | None = None, draft: "Server | None" = None):
         self.woven = woven
         self.cfg = cfg
+        # draft server for speculative decoding (registry `draft_for`
+        # pairing, or any Server over the same vocab); None self-drafts
+        # when a draft_len is requested
+        self.draft = draft
         self.mesh = mesh
         self.margot = margot
         self.broker = broker or get_default_broker()
@@ -112,6 +120,8 @@ class Server:
         self._paged_sig = None  # last paged-decode signature served
         self._paged_dtype = None
         self.last_pool_stats: dict[str, Any] | None = None  # serve_continuous
+        self.last_spec_stats: dict[str, Any] | None = None  # speculative serve
+        self._verify_steps: dict[tuple, Callable] = {}  # (variant, S) -> fn
 
     def _variant(self) -> str | None:
         if self.margot is None:
@@ -299,12 +309,30 @@ class Server:
             manager.admit_finish(rid, new_cache, toks_np)
         return int(jnp.argmax(logits[0, -1], axis=-1))
 
+    def _verify_step(self, variant, draft_len: int) -> Callable:
+        """Compiled widened-q verify step (S = draft_len + 1 q tokens per
+        request), cached per (variant, draft_len); the cache is donated
+        exactly like the plain decode step (manager.absorb rebinds)."""
+        from repro.runtime.steps import build_verify_step
+
+        key = (variant, draft_len)
+        fn = self._verify_steps.get(key)
+        if fn is None:
+            v = None if variant in (None, "__default__") else variant
+            fn = jax.jit(build_verify_step(self.woven, mesh=self.mesh,
+                                           variant=v, draft_len=draft_len),
+                         donate_argnums=(2,))
+            self._verify_steps[key] = fn
+        return fn
+
     def serve_continuous(self, prompts: list[np.ndarray], *,
                          decode_tokens: int | None = None,
                          page_size: int | None = None,
                          pool_pages: int | None = None,
                          max_batch: int | None = None,
-                         prefix_sharing: bool | None = None) -> list[np.ndarray]:
+                         prefix_sharing: bool | None = None,
+                         draft_len: int | None = None,
+                         draft: "Server | None" = None) -> list[np.ndarray]:
         """Continuous batching over a prefix-shared paged KV-cache pool.
 
         Unlike `serve_batch` — which prefils everything up front, pads
@@ -327,12 +355,28 @@ class Server:
         hold exactly the bytes an exclusive prefill would have written).
         Requires a cache family the pool can host (attention KV caches);
         SSM / recurrent state models raise — use `serve_batch`.
+
+        Speculative decoding (`draft_len` = k > 0, explicit, from
+        ServerConfig, or from the woven "speculative_draft_len" knob): a
+        draft model (`draft`, the constructor's pairing, or this server
+        itself) proposes k greedy tokens per round from its own page pool,
+        and the target scores all k+1 positions in ONE widened-q verify
+        step; the longest draft prefix matching the target's own argmax
+        chain is accepted, the rejected tail rolls back via O(1)
+        refcount truncation (no page copies).  Every emitted token is a
+        target argmax, so the output is bit-identical to plain greedy —
+        the draft only changes how many target steps it takes.  Ring
+        pools fall back to plain decode (eviction breaks the widened
+        mask); acceptance stats land in `last_spec_stats`.
         """
         if not prompts:
             return []
         n = decode_tokens or self.cfg.decode_tokens
+        k = draft_len if draft_len is not None else self.cfg.draft_len
         key = ("serve_continuous",
                tuple(np.asarray(p).tobytes() for p in prompts), n)
+        if k:  # spec serves memoize separately (same tokens, different stats)
+            key = key + (int(k),)
         if self.memo is not None and self.memo.running:
             hit, out = self.memo.lookup(key)
             if hit:
@@ -346,6 +390,7 @@ class Server:
                 self._paged_sig = None
                 self._paged_dtype = None
                 self.last_pool_stats = None
+                self.last_spec_stats = None
                 return out
         t0 = time.perf_counter()
         variant = self._variant()
@@ -355,8 +400,15 @@ class Server:
         state.extra["cache_max_len"] = self.cfg.max_cache_len
         ps = page_size or self._page_size(state)
 
+        if k is None:
+            k = int(state.extra.get("speculative_draft_len", 0) or 0)
+        k = max(0, int(k))
+
         lengths = [int(np.asarray(p).reshape(-1).shape[0]) for p in prompts]
-        finals = [min(S + n - 1, self.cfg.max_cache_len) for S in lengths]
+        # speculative verify steps write up to k slots past the accepted
+        # length before rolling back — reserve that slack at admission so
+        # draft-block writes can never outrun the block table
+        finals = [min(S + n - 1 + k, self.cfg.max_cache_len) for S in lengths]
         max_batch = max_batch or self.cfg.max_batch or len(prompts)
         pool_pages = pool_pages or self.cfg.pool_pages \
             or max(sum(cdiv(f, ps) for f in finals), 1)
@@ -370,15 +422,6 @@ class Server:
             # the donor still maps.  Prefix sharing stays off; the
             # direct-to-pool paged prefill still applies.
             share = False
-        if share and any(kind == "attention" and impl == "pallas"
-                         for _, kind, impl in state.impls):
-            # The suffix-over-prefix attention runs the XLA path (the
-            # flash kernel's causal mask assumes q_pos == kv_pos), so a
-            # pallas-woven prefill would break shared == unshared
-            # bit-parity.  Sharing stays off until the q_offset kernel
-            # variant lands (ROADMAP); paged prefill itself is unaffected
-            # (prefix-free admissions dispatch through the woven impl).
-            share = False
         manager = PagedCacheManager(
             pool_pages, ps, max_len=self.cfg.max_cache_len,
             window=getattr(self.woven.program.cfg, "attn_window", None),
@@ -390,25 +433,82 @@ class Server:
         self.decode_step_latencies = []
         self._step_lat_by_batch = {}
 
-        waiting = deque(range(len(prompts)))  # FIFO arrival order
+        if k and self.woven.program.cfg.family == "moe":
+            # Capacity-routed MoE couples tokens within a group: a verify
+            # step's S-token router sees different capacity/drop decisions
+            # than S sequential one-token steps, so verify logits would
+            # not be bit-identical to plain decode.  Speculation stays off.
+            k = 0
+        draft_srv = draft or self.draft or self  # self-speculation default
+        dmanager: PagedCacheManager | None = None
+        if k:
+            # the draft keeps its own (unshared) page pool with the same
+            # continuous-batching dynamics; sized for full concurrency so
+            # a draft admission can never fail behind a target admission
+            dstate = draft_srv.woven.variant_state(None)
+            dstate.extra["cache_max_len"] = self.cfg.max_cache_len
+            dmanager = PagedCacheManager(
+                max(sum(cdiv(f, ps) for f in finals), 1), ps,
+                max_len=self.cfg.max_cache_len,
+                window=getattr(draft_srv.woven.program.cfg,
+                               "attn_window", None),
+                prefix_sharing=False,
+            )
+
+        waiting = deque(range(len(prompts)))  # arrival order
         active: dict[int, dict] = {}          # rid -> {"tok", "pos"}
         outputs: dict[int, list[int]] = {}
         seen_batches: set[int] = set()        # batch sizes already compiled
+        spec = {"on": False, "checked": False}
+        verify_lats: list[float] = []
+        stats = {"draft_len": k, "rounds": 0, "request_rounds": 0,
+                 "proposed": 0, "accepted": 0, "emitted_spec": 0,
+                 "draft_steps": 0, "verify_steps": 0, "decode_steps": 0}
+
+        def admit_one(rid) -> None:
+            tok = self._paged_admit(manager, rid, prompts[rid],
+                                    finals[rid], variant)
+            outputs[rid] = [tok]
+            active[rid] = {"tok": tok, "pos": lengths[rid]}
+            if not spec["checked"]:
+                # pool family is known after the first admission: ring
+                # pools evict on write, which breaks the widened-q verify
+                # mask — the server gates speculation to linear pools
+                spec["checked"] = True
+                spec["on"] = bool(k) and not manager._ring_pool()
+            if spec["on"]:
+                # draft admits in lockstep (its length must equal the
+                # target's accepted length at every round start)
+                draft_srv._paged_admit(dmanager, rid, prompts[rid],
+                                       finals[rid], None)
 
         def admit_ready() -> None:
             while waiting and len(active) < max_batch:
-                rid = waiting[0]
-                # capacity-checked for the very first admission too: an
-                # oversized request is rejected *before* its prefill runs,
-                # landing on the clean "page pool too small" path below
-                # instead of a raw PoolExhausted out of pool.alloc
-                if not manager.can_admit(finals[rid], tokens=prompts[rid]):
-                    return
-                tok = self._paged_admit(manager, rid, prompts[rid],
-                                        finals[rid], variant)
-                outputs[rid] = [tok]
-                active[rid] = {"tok": tok, "pos": lengths[rid]}
-                waiting.popleft()
+                rid = None
+                if manager.prefix_sharing and len(waiting) > 1:
+                    # prefix-aware admission: a sharer queued behind a
+                    # non-sharer jumps the line while its donor's pages
+                    # are still live — the shared prefix costs it no fresh
+                    # pages, so it can fit where the queue head cannot
+                    # (and the hit is lost once the donor retires)
+                    for cand in waiting:
+                        toks_np = np.asarray(prompts[cand],
+                                             np.int64).reshape(-1)
+                        _, sl = manager.match_prefix(toks_np)
+                        if sl > 0 and manager.can_admit(
+                                finals[cand], tokens=prompts[cand]):
+                            rid = cand
+                            break
+                if rid is None:
+                    rid = waiting[0]
+                    # capacity-checked for the very first admission too: an
+                    # oversized request is rejected *before* its prefill
+                    # runs, landing on the clean "page pool too small" path
+                    # below instead of a raw PoolExhausted out of pool.alloc
+                    if not manager.can_admit(finals[rid], tokens=prompts[rid]):
+                        return
+                admit_one(rid)
+                waiting.remove(rid)
 
         admit_ready()
         while active or waiting:
@@ -416,6 +516,8 @@ class Server:
             done = [r for r in active if len(outputs[r]) >= n]
             for rid in done:
                 manager.retire(rid)
+                if spec["on"]:
+                    dmanager.retire(rid)
                 del active[rid]
             if done:
                 admit_ready()
@@ -427,31 +529,113 @@ class Server:
                 break
 
             rids = list(active)
-            cache = manager.batch(rids)
-            tok = jnp.asarray([[active[r]["tok"]] for r in rids], jnp.int32)
-            pos = jnp.asarray([[active[r]["pos"]] for r in rids], jnp.int32)
-            ts = time.perf_counter()
-            logits, new_cache = self.decode_vc(
-                variant, self.params,
-                {"tokens": tok, "positions": pos}, cache,
-            )
-            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int64)
-            # first step at each batch size pays jit tracing — excluding it
-            # keeps the tuner-feedback observations compile-free (the DSE
-            # expectations were measured post-compile too)
-            if len(rids) in seen_batches:
-                dt_step = time.perf_counter() - ts
-                self.decode_step_latencies.append(dt_step)
-                self._step_lat_by_batch.setdefault(
-                    len(rids), []).append(dt_step)
-            seen_batches.add(len(rids))
-            manager.absorb(rids, new_cache)
-            for i, rid in enumerate(rids):
-                outputs[rid].append(int(nxt[i]))
-                active[rid]["tok"] = int(nxt[i])
-                active[rid]["pos"] += 1
+            # a verify round writes k+1 slots per request; past the
+            # final_len clamp (cache capacity) fall back to plain rounds —
+            # S stays in {1, k+1} so only two step shapes ever compile
+            S = k + 1 if (spec["on"] and all(
+                active[r]["pos"] + k + 1 <= finals[r] for r in rids)) else 1
+
+            if S > 1:
+                pos0 = {r: active[r]["pos"] for r in rids}
+                fed = np.zeros((len(rids), S), np.int64)
+                fed[:, 0] = [active[r]["tok"] for r in rids]
+                # draft proposes k greedy tokens; the final iteration is a
+                # write-only catch-up (its KV for slot pos+k is needed when
+                # every draft token is accepted), its proposal is unused
+                for s in range(S):
+                    dcache = dmanager.batch(rids)
+                    dpos = jnp.asarray([[pos0[r] + s] for r in rids],
+                                       jnp.int32)
+                    dlogits, dnew = draft_srv.decode_vc(
+                        None, draft_srv.params,
+                        {"tokens": jnp.asarray(fed[:, s:s + 1], jnp.int32),
+                         "positions": dpos},
+                        dcache)
+                    dmanager.absorb(rids, dnew)
+                    stats["draft_steps"] += 1
+                    if s < S - 1:
+                        fed[:, s + 1] = np.asarray(
+                            jnp.argmax(dlogits[:, -1], axis=-1), np.int64)
+                # ONE widened-q target step scores all S draft positions
+                cache = manager.batch(rids, tokens=S)
+                vpos = jnp.asarray(
+                    [[pos0[r] + s for s in range(S)] for r in rids],
+                    jnp.int32)
+                ts = time.perf_counter()
+                logits, new_cache = self._verify_step(variant, k)(
+                    self.params,
+                    {"tokens": jnp.asarray(fed, jnp.int32),
+                     "positions": vpos},
+                    cache)
+                targ = np.asarray(jnp.argmax(logits, axis=-1), np.int64)
+                if stats["verify_steps"]:  # skip the jit-tracing first step
+                    verify_lats.append(time.perf_counter() - ts)
+                manager.absorb(rids, new_cache, advance=S)
+                stats["verify_steps"] += 1
+                stats["rounds"] += 1
+                stats["request_rounds"] += len(rids)
+                for i, rid in enumerate(rids):
+                    # accept the longest draft prefix matching the
+                    # target's own argmax chain, plus the correction
+                    # token — every emitted token is a target argmax,
+                    # so greedy output is bit-identical to plain decode
+                    a = 0
+                    while a < k and fed[i, a + 1] == targ[i, a]:
+                        a += 1
+                    e = min(a + 1, n - len(outputs[rid]))
+                    outputs[rid].extend(int(t) for t in targ[i, :e])
+                    new_len = pos0[rid] + e
+                    # rejected tail: O(1) refcount rollback, no page copies
+                    manager.rollback(rid, new_len)
+                    dmanager.rollback(rid, new_len)
+                    active[rid]["tok"] = int(targ[i, e - 1])
+                    active[rid]["pos"] = new_len
+                    stats["proposed"] += k
+                    stats["accepted"] += a
+                    stats["emitted_spec"] += e
+            else:
+                cache = manager.batch(rids)
+                tok = jnp.asarray([[active[r]["tok"]] for r in rids],
+                                  jnp.int32)
+                pos = jnp.asarray([[active[r]["pos"]] for r in rids],
+                                  jnp.int32)
+                ts = time.perf_counter()
+                logits, new_cache = self.decode_vc(
+                    variant, self.params,
+                    {"tokens": tok, "positions": pos}, cache,
+                )
+                nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int64)
+                # first step at each batch size pays jit tracing —
+                # excluding it keeps the tuner-feedback observations
+                # compile-free (the DSE expectations were measured
+                # post-compile too)
+                if len(rids) in seen_batches:
+                    dt_step = time.perf_counter() - ts
+                    self.decode_step_latencies.append(dt_step)
+                    self._step_lat_by_batch.setdefault(
+                        len(rids), []).append(dt_step)
+                seen_batches.add(len(rids))
+                manager.absorb(rids, new_cache)
+                stats["decode_steps"] += 1
+                for i, rid in enumerate(rids):
+                    outputs[rid].append(int(nxt[i]))
+                    active[rid]["tok"] = int(nxt[i])
+                    active[rid]["pos"] += 1
 
         self.last_pool_stats = manager.stats()
+        if k:
+            p = stats["proposed"]
+            stats["acceptance"] = stats["accepted"] / p if p else 0.0
+            stats["mean_tokens_per_verify"] = (
+                stats["emitted_spec"] / stats["request_rounds"]
+                if stats["request_rounds"] else 0.0)
+            stats["target_steps"] = (stats["verify_steps"]
+                                     + stats["decode_steps"])
+            stats["verify_latency_s"] = (
+                float(np.mean(verify_lats)) if verify_lats else None)
+            self.last_spec_stats = stats
+        else:
+            self.last_spec_stats = None
         self._paged_dtype = next(iter(manager._groups.values()))["dtype"]
         self._paged_sig = self._paged_signature(
             batch=min(max_batch, len(prompts)), dtype=self._paged_dtype)
@@ -506,4 +690,40 @@ class Server:
             sig, {"latency_s": observed},
             tuner=tuner, latency_budget=latency_budget,
             objective_knob="page_size",
+        )
+
+    def refine_speculative(self, *, latency_budget: float,
+                           tuner=None) -> dict | None:
+        """Feed the observed draft acceptance back into the persistent
+        speculative-space entry: the served `mean_tokens_per_verify`
+        (acceptance x draft_len + 1) rescales the cached acceptance-1
+        `tokens_per_step` priors and the verify-step latency rescales the
+        latency expectations, then the `draft_len` knob is re-selected
+        under the adjusted budget.  Returns the re-selected knobs (None
+        when the last serve was not speculative or never tuned)."""
+        from repro.autotune.kernel_tuner import (
+            refine_from_runtime,
+            speculative_signature,
+        )
+
+        stats = self.last_spec_stats
+        if not stats or not stats.get("verify_steps"):
+            return None
+        cfg = self.woven.program.cfg
+        cache_len = self.cfg.max_cache_len
+        window = getattr(cfg, "attn_window", None)
+        if window is not None and window < cache_len:
+            cache_len, window = window, None  # ring layout
+        batch = max(1, round(stats["request_rounds"] / max(stats["rounds"], 1)))
+        sig = speculative_signature(
+            batch, cache_len, cfg.n_heads, cfg.kv_heads,
+            cfg.resolved_head_dim, self._paged_dtype or "bfloat16",
+            window=window,
+        )
+        observed = {"tokens_per_step": float(stats["mean_tokens_per_verify"])}
+        if stats.get("verify_latency_s"):
+            observed["latency_s"] = float(stats["verify_latency_s"])
+        return refine_from_runtime(
+            sig, observed, tuner=tuner, latency_budget=latency_budget,
+            objective_knob="draft_len",
         )

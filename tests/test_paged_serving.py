@@ -545,11 +545,12 @@ class TestPrefixSharing:
         assert stats["prefix_hits"] >= 2
         assert stats["peak_live_pages"] < stats["peak_mapped_pages"]
 
-    def test_pallas_weave_disables_sharing(self):
-        """A pallas-woven attention impl turns prefix sharing off: the
-        suffix-over-prefix attention runs the XLA path, so sharing under a
-        flash prefill would break the shared == unshared bit-parity
-        guarantee.  Serving itself must still match the batch path."""
+    def test_pallas_weave_keeps_sharing_with_parity(self):
+        """Flipped from the PR 5 disable-guard: the widened-q (q_offset)
+        flash_decode kernel now serves the suffix-over-prefix prefill, so
+        a pallas-woven attention impl keeps prefix sharing ON — shared
+        serving stays bit-identical to the batch path and the donor's
+        prefix pages are mapped, not copied."""
         from repro.configs.base import SHAPES
         from repro.core.program import Program
         from repro.core.strategies.kernels import KernelAspect
@@ -565,7 +566,30 @@ class TestPrefixSharing:
         cont = srv.serve_continuous(SHARED_PROMPTS, page_size=8)
         for b, c in zip(batched, cont):
             np.testing.assert_array_equal(b, c)
-        assert srv.last_pool_stats["prefix_hits"] == 0
+        stats = srv.last_pool_stats
+        assert stats["prefix_hits"] >= 2  # the 16-token prefix: two pages
+        assert stats["peak_live_pages"] < stats["peak_mapped_pages"]
+
+    def test_sharer_jumps_queue_behind_blocked_nonsharer(self):
+        """Prefix-aware admission: a sharer queued behind a non-sharer
+        that cannot fit gets admitted while its donor's pages are still
+        live — the shared prefix costs it no fresh pages — and maps the
+        donor's prefix pages; outputs still match the batch path."""
+        donor = np.concatenate([BASE16, np.array([21, 22, 23], np.int32)])
+        blocker = (np.arange(19) % 37 + 60).astype(np.int32)  # no prefix
+        sharer = np.concatenate([BASE16, np.array([31, 32], np.int32)])
+        pr = [donor, blocker, sharer]
+        srv = _server("yi-6b")
+        batched = srv.serve_batch(pr)
+        # donor needs 3 pages; 5-page pool leaves 2 free: the blocker's 3
+        # fresh pages don't fit, the sharer's 1 fresh page (2 shared) does
+        cont = srv.serve_continuous(pr, page_size=8, pool_pages=5)
+        for b, c in zip(batched, cont):
+            np.testing.assert_array_equal(b, c)
+        # FIFO would stall until the donor retires and share nothing —
+        # the hits are the witness that the sharer jumped the queue while
+        # the donor still held its pages
+        assert srv.last_pool_stats["prefix_hits"] >= 2
 
     def test_moe_family_keeps_sharing_off_and_matches(self):
         """grok (MoE + softcap + GQA): the scheduler must not share prefix
