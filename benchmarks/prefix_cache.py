@@ -98,6 +98,12 @@ def run(artifacts: str, *, quick: bool = False) -> list[str]:
     assert stats_shared["peak_mapped_pages"] == pages_unshared_expect
     assert stats_shared["prefix_hits"] >= (n_req - 1) * prefix_pages
     assert stats_unshared["prefix_hits"] == 0
+    # manager-reported pool bytes (dtype-aware, sidecars included) agree
+    # with the page economics above
+    assert stats_shared["peak_pool_hbm_bytes"] == (
+        stats_shared["peak_live_pages"] * stats_shared["page_hbm_bytes"])
+    assert stats_unshared["peak_pool_hbm_bytes"] == (
+        stats_unshared["peak_live_pages"] * stats_unshared["page_hbm_bytes"])
 
     # -- prefill-transient: direct-to-pool vs the old dense packing -----------
     # the dense path is *measurably* gone: every admission above went
@@ -138,6 +144,15 @@ def run(artifacts: str, *, quick: bool = False) -> list[str]:
                            / stats_unshared["peak_live_pages"]),
             "prefix_hits": stats_shared["prefix_hits"],
             "cow_splits": stats_shared["cow_splits"],
+        },
+        # dtype-aware pool bytes straight from PagedCacheManager.stats()
+        # (payload dtype + any quantization scale sidecars) — the manager
+        # is the single source of truth, never recomputed here
+        "pool_hbm": {
+            "peak_shared_bytes": stats_shared["peak_pool_hbm_bytes"],
+            "peak_unshared_bytes": stats_unshared["peak_pool_hbm_bytes"],
+            "page_bytes": stats_shared["page_hbm_bytes"],
+            "cache_dtype": stats_shared["cache_dtype"],
         },
         "prefill_transient_kv": {
             "dense_max_len_path": dense_transient,

@@ -1,0 +1,201 @@
+"""Quantized paged KV-cache bench (the PR 7 perf data point).
+
+The pool stores K/V at a narrow dtype (int8 first; fp8 where the jax
+build has it) with fp32 per-page-per-head scale sidecars, dequantized
+inside the flash_decode inner loop.  Three claims, asserted here and
+in CI:
+
+  pool HBM        on the mixed 64/512/4096 serving batch, the int8 pool
+                  allocates <= 0.55x the fp16 pool's bytes (>= 1.8x
+                  capacity) — measured through `PagedCacheManager.stats()`
+                  (payload + sidecars), never recomputed by hand
+  logits error    the quantized paged flash_decode output deviates from
+                  the fp pool by at most ERR_BOUND max-abs — the mARGOt
+                  error-model ground truth the serving path exposes
+  dtype DSE       `tune_quantized_cache` persists the full
+                  cache_dtype x page_size x block_kv_dec operating-point
+                  set with the measured error column; tightening the
+                  accuracy budget via `select_cache_knobs` (no
+                  re-measurement) forces the fp fallback arm, re-loosening
+                  restores the quantized pick
+
+Merges a `quantized_cache` section into artifacts/bench/BENCH_kernels.json;
+runnable standalone via `benchmarks/run.py --only quantized_cache`.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.autotune.kernel_tuner import (
+    KernelTuner,
+    quantized_cache_signature,
+    select_cache_knobs,
+    tune_quantized_cache,
+)
+from repro.kernels.flash_attention.decode import page_block_kv
+from repro.kernels.flash_attention.ops import CACHE_QMAX, flash_decode
+from repro.runtime.pages import (
+    PagedCacheManager,
+    build_linear_pool,
+    quantize_linear_pool,
+)
+
+LENGTHS = (64, 512, 4096)  # one batch, wildly mixed request lengths
+MAX_LEN = 4096
+PAGE_SIZE = 256
+BLOCK_KV = 256
+ERR_BOUND = 0.05  # the accuracy goal CI holds the measured error to
+
+
+def _time(fn, reps=2):
+    out = jax.block_until_ready(fn())  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps, out
+
+
+def _pool_stats(k_list, v_list, cache_dtype):
+    """Admit the mixed batch into a manager and return its stats():
+    the dtype-aware byte accounting the bench (and CI) consume."""
+    need = sum((l + PAGE_SIZE - 1) // PAGE_SIZE
+               for l in (k.shape[0] for k in k_list))
+    mgr = PagedCacheManager(need, PAGE_SIZE, max_len=MAX_LEN,
+                            cache_dtype=cache_dtype)
+    for i, (k, v) in enumerate(zip(k_list, v_list)):
+        L = k.shape[0]
+        pad = ((0, MAX_LEN - L), (0, 0), (0, 0))
+        cache = {"layers": {
+            "k": jnp.pad(k, pad)[None],
+            "v": jnp.pad(v, pad)[None],
+            "index": jnp.full((1,), L, jnp.int32),
+        }}
+        mgr.admit(i, cache, final_len=L)
+    return mgr.stats()
+
+
+def run(artifacts: str, *, quick: bool = False) -> list[str]:
+    rows: list[str] = []
+    B = len(LENGTHS)
+    H, K, D = (4, 2, 64) if quick else (8, 2, 64)
+    reps = 1 if quick else 2
+
+    ks = jax.random.split(jax.random.PRNGKey(29), 1 + 2 * B)
+    q = jax.random.normal(ks[0], (B, 1, H, D), jnp.float32)
+    k_list = [jax.random.normal(ks[1 + i], (L, K, D),
+                                jnp.float16) for i, L in enumerate(LENGTHS)]
+    v_list = [jax.random.normal(ks[1 + B + i], (L, K, D),
+                                jnp.float16) for i, L in enumerate(LENGTHS)]
+    index = jnp.asarray([L - 1 for L in LENGTHS], jnp.int32)
+
+    # -- pool HBM: int8 (+ scale sidecars) vs the fp16 pool, both reported
+    # by PagedCacheManager.stats() — the single source of byte truth
+    stats_fp = _pool_stats(k_list, v_list, None)
+    stats_q = _pool_stats(k_list, v_list, "int8")
+    assert stats_fp["cache_dtype"] is None
+    assert stats_q["cache_dtype"] == "int8"
+    assert stats_q["live_pages"] == stats_fp["live_pages"]
+    hbm_fp = stats_fp["pool_hbm_bytes"]
+    hbm_q = stats_q["pool_hbm_bytes"]
+    hbm_ratio = hbm_q / hbm_fp
+    # the acceptance bounds: int8 + fp32 sidecars stays under 0.55x fp16,
+    # i.e. >= 1.8x more tokens per HBM byte
+    assert hbm_ratio <= 0.55, (hbm_q, hbm_fp)
+    assert hbm_fp / hbm_q >= 1.8
+
+    # -- logits error + latency: paged flash_decode over the same mixed
+    # batch, quantized pool (in-kernel dequant) vs the fp pool
+    pk, pv, tables, _pool = build_linear_pool(k_list, v_list, PAGE_SIZE,
+                                              max_len=MAX_LEN)
+    bkv = page_block_kv(BLOCK_KV, PAGE_SIZE)
+    qpk, qpv, ksc, vsc = quantize_linear_pool(pk, pv, "int8")
+
+    t_fp, out_fp = _time(
+        lambda: flash_decode(q, pk, pv, index, tables=tables,
+                             kv_len=MAX_LEN, block_kv=bkv), reps)
+    t_q, out_q = _time(
+        lambda: flash_decode(q, qpk, qpv, index, tables=tables,
+                             kv_len=MAX_LEN, block_kv=bkv,
+                             k_scale=ksc, v_scale=vsc), reps)
+    max_logit_err = float(jnp.max(jnp.abs(
+        out_q.astype(jnp.float32) - out_fp.astype(jnp.float32))))
+    assert max_logit_err <= ERR_BOUND, max_logit_err
+
+    # -- dtype x geometry DSE: persist all rows (with the error column),
+    # then re-select under a tightened accuracy budget without re-measuring
+    T_dse = 128 if quick else 256
+    tuner = KernelTuner(os.path.join(artifacts,
+                                     "TUNER_quantized_cache.json"))
+    sig = quantized_cache_signature(2, T_dse, H, K, D, "float32")
+    tuned = tune_quantized_cache(sig, error_budget=ERR_BOUND, tuner=tuner)
+    entry = tuner.cache.get(tuner._key(sig))
+    dse_rows = len(entry["ops"])
+    errs = {}
+    for op in entry["ops"]:
+        name = str(op["knobs"]["cache_dtype"])
+        err = op["metrics"]["max_logit_err"][0]
+        errs[name] = max(errs.get(name, 0.0), err)
+    tight = select_cache_knobs(sig, error_budget=1e-9, tuner=tuner)
+    assert tight["cache_dtype"] not in CACHE_QMAX, tight  # fp fallback
+    reselected = select_cache_knobs(sig, error_budget=ERR_BOUND, tuner=tuner)
+    assert reselected["cache_dtype"] == tuned["cache_dtype"]
+
+    section = {
+        "config": {
+            "lengths": list(LENGTHS),
+            "max_len": MAX_LEN,
+            "batch": B,
+            "heads": [H, K],
+            "head_dim": D,
+            "page_size": PAGE_SIZE,
+            "block_kv": bkv,
+            "fp_dtype": "float16",
+            "cache_dtype": "int8",
+        },
+        # top-level numbers CI holds the acceptance bounds to
+        "hbm_ratio": hbm_ratio,
+        "max_logit_err": max_logit_err,
+        "err_bound": ERR_BOUND,
+        "pool_hbm": {
+            "fp16_bytes": hbm_fp,
+            "int8_bytes": hbm_q,
+            "reduction_x": hbm_fp / hbm_q,
+            "fp16_page_bytes": stats_fp["page_hbm_bytes"],
+            "int8_page_bytes": stats_q["page_hbm_bytes"],
+            "live_pages": stats_q["live_pages"],
+        },
+        "latency_s": {"fp16_pool": t_fp, "int8_pool": t_q},
+        "dse": {
+            "signature": sig.key(),
+            "rows": dse_rows,
+            "tuned": dict(tuned),
+            "max_err_by_dtype": errs,
+            "tightened_budget_pick": dict(tight),
+            "reselected_pick": dict(reselected),
+            "error_budget": ERR_BOUND,
+            "device": entry.get("device"),
+        },
+    }
+
+    rows.append(
+        f"quantized_cache_mixed,{t_q*1e6:.0f},"
+        f"hbm_ratio={hbm_ratio:.3f};err={max_logit_err:.1e};"
+        f"tuned_dtype={tuned['cache_dtype']}"
+    )
+    print(f"  quantized_cache[{'/'.join(map(str, LENGTHS))}]: pool "
+          f"{hbm_q/2**20:.2f}MiB int8 vs {hbm_fp/2**20:.2f}MiB fp16 "
+          f"({hbm_ratio:.1%}, {hbm_fp/hbm_q:.2f}x capacity), max logit err "
+          f"{max_logit_err:.1e} (bound {ERR_BOUND}), int8 {t_q*1e3:.1f}ms "
+          f"vs fp {t_fp*1e3:.1f}ms, DSE {dse_rows} rows -> "
+          f"{tuned['cache_dtype']} (tightened -> {tight['cache_dtype']})")
+
+    from benchmarks.kernels import merge_bench_sections
+
+    merge_bench_sections(artifacts, {"quantized_cache": section})
+    return rows

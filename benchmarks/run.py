@@ -15,6 +15,7 @@ BENCH_kernels.json: pruned-vs-dense grid + tuned-vs-default blocks).
   paged_decode       (kernels)    paged pool vs dense-stacked mixed-length batch
   prefix_cache       (kernels)    shared-prefix pool pages + direct-to-pool prefill
   speculative        (kernels)    draft/verify loop vs plain greedy + streamed-KV oracle
+  quantized_cache    (kernels)    int8/fp8 pool HBM + logits error + dtype DSE
   roofline_report    §Roofline    table from dry-run artifacts
 
 Flags:
@@ -35,7 +36,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
 QUICK_MODULES = ("weaving", "kernels", "flash_bwd", "flash_decode",
-                 "paged_decode", "prefix_cache", "speculative")
+                 "paged_decode", "prefix_cache", "speculative",
+                 "quantized_cache")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -57,14 +59,15 @@ def main(argv: list[str] | None = None) -> None:
         paged_decode,
         precision_versions,
         prefix_cache,
+        quantized_cache,
         roofline_report,
         speculative,
         weaving,
     )
 
     modules = [weaving, precision_versions, kernels, flash_bwd, flash_decode,
-               paged_decode, prefix_cache, speculative, betweenness,
-               docking_dse, navigation_autotune, roofline_report]
+               paged_decode, prefix_cache, speculative, quantized_cache,
+               betweenness, docking_dse, navigation_autotune, roofline_report]
     if args.only:
         names = {n.strip() for n in args.only.split(",")}
         modules = [m for m in modules
@@ -74,8 +77,8 @@ def main(argv: list[str] | None = None) -> None:
             valid = ", ".join(m.__name__.split(".")[-1] for m in
                               (weaving, precision_versions, kernels,
                                flash_bwd, flash_decode, paged_decode,
-                               prefix_cache, speculative, betweenness,
-                               docking_dse, navigation_autotune,
+                               prefix_cache, speculative, quantized_cache,
+                               betweenness, docking_dse, navigation_autotune,
                                roofline_report))
             ap.error(f"--only {args.only!r} matches no benchmark; "
                      f"valid names: {valid}")

@@ -130,6 +130,25 @@ def paged_decode_signature(batch: int, cache_len: int, n_heads: int,
     )
 
 
+def quantized_cache_signature(batch: int, cache_len: int, n_heads: int,
+                              kv_heads: int, head_dim: int, dtype="bfloat16",
+                              *, window: int | None = None) -> KernelSignature:
+    """Accuracy-constrained dtype×geometry DSE for the quantized page pool.
+    Its own kernel space because the objective flips: instead of minimizing
+    latency under VMEM, it maximizes tokens-per-HBM-byte (serving capacity)
+    subject to a *measured* logits-error constraint against the fp cache —
+    the paper's precision-autotuning shape (DSE over precision versions
+    under an accuracy goal).  `dtype` keys the fp *reference* pool; the
+    explored `cache_dtype` knob includes fp names as the accuracy-fallback
+    arm (meaning: keep the fp pool)."""
+    return KernelSignature(
+        kernel="quantized_cache",
+        shape=(batch, cache_len, n_heads, kv_heads, head_dim),
+        dtype=str(getattr(dtype, "name", dtype)), causal=True,
+        window=window, gqa=n_heads // max(kv_heads, 1),
+    )
+
+
 def speculative_signature(batch: int, cache_len: int, n_heads: int,
                           kv_heads: int, head_dim: int, dtype="bfloat16",
                           *, window: int | None = None) -> KernelSignature:
@@ -195,10 +214,22 @@ KERNEL_SPACES: dict[str, dict[str, tuple[int, ...]]] = {
         "draft_len": (1, 2, 4, 8),
         "block_kv_dec": (128, 256, 512, 1024),
     },
+    "quantized_cache": {
+        # categorical dtype knob: fp16 is the accuracy-fallback arm (keep
+        # the fp pool); fp8 arms appear only where the platform has them
+        "cache_dtype": ("float16", "int8"),
+        "page_size": (64, 128, 256, 512),
+        "block_kv_dec": (128, 256, 512, 1024),
+    },
     "rwkv6": {"chunk": (16, 32, 64, 128)},
     "rglru": {"block_d": (128, 256, 512, 1024), "chunk": (64, 128, 256)},
     "rmsnorm": {"block_rows": (64, 128, 256, 512)},
 }
+
+import jax.numpy as _jnp  # noqa: E402  (fp8 arms are platform-gated)
+
+if hasattr(_jnp, "float8_e4m3fn"):
+    KERNEL_SPACES["quantized_cache"]["cache_dtype"] += ("float8_e4m3fn",)
 
 
 def config_vmem_bytes(sig: KernelSignature, knobs: Mapping[str, int]) -> int:
@@ -227,6 +258,16 @@ def config_vmem_bytes(sig: KernelSignature, knobs: Mapping[str, int]) -> int:
         eff = page_block_kv(int(knobs["block_kv_dec"]), ps)
         return vmem_bytes_dec(
             H // max(K, 1), min(eff, max(T, 128)), D, b, kv_dtype_bytes=b,
+        ) + 4 * cdiv(max(T, 1), ps)  # + the SMEM block-table row
+    if sig.kernel == "quantized_cache":
+        B, T, H, K, D = sig.shape
+        ps = int(knobs["page_size"])
+        eff = page_block_kv(int(knobs["block_kv_dec"]), ps)
+        # the kernel streams the pool's storage dtype and dequantizes
+        # in-register: K/V tiles shrink with the quantized dtype
+        qb = _DTYPE_BYTES.get(str(knobs["cache_dtype"]), b)
+        return vmem_bytes_dec(
+            H // max(K, 1), min(eff, max(T, 128)), D, b, kv_dtype_bytes=qb,
         ) + 4 * cdiv(max(T, 1), ps)  # + the SMEM block-table row
     if sig.kernel == "speculative":
         B, T, H, K, D = sig.shape
@@ -272,6 +313,23 @@ def prefix_shared_pool_bytes(sig: KernelSignature, knobs: Mapping[str, int],
     return pages * ps * K * D * 2 * dtype_bytes(sig.dtype)
 
 
+def quantized_pool_bytes(sig: KernelSignature, knobs: Mapping[str, Any]) -> int:
+    """HBM the pool allocates for the signature's batch at the knob's
+    dtype×geometry: quantized payload at `cache_dtype` plus the per-page
+    fp32 scale sidecars (2 rows of K scales per page: k and v).  Fp dtype
+    values model the unquantized pool (no sidecars).  This is the
+    denominator of the `tokens_per_hbm_byte` objective."""
+    B, T, H, K, D = sig.shape
+    ps = int(knobs["page_size"])
+    name = str(knobs["cache_dtype"])
+    qb = _DTYPE_BYTES.get(name, dtype_bytes(sig.dtype))
+    pages = B * cdiv(max(T, 1), ps)
+    per_page = 2 * ps * K * D * qb
+    if qb == 1:  # quantized formats carry the fp32 scale sidecars
+        per_page += 2 * K * 4
+    return pages * per_page
+
+
 def design_space(sig: KernelSignature, *,
                  vmem_budget: int = DEFAULT_VMEM_BUDGET) -> dict[str, list[int]]:
     """Per-kernel knob values, pre-filtered so every value is feasible for
@@ -288,6 +346,12 @@ def design_space(sig: KernelSignature, *,
             v for v in space["block_kv_dec"] if v <= max(T, 128)
         ]
     elif sig.kernel == "paged_decode":
+        T = sig.shape[1]
+        space["page_size"] = [v for v in space["page_size"] if v <= max(T, 64)]
+        space["block_kv_dec"] = [
+            v for v in space["block_kv_dec"] if v <= max(T, 128)
+        ]
+    elif sig.kernel == "quantized_cache":
         T = sig.shape[1]
         space["page_size"] = [v for v in space["page_size"] if v <= max(T, 64)]
         space["block_kv_dec"] = [
@@ -378,6 +442,18 @@ class TunerCache:
 # ---------------------------------------------------------------------------
 
 
+def _device_tag() -> str:
+    """Measurement substrate of this process's tuner rows.  Interpret-mode
+    measurements (the CPU-CI default) are what most entries hold; with
+    REPRO_TUNER_ON_DEVICE=1 the tag is the real jax backend, so on-device
+    rows key separately and never cross-contaminate interpret lookups."""
+    if os.environ.get("REPRO_TUNER_ON_DEVICE") == "1":
+        import jax
+
+        return str(jax.default_backend())
+    return "interpret"
+
+
 class KernelTuner:
     """Lat DSE over kernel block knobs, constrained by the analytic VMEM
     model, persisted through a TunerCache."""
@@ -393,15 +469,22 @@ class KernelTuner:
 
     # -- lookup ----------------------------------------------------------------
 
+    def _key(self, sig: KernelSignature) -> str:
+        """Cache key for this process's measurement substrate: interpret
+        rows keep the bare signature key (every pre-existing entry), while
+        on-device rows (REPRO_TUNER_ON_DEVICE=1) append "@<backend>"."""
+        dev = _device_tag()
+        return sig.key() if dev == "interpret" else f"{sig.key()}@{dev}"
+
     def lookup(self, sig: KernelSignature) -> dict[str, int] | None:
-        entry = self.cache.get(sig.key())
+        entry = self.cache.get(self._key(sig))
         if entry is None:
             return None
         return dict(entry["knobs"])
 
     def knowledge_base(self, sig: KernelSignature) -> KnowledgeBase | None:
         """Rebuild the mARGOt KnowledgeBase from the cached DSE rows."""
-        entry = self.cache.get(sig.key())
+        entry = self.cache.get(self._key(sig))
         if entry is None:
             return None
         ops = [
@@ -471,8 +554,9 @@ class KernelTuner:
                  "metrics": {m: list(v) for m, v in r["metrics"].items()}}
                 for r in results
             ],
+            "device": _device_tag(),
         }
-        self.cache.put(sig.key(), entry)
+        self.cache.put(self._key(sig), entry)
         self.tuned += 1
         return dict(best["knobs"])
 
@@ -638,6 +722,9 @@ def _default_measure(sig: KernelSignature) -> Callable[..., float]:
 
         return measure
 
+    if sig.kernel == "quantized_cache":
+        return _quantized_cache_measures(sig)[0]
+
     if sig.kernel == "rwkv6":
         from repro.kernels.rwkv6.ops import wkv_pallas
 
@@ -695,6 +782,76 @@ def _default_measure(sig: KernelSignature) -> Callable[..., float]:
         return measure
 
     raise KeyError(sig.kernel)
+
+
+def _quantized_cache_measures(sig: KernelSignature):
+    """(latency, error) measures for the quantized-cache DSE.
+
+    Both run the real paged `flash_decode` over pools packed at the knob's
+    geometry (interpret mode off-TPU).  The error measure is the mARGOt
+    error model's ground truth: the max-abs deviation of the decode
+    attention output between the quantized pool (per-page scales,
+    in-kernel dequant) and the same values served fp — exactly what the
+    serving path changes, so the accuracy Goal constrains what users see.
+    Fp dtype arms score 0.0 by construction.  Per-geometry fp pools are
+    memoized so every dtype arm compares against identical values."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention.ops import CACHE_QMAX, flash_decode
+    from repro.runtime.pages import quantize_linear_pool
+
+    B, T, H, K, D = sig.shape
+    dt = {"bfloat16": jnp.bfloat16, "float16": jnp.float16}.get(
+        sig.dtype, jnp.float32
+    )
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (B, 1, H, D), dt)
+    index = jnp.full((B,), T - 1, jnp.int32)  # worst case: full cache
+    fp_pools: dict[int, tuple] = {}
+
+    def fp_pool(ps):
+        if ps not in fp_pools:
+            nb = cdiv(T, ps)
+            pool = B * nb
+            k = jax.random.normal(keys[1], (pool, ps, K, D), dt)
+            v = jax.random.normal(keys[2], (pool, ps, K, D), dt)
+            tables = jnp.arange(pool, dtype=jnp.int32).reshape(B, nb)
+            fp_pools[ps] = (k, v, tables)
+        return fp_pools[ps]
+
+    def call(k, v, tables, blk, scales=None):
+        ksc, vsc = scales if scales is not None else (None, None)
+        return flash_decode(q, k, v, index, tables=tables, kv_len=T,
+                            block_kv=blk, k_scale=ksc, v_scale=vsc)
+
+    def latency(**knobs):
+        ps, blk = int(knobs["page_size"]), int(knobs["block_kv_dec"])
+        name = str(knobs["cache_dtype"])
+        k, v, tables = fp_pool(ps)
+        scales = None
+        if name in CACHE_QMAX:
+            k, v, ksc, vsc = quantize_linear_pool(k, v, name)
+            scales = (ksc, vsc)
+        fn = jax.jit(lambda: call(k, v, tables, blk, scales))
+        jax.block_until_ready(fn())  # compile
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        return time.perf_counter() - t0
+
+    def error(**knobs):
+        ps, blk = int(knobs["page_size"]), int(knobs["block_kv_dec"])
+        name = str(knobs["cache_dtype"])
+        if name not in CACHE_QMAX:
+            return 0.0
+        k, v, tables = fp_pool(ps)
+        ref = call(k, v, tables, blk)
+        qk, qv, ksc, vsc = quantize_linear_pool(k, v, name)
+        out = call(qk, qv, tables, blk, (ksc, vsc))
+        return float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                     - ref.astype(jnp.float32))))
+
+    return latency, error
 
 
 # ---------------------------------------------------------------------------
@@ -773,6 +930,119 @@ def tuned_speculative_knobs(batch: int, cache_len: int, n_heads: int,
 
 
 # ---------------------------------------------------------------------------
+# Quantized-cache DSE: multi-objective (capacity under an accuracy goal)
+# ---------------------------------------------------------------------------
+
+
+def tune_quantized_cache(
+    sig: KernelSignature,
+    *,
+    error_budget: float = 0.05,
+    tuner: KernelTuner | None = None,
+    measure: Callable[..., float] | None = None,
+    error_measure: Callable[..., float] | None = None,
+    sample: int | None = None,
+    num_tests: int = 1,
+    seed: int = 0,
+) -> dict[str, Any]:
+    """Run the quantized-cache DSE and persist best knobs + all rows.
+
+    Multi-objective in the paper's precision-autotuning shape: every
+    `cache_dtype × page_size × block_kv_dec` point records the analytic
+    VMEM/HBM models, a measured decode latency AND a measured
+    `max_logit_err` against the fp pool (the mARGOt error model); the
+    selected point maximizes `tokens_per_hbm_byte` subject to the error
+    staying under `error_budget` and VMEM under the tuner's budget.  The
+    persisted entry records `error_budget` so `select_cache_knobs` can
+    re-select under a tightened accuracy constraint without re-measuring.
+    """
+    tuner = tuner or default_tuner()
+    if measure is None or error_measure is None:
+        lat_m, err_m = _quantized_cache_measures(sig)
+        measure = measure or lat_m
+        error_measure = error_measure or err_m
+    space = design_space(sig, vmem_budget=tuner.vmem_budget)
+    B, T = sig.shape[0], sig.shape[1]
+
+    lat = Lat(sig.key()).set_num_tests(num_tests)
+    for name, values in space.items():
+        lat.add_var(name, values)
+    lat.add_metric("latency_s", measure)
+    lat.add_metric("vmem_bytes", lambda **kn: config_vmem_bytes(sig, kn))
+    lat.add_metric("pool_hbm_bytes",
+                   lambda **kn: float(quantized_pool_bytes(sig, kn)))
+    lat.add_metric(
+        "tokens_per_hbm_byte",
+        lambda **kn: float(B * T) / quantized_pool_bytes(sig, kn),
+    )
+    lat.add_metric("max_logit_err", error_measure)
+    results = lat.tune(sample=sample, seed=seed)
+
+    fits = [r for r in results
+            if r["metrics"]["vmem_bytes"][0] <= tuner.vmem_budget]
+    accurate = [r for r in fits
+                if r["metrics"]["max_logit_err"][0] <= error_budget]
+    pool = accurate or fits or results
+    best = max(pool, key=lambda r: r["metrics"]["tokens_per_hbm_byte"][0])
+    entry = {
+        "knobs": dict(best["knobs"]),
+        "metrics": {m: list(v) for m, v in best["metrics"].items()},
+        "ops": [
+            {"knobs": r["knobs"],
+             "metrics": {m: list(v) for m, v in r["metrics"].items()}}
+            for r in results
+        ],
+        "error_budget": float(error_budget),
+        "device": _device_tag(),
+    }
+    tuner.cache.put(tuner._key(sig), entry)
+    tuner.tuned += 1
+    return dict(best["knobs"])
+
+
+def select_cache_knobs(
+    sig: KernelSignature,
+    *,
+    error_budget: float,
+    tuner: KernelTuner | None = None,
+) -> dict[str, Any] | None:
+    """Re-select the quantized-cache knobs from the persisted DSE rows
+    under a (possibly tightened) accuracy constraint — no re-measurement.
+
+    A mARGOt State maximizes `tokens_per_hbm_byte` subject to
+    `max_logit_err <= error_budget` and the VMEM budget; tightening the
+    budget below the quantized arms' measured error forces the selection
+    back onto the fp fallback arm.  The re-selected knobs and the new
+    budget are persisted.  Returns None when the signature was never
+    tuned."""
+    tuner = tuner or default_tuner()
+    entry = tuner.cache.get(tuner._key(sig))
+    if entry is None or not entry.get("ops"):
+        return None
+    ops = [
+        OperatingPoint(
+            knobs=dict(row["knobs"]),
+            metrics={m: tuple(v) for m, v in row["metrics"].items()},
+        )
+        for row in entry["ops"]
+    ]
+    state = State("cache", objective_metric="tokens_per_hbm_byte",
+                  maximize=True)
+    state.subject_to(Goal("vmem", "vmem_bytes", LE, float(tuner.vmem_budget)))
+    state.subject_to(Goal("accuracy", "max_logit_err", LE,
+                          float(error_budget)))
+    best = Margot(KnowledgeBase(ops), [state]).update()
+    knobs = {k: (v if isinstance(v, str) else int(v))
+             for k, v in best.knobs.items()}
+    new_entry = dict(entry)
+    new_entry["knobs"] = knobs
+    new_entry["metrics"] = {m: list(v) for m, v in best.metrics.items()}
+    new_entry["error_budget"] = float(error_budget)
+    tuner.cache.put(tuner._key(sig), new_entry)
+    return knobs
+
+
+# ---------------------------------------------------------------------------
 # Runtime feedback: mARGOt observations refine the persisted DSE priors
 # ---------------------------------------------------------------------------
 
@@ -803,12 +1073,16 @@ def refine_from_runtime(
     tuned (runtime feedback refines priors; it does not create them).
     """
     tuner = tuner or default_tuner()
-    entry = tuner.cache.get(sig.key())
+    entry = tuner.cache.get(tuner._key(sig))
     if entry is None or not entry.get("ops"):
         return None
     if objective_knob is None:
         names = list(KERNEL_SPACES.get(sig.kernel, entry["knobs"]))
-        objective_knob = names[0]
+        # categorical knobs (cache_dtype) can't be a maximize objective —
+        # default to the first numeric knob of the space
+        numeric = [n for n in names
+                   if not isinstance(entry["knobs"].get(n, 0), str)]
+        objective_knob = (numeric or names)[0]
 
     ops = []
     for row in entry["ops"]:
@@ -838,8 +1112,10 @@ def refine_from_runtime(
             for m, v in row["metrics"].items()
         }
         adjusted_ops.append({"knobs": dict(row["knobs"]), "metrics": metrics})
-    knobs = {k: int(v) for k, v in best.knobs.items()}
-    new_entry = {
+    knobs = {k: (v if isinstance(v, str) else int(v))
+             for k, v in best.knobs.items()}
+    new_entry = dict(entry)  # keep error_budget / device / extra columns
+    new_entry.update({
         "knobs": knobs,
         "metrics": {
             m: [v[0] * coefs.get(m, 1.0), v[1] * coefs.get(m, 1.0)]
@@ -851,6 +1127,6 @@ def refine_from_runtime(
             "observed": {m: float(v) for m, v in observed.items()},
             "latency_budget": latency_budget,
         },
-    }
-    tuner.cache.put(sig.key(), new_entry)
+    })
+    tuner.cache.put(tuner._key(sig), new_entry)
     return knobs

@@ -108,6 +108,22 @@ class TunedKernelAspect(Aspect):
             cfg.resolved_head_dim, self.dtype, window=window,
         )
 
+    def quantized_signature(self, cfg):
+        """Quantized-pool serving: the accuracy-constrained dtype×geometry
+        DSE.  The signature keys the fp *reference* dtype; `cache_dtype`
+        itself is a knob the space explores (with fp names as the
+        accuracy-fallback arm)."""
+        from repro.autotune.kernel_tuner import quantized_cache_signature
+
+        cache_len = self.cache_len or self.seq_len
+        window = cfg.attn_window
+        if window is not None and window < cache_len:
+            cache_len, window = window, None  # ring layout
+        return quantized_cache_signature(
+            self.batch, cache_len, cfg.n_heads, cfg.kv_heads,
+            cfg.resolved_head_dim, self.dtype, window=window,
+        )
+
     def speculative_signature(self, cfg):
         """Speculative verify step: same problem geometry as the decode
         signatures, but the knob is the draft span itself (`draft_len`
@@ -159,10 +175,17 @@ class TunedKernelAspect(Aspect):
         for name, extra_key in extras.items():
             if name not in knobs:  # e.g. pre-bwd cache entries
                 continue
-            val = int(knobs[name])
+            val = knobs[name]
+            # categorical knobs (cache_dtype) weave as strings; geometry
+            # knobs stay ints
+            val = val if isinstance(val, str) else int(val)
             weaver.set_extra(extra_key, val)
             if self.expose_knobs:
-                values = tuple(sorted(set(space[name]) | {val}))
+                if isinstance(val, str):
+                    values = tuple(space[name]) if val in space[name] \
+                        else tuple(space[name]) + (val,)
+                else:
+                    values = tuple(sorted(set(space[name]) | {val}))
                 weaver.add_knob(Knob(extra_key, values, val))
 
     def apply(self, weaver: Weaver) -> None:
@@ -192,6 +215,16 @@ class TunedKernelAspect(Aspect):
                 # a paged entry wins over the plain decode entry: a server
                 # running the pool should stream the jointly-tuned blocks
                 self._weave(weaver, "paged_decode", paged_knobs, {
+                    "page_size": "flash_page_size",
+                    "block_kv_dec": "flash_block_kv_dec",
+                })
+            q_knobs = self._knobs_for(tuner, self.quantized_signature(cfg))
+            if q_knobs:
+                # the accuracy-constrained dtype×geometry entry wins over
+                # the fp paged entry: the pool stores what the DSE picked
+                # (fp dtype values resolve to "keep the fp pool")
+                self._weave(weaver, "quantized_cache", q_knobs, {
+                    "cache_dtype": "flash_cache_dtype",
                     "page_size": "flash_page_size",
                     "block_kv_dec": "flash_block_kv_dec",
                 })

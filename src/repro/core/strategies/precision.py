@@ -27,6 +27,18 @@ class ChangePrecision(Aspect):
         self.jp_kind = kind
 
     def apply(self, weaver: Weaver) -> None:
+        policy = (DTypePolicy.make(self.policy)
+                  if isinstance(self.policy, str) else self.policy)
+        if policy.cache_dtype is not None or self.jp_kind == "cache":
+            # the "cache" kind retypes KV-cache *storage*, not compute:
+            # the attention joinpoints are selected for analysis (the pool
+            # hosts their K/V; their compute policy stays untouched) and
+            # the dtype is woven as the "flash_cache_dtype" extra the
+            # serving runtime and the tuned kernels resolve
+            for jp in weaver.select(self.pattern, kind="attention"):
+                jp.attr("kind")
+            weaver.set_extra("flash_cache_dtype", policy.cache_dtype)
+            return
         sel = weaver.select(self.pattern, kind=self.jp_kind)
         for jp in sel:
             # analysis: skip norm joinpoints — they pin fp32 params (the
@@ -91,7 +103,13 @@ class MixedPrecisionVersions(Aspect):
 
             def mutate(state, combo=combo):
                 for pattern, policy in zip(self.patterns, combo):
-                    state.policies.override(pattern, policy)
+                    pol = (DTypePolicy.make(policy)
+                           if isinstance(policy, str) else policy)
+                    if pol.cache_dtype is not None:
+                        # cache policies retype pool storage, not compute
+                        state.extra["flash_cache_dtype"] = pol.cache_dtype
+                    else:
+                        state.policies.override(pattern, policy)
 
             weaver.add_variant(vname, mutate)
             names.append(vname)

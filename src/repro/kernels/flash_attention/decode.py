@@ -184,9 +184,9 @@ def _flash_decode_kernel(
     q_ref,    # (1, 1, Rp, D) — q_span tokens' folded groups, row r = s*G + g
     k_ref,    # (1, 1, block_kv, D)
     v_ref,
-    o_ref,    # (1, 1, Rp, D)
-    m_scratch, l_scratch, acc_scratch,
-    *,
+    *rest,    # [ks_ref, vs_ref,] o_ref, m/l/acc scratch — scale refs only
+              # when `quantized` (a (1, 1) block of the fp32 per-page-per-
+              # head sidecar: one scalar scale covering this K/V block)
     block_kv: int,
     kv_len: int,   # true cache length T (padding slots >= T are masked)
     window: int | None,
@@ -195,7 +195,12 @@ def _flash_decode_kernel(
     pruned: bool,
     group: int = 1,   # q rows per token (GQA fold); row // group = token off
     q_span: int = 1,  # stacked q tokens; token s sits at position index + s
+    quantized: bool = False,
 ):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scratch, l_scratch, acc_scratch = rest
+    else:
+        o_ref, m_scratch, l_scratch, acc_scratch = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -225,6 +230,17 @@ def _flash_decode_kernel(
         g = q_ref[0, 0].astype(jnp.float32)   # (Gp, D)
         k = k_ref[0, 0].astype(jnp.float32)   # (bkv, D)
         v = v_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            # dequantize in-loop at the block's page scale; the block never
+            # straddles a page (block_kv | page boundary), so one scalar
+            # covers the whole tile.  Paged sidecars are (P, K) -> 2-d refs,
+            # dense ones (B, K, NP) -> 3-d refs.
+            if ks_ref.ndim == 2:
+                k = k * ks_ref[0, 0]
+                v = v * vs_ref[0, 0]
+            else:
+                k = k * ks_ref[0, 0, 0]
+                v = v * vs_ref[0, 0, 0]
         s = jax.lax.dot_general(
             g, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
         ) * scale  # (Gp, bkv)
@@ -285,6 +301,9 @@ def flash_decode_fwd(
     tables: jax.Array | None = None,  # (B, num_blocks) int32 page table
     kv_len: int | None = None,        # logical cache length (paged only)
     q_span: int = 1,   # stacked q tokens (draft block / q_offset suffix)
+    k_scale: jax.Array | None = None,  # fp32 per-page-per-head dequant scales:
+    v_scale: jax.Array | None = None,  # paged (P, K); dense (B, K, NP)
+    scale_page: int | None = None,     # dense only: cache slots per scale row
 ) -> jax.Array:
     """One decode step.  Streams ceil((hi-lo)) live KV blocks per (b, kv
     head); with `pruned=False` every block streams (the dense baseline).
@@ -298,11 +317,22 @@ def flash_decode_fwd(
     (rows ordered token-major: row r = token r // G), `index` is the first
     token's position, and token s attends through slot index + s — the
     widened-q / q_offset variant used by speculative verify and by
-    suffix-over-prefix paged prefill."""
+    suffix-over-prefix paged prefill.
+
+    With `k_scale`/`v_scale`, K/V hold quantized values (int8/fp8) and the
+    kernel dequantizes each streamed block at its page's fp32 scale —
+    scales ride as an extra (1, 1)-blocked operand resolved by the same
+    (table-indirected) index_map, and the fp32 online-softmax accumulation
+    is untouched.  Paged sidecars are (P, K); for dense caches pass
+    (B, NP, K)-shaped scales pre-swapped to kernel layout (B, K, NP) with
+    `scale_page` slots per scale row (block_kv is clamped to divide it)."""
     B, K, R, D = q.shape
     if R % q_span:
         raise ValueError(f"q rows {R} not divisible by q_span={q_span}")
     G = R // q_span
+    quantized = k_scale is not None
+    if quantized and v_scale is None:
+        raise ValueError("quantized flash_decode requires both k/v scales")
     paged = tables is not None
     if paged:
         if kv_len is None:
@@ -322,6 +352,12 @@ def flash_decode_fwd(
     else:
         T = k.shape[2]
         block_kv = min(block_kv, max(T, 1))
+        if quantized:
+            if scale_page is None:
+                raise ValueError("dense quantized flash_decode requires "
+                                 "scale_page (cache slots per scale row)")
+            # a streamed block must sit under a single scale row
+            block_kv = page_block_kv(block_kv, scale_page)
 
     # TPU sublane tiling wants >= 8 q rows; pad the folded rows (the padded
     # rows compute garbage that is sliced off — rows are softmax-independent).
@@ -362,6 +398,12 @@ def flash_decode_fwd(
         def qo_index(b, h, j, idx_ref, tbl_ref):
             return (b, h, 0, 0)
 
+        def sc_index(b, h, j, idx_ref, tbl_ref):
+            # same table indirection as kv_index, at page granularity
+            jb = logical_block(b, j, idx_ref)
+            return (tbl_ref[b, jb // spb], h)
+
+        scale_block = (1, 1)
         kernel_fn = _flash_decode_kernel_paged
         num_prefetch = 2
         operands = (index, tables, q, k, v)
@@ -372,25 +414,36 @@ def flash_decode_fwd(
         def qo_index(b, h, j, idx_ref):
             return (b, h, 0, 0)
 
+        def sc_index(b, h, j, idx_ref):
+            jb = logical_block(b, j, idx_ref)
+            return (b, h, (jb * block_kv) // scale_page)
+
+        scale_block = (1, 1, 1)
         kernel_fn = _flash_decode_kernel
         num_prefetch = 1
         operands = (index, q, k, v)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, Rp, D), qo_index),
+        pl.BlockSpec((1, 1, block_kv, D), kv_index),
+        pl.BlockSpec((1, 1, block_kv, D), kv_index),
+    ]
+    if quantized:
+        in_specs += [pl.BlockSpec(scale_block, sc_index)] * 2
+        operands = operands + (jnp.asarray(k_scale, jnp.float32),
+                               jnp.asarray(v_scale, jnp.float32))
 
     kernel = functools.partial(
         kernel_fn,
         block_kv=block_kv, kv_len=T, window=window,
         softcap=softcap, scale=1.0 / np.sqrt(D), pruned=pruned,
-        group=G, q_span=q_span,
+        group=G, q_span=q_span, quantized=quantized,
     )
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=num_prefetch,
         grid=(B, K, steps),
-        in_specs=[
-            pl.BlockSpec((1, 1, Rp, D), qo_index),
-            pl.BlockSpec((1, 1, block_kv, D), kv_index),
-            pl.BlockSpec((1, 1, block_kv, D), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, Rp, D), qo_index),
         scratch_shapes=[
             pltpu.VMEM((Rp, 1), jnp.float32),

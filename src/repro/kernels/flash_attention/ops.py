@@ -39,6 +39,60 @@ DEFAULT_BLOCK_KV = 512
 DEFAULT_BLOCK_KV_DEC = 512
 DEFAULT_PAGE_SIZE = 128
 
+# Quantized KV-cache dtypes: name -> largest representable magnitude.  The
+# per-page-per-head scale is abs_max / qmax, so dequant is value * scale.
+# fp8 entries appear only when the installed jax ships the dtype.
+CACHE_QMAX: dict[str, float] = {"int8": 127.0}
+if hasattr(jnp, "float8_e4m3fn"):
+    CACHE_QMAX["float8_e4m3fn"] = 448.0
+if hasattr(jnp, "float8_e5m2"):
+    CACHE_QMAX["float8_e5m2"] = 57344.0
+
+
+def cache_qmax(dtype) -> float:
+    """qmax for a quantized-cache dtype (accepts names and jnp dtypes)."""
+    name = jnp.dtype(dtype).name if not isinstance(dtype, str) else dtype
+    return CACHE_QMAX[name]
+
+
+def resolve_cache_dtype(name):
+    """Map a `cache_dtype` knob value to a jnp storage dtype, or None when
+    the value names no quantized format (fp values mean: keep the fp pool)."""
+    if name is None:
+        return None
+    name = str(name)
+    if name not in CACHE_QMAX:
+        return None
+    return {"int8": jnp.int8,
+            "float8_e4m3fn": getattr(jnp, "float8_e4m3fn", None),
+            "float8_e5m2": getattr(jnp, "float8_e5m2", None)}[name]
+
+
+def kv_scale_from_absmax(absmax, dtype):
+    """Per-page scale from a page's abs-max: absmax / qmax, so the stored
+    code range spans the full [-qmax, qmax] grid (an absmax scale would
+    collapse int8 codes to {-1, 0, 1}).  Keeps the 0.0 free-page sentinel:
+    zero absmax stays zero."""
+    return absmax / cache_qmax(dtype)
+
+
+def quantize_kv_write(x, scale, dtype):
+    """Quantize K/V values at *fixed* per-page scales: x (..., K, D) against
+    scale (..., K).  Values louder than the page's recorded abs-max clip —
+    scales are never recomputed on already-written slots, which is what
+    keeps speculative rollback and CoW sharing bit-deterministic."""
+    qmax = cache_qmax(dtype)
+    s = jnp.where(scale > 0, scale, 1.0)[..., None]
+    y = jnp.clip(x.astype(jnp.float32) / s, -qmax, qmax)
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.integer):
+        y = jnp.round(y)
+    return y.astype(dtype)
+
+
+def dequantize_kv(x, scale):
+    """fp32 dequant of (..., K, D) quantized values at (..., K) scales."""
+    return x.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)[..., None]
+
 if hasattr(jax, "shard_map"):  # jax >= 0.6
     _shard_map = jax.shard_map
     _SHARD_MAP_KW = {"check_vma": False}
@@ -216,7 +270,7 @@ def _as_tuple(x):
     return (x,)
 
 
-def paged_gather_kv(pk, pv, tables, kv_len: int):
+def paged_gather_kv(pk, pv, tables, kv_len: int, k_scale=None, v_scale=None):
     """Materialize the logical (B, kv_len, K, D) K/V view of a page pool
     through per-request block tables — the XLA-reference twin of the
     indirection the paged `flash_decode` kernel performs in its BlockSpec
@@ -224,11 +278,20 @@ def paged_gather_kv(pk, pv, tables, kv_len: int):
     ones: the table row is the only addressing, so refcounted pools need no
     kernel changes.  Used by `Attention._decode_paged`'s reference path and
     the paged-prefill path (suffix tokens attending over pool-resident
-    prefixes)."""
+    prefixes).
+
+    With `k_scale`/`v_scale` ((P, K) fp32 sidecars of a quantized pool) the
+    gathered view is dequantized to fp32 — the reference twin of the
+    kernel's in-loop dequant."""
     B, nb = tables.shape
     ps = pk.shape[-3]  # pool layout (P, page_size, K, D)
-    k = pk[tables].reshape(B, nb * ps, *pk.shape[-2:])[:, :kv_len]
-    v = pv[tables].reshape(B, nb * ps, *pv.shape[-2:])[:, :kv_len]
+    k = pk[tables]  # (B, nb, page_size, K, D)
+    v = pv[tables]
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale[tables][:, :, None, :, None]
+        v = v.astype(jnp.float32) * v_scale[tables][:, :, None, :, None]
+    k = k.reshape(B, nb * ps, *pk.shape[-2:])[:, :kv_len]
+    v = v.reshape(B, nb * ps, *pv.shape[-2:])[:, :kv_len]
     return k, v
 
 
@@ -260,19 +323,25 @@ def _unfold_decode_o(out, B, S, H, D, K):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("window", "softcap", "block_kv", "pruned", "interpret"),
+    static_argnames=("window", "softcap", "block_kv", "pruned", "interpret",
+                     "scale_page"),
 )
-def _flash_decode_local(q, k, v, index, *, window, softcap, block_kv, pruned,
-                        interpret):
+def _flash_decode_local(q, k, v, index, k_scale=None, v_scale=None, *,
+                        window, softcap, block_kv, pruned, interpret,
+                        scale_page=None):
     from repro.kernels.flash_attention.decode import flash_decode_fwd
 
     B, S, H, D = q.shape
     K = k.shape[2]
+    # dense scales arrive model-layout (B, NP, K); kernel wants (B, K, NP)
+    ks = jnp.swapaxes(k_scale, 1, 2) if k_scale is not None else None
+    vs = jnp.swapaxes(v_scale, 1, 2) if v_scale is not None else None
     out = flash_decode_fwd(
         _fold_decode_q(q, K), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
         index,
         window=window, softcap=softcap, block_kv=block_kv,
         pruned=pruned, interpret=interpret, q_span=S,
+        k_scale=ks, v_scale=vs, scale_page=scale_page,
     )
     return _unfold_decode_o(out, B, S, H, D, K)
 
@@ -282,7 +351,8 @@ def _flash_decode_local(q, k, v, index, *, window, softcap, block_kv, pruned,
     static_argnames=("kv_len", "window", "softcap", "block_kv", "pruned",
                      "interpret"),
 )
-def _flash_decode_paged_local(q, k, v, index, tables, *, kv_len, window,
+def _flash_decode_paged_local(q, k, v, index, tables, k_scale=None,
+                              v_scale=None, *, kv_len, window,
                               softcap, block_kv, pruned, interpret):
     from repro.kernels.flash_attention.decode import flash_decode_fwd
 
@@ -293,6 +363,7 @@ def _flash_decode_paged_local(q, k, v, index, tables, *, kv_len, window,
         index, tables=tables, kv_len=kv_len,
         window=window, softcap=softcap, block_kv=block_kv,
         pruned=pruned, interpret=interpret, q_span=S,
+        k_scale=k_scale, v_scale=v_scale,
     )
     return _unfold_decode_o(out, B, S, H, D, K)
 
@@ -311,6 +382,9 @@ def flash_decode(
     interpret: bool | None = None,
     tables: jax.Array | None = None,  # (B, num_blocks) int32 block tables
     kv_len: int | None = None,        # logical cache length (paged only)
+    k_scale: jax.Array | None = None,  # quantized caches: fp32 scales —
+    v_scale: jax.Array | None = None,  # paged (P, K); dense (B, NP, K)
+    scale_page: int | None = None,     # dense only: cache slots per scale row
 ) -> jax.Array:
     """One decode step over a live-block-pruned cache; see decode.py.
 
@@ -347,6 +421,7 @@ def flash_decode(
             block_kv = int(tuned.get("block_kv_dec", DEFAULT_BLOCK_KV_DEC))
         return _flash_decode_paged_local(
             q, k_cache, v_cache, index, jnp.asarray(tables, jnp.int32),
+            k_scale, v_scale,
             kv_len=int(kv_len), window=window, softcap=softcap,
             block_kv=int(block_kv), pruned=pruned, interpret=interpret,
         )
@@ -359,7 +434,8 @@ def flash_decode(
         )
         block_kv = int(tuned.get("block_kv_dec", DEFAULT_BLOCK_KV_DEC))
     return _flash_decode_local(
-        q, k_cache, v_cache, index,
+        q, k_cache, v_cache, index, k_scale, v_scale,
         window=window, softcap=softcap, block_kv=int(block_kv),
         pruned=pruned, interpret=interpret,
+        scale_page=None if scale_page is None else int(scale_page),
     )

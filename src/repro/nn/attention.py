@@ -466,15 +466,60 @@ class Attention(Module):
             out = self._attend_dense(q, k_new, v_new, positions, ctx, policy)
             return out, new_cache
 
+        quant = "ksc" in cache
+        ksc = vsc = None
         slots = prefix_len + jnp.arange(S, dtype=jnp.int32)
         page = block_tables[0, slots // ps]
         off = slots % ps
-        pk = pk.at[page, off].set(k_new[0])
-        pv = pv.at[page, off].set(v_new[0])
+        if quant:
+            from repro.kernels.flash_attention.ops import (
+                dequantize_kv,
+                kv_scale_from_absmax,
+                quantize_kv_write,
+            )
+
+            ksc, vsc = cache["ksc"], cache["vsc"]
+            # fresh-page scale = absmax over the tokens this prefill writes
+            # into the page (scatter-max from the 0.0 free sentinel).  A
+            # page the shared prefix straddles keeps the donor's recorded
+            # scale — its contributions are masked out, so already-written
+            # slots are never requantized (the fixed-scale invariant that
+            # keeps sharing and rollback bit-deterministic).
+            k_tok = kv_scale_from_absmax(
+                jnp.max(jnp.abs(k_new[0].astype(jnp.float32)), axis=-1),
+                pk.dtype)
+            v_tok = kv_scale_from_absmax(
+                jnp.max(jnp.abs(v_new[0].astype(jnp.float32)), axis=-1),
+                pv.dtype)
+            if prefix_len % ps:
+                keep = (slots // ps == prefix_len // ps)[:, None]
+                k_tok = jnp.where(keep, 0.0, k_tok)
+                v_tok = jnp.where(keep, 0.0, v_tok)
+            ksc = ksc.at[page].max(k_tok)
+            vsc = vsc.at[page].max(v_tok)
+            k_w = quantize_kv_write(k_new[0], ksc[page], pk.dtype)
+            v_w = quantize_kv_write(v_new[0], vsc[page], pv.dtype)
+        else:
+            k_w, v_w = k_new[0], v_new[0]
+        pk = pk.at[page, off].set(k_w)
+        pv = pv.at[page, off].set(v_w)
         new_cache = {"pk": pk, "pv": pv, "index": cache["index"] + S}
+        if quant:
+            new_cache["ksc"], new_cache["vsc"] = ksc, vsc
 
         if prefix_len == 0:
-            out = self._attend_dense(q, k_new, v_new, positions, ctx, policy)
+            if quant:
+                # attend over the *dequantized* values, so prefill logits
+                # match what every later pool read (re-score, decode over
+                # the prefix) will see — the shared-vs-unshared parity
+                # invariant under quantization
+                k_att = dequantize_kv(k_w, ksc[page])[None]
+                v_att = dequantize_kv(v_w, vsc[page])[None]
+                out = self._attend_dense(q, k_att, v_att, positions, ctx,
+                                         policy)
+            else:
+                out = self._attend_dense(q, k_new, v_new, positions, ctx,
+                                         policy)
             return out, new_cache
 
         total = prefix_len + S  # static
@@ -499,6 +544,7 @@ class Attention(Module):
                 block_kv=int(blk) if blk is not None else None,
                 pruned=bool(ctx.extra.get("flash_pruned", True)),
                 tables=block_tables, kv_len=total,
+                k_scale=ksc, v_scale=vsc,
             )
             return out, new_cache
 
@@ -510,7 +556,8 @@ class Attention(Module):
         # *computed*.
         from repro.kernels.flash_attention.ops import paged_gather_kv
 
-        k_log, v_log = paged_gather_kv(pk, pv, block_tables, total)
+        k_log, v_log = paged_gather_kv(pk, pv, block_tables, total,
+                                       k_scale=ksc, v_scale=vsc)
         k_log, v_log, _ = self._maybe_expand_kv(k_log, v_log, ctx)
         kv_pos = jnp.broadcast_to(
             jnp.arange(total, dtype=jnp.int32)[None], (B, total))
@@ -701,6 +748,10 @@ class Attention(Module):
         pk, pv = cache["pk"], cache["pv"]
         ps = pk.shape[1]
         ring = "pos" in cache
+        quant = "ksc" in cache
+        ksc = vsc = None
+        if quant:
+            ksc, vsc = cache["ksc"], cache["vsc"]
 
         if ring:
             if S > 1:
@@ -730,6 +781,8 @@ class Attention(Module):
             # prefix page) — the cache passes through untouched.
             k_all, v_all = pk, pv
             new_cache = {"pk": pk, "pv": pv, "index": idx}
+            if quant:
+                new_cache["ksc"], new_cache["vsc"] = ksc, vsc
         else:
             if ring:
                 page = block_tables[bidx, slot // ps]
@@ -747,9 +800,38 @@ class Attention(Module):
                 k_all = pk.at[page, off].set(k_new[:, 0])
                 v_all = pv.at[page, off].set(v_new[:, 0])
             else:
-                k_all = pk.at[page, off].set(k_new)
-                v_all = pv.at[page, off].set(v_new)
+                if quant:
+                    from repro.kernels.flash_attention.ops import (
+                        kv_scale_from_absmax,
+                        quantize_kv_write,
+                    )
+
+                    # linear slots fill sequentially, so a page's first
+                    # write lands at offset 0: record its scale from that
+                    # token (scatter-set with the same OOB redirect) and
+                    # quantize every token at the post-scatter gathered
+                    # row.  Later writes into the page reuse the recorded
+                    # scale (clipped) — never requantized, so rollback and
+                    # sharing stay bit-deterministic.
+                    k_tok = kv_scale_from_absmax(
+                        jnp.max(jnp.abs(k_new.astype(jnp.float32)),
+                                axis=-1), pk.dtype)  # (B, S, K)
+                    v_tok = kv_scale_from_absmax(
+                        jnp.max(jnp.abs(v_new.astype(jnp.float32)),
+                                axis=-1), pv.dtype)
+                    fresh = (off == 0) & (slots < kv_len)
+                    spage = jnp.where(fresh, page, pk.shape[0])
+                    ksc = ksc.at[spage].set(k_tok)
+                    vsc = vsc.at[spage].set(v_tok)
+                    k_w = quantize_kv_write(k_new, ksc[page], pk.dtype)
+                    v_w = quantize_kv_write(v_new, vsc[page], pv.dtype)
+                else:
+                    k_w, v_w = k_new, v_new
+                k_all = pk.at[page, off].set(k_w)
+                v_all = pv.at[page, off].set(v_w)
             new_cache = {"pk": k_all, "pv": v_all, "index": idx + S}
+            if quant:
+                new_cache["ksc"], new_cache["vsc"] = ksc, vsc
             if ring:
                 pos = cache["pos"].at[bidx, slot].set(idx)
                 new_cache["pos"] = pos
@@ -770,6 +852,7 @@ class Attention(Module):
                 block_kv=int(blk) if blk is not None else None,
                 pruned=bool(ctx.extra.get("flash_pruned", True)),
                 tables=block_tables, kv_len=kv_len,
+                k_scale=ksc, v_scale=vsc,
             )
             return out, new_cache
 
@@ -777,7 +860,8 @@ class Attention(Module):
         # exact dense decode math (bit-identical — same values, same mask).
         from repro.kernels.flash_attention.ops import paged_gather_kv
 
-        k_log, v_log = paged_gather_kv(k_all, v_all, block_tables, kv_len)
+        k_log, v_log = paged_gather_kv(k_all, v_all, block_tables, kv_len,
+                                       k_scale=ksc, v_scale=vsc)
         k_c, v_c, kv_axis = self._maybe_expand_kv(k_log, v_log, ctx)
         # mask from the caller's positions (== index on the hot path): the
         # XLA reference keeps the dense path's re-scoring escape hatch

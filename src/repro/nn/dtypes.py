@@ -40,13 +40,18 @@ class DTypePolicy:
     compute_dtype: Any = jnp.bfloat16
     accum_dtype: Any = jnp.float32
     quantized: bool = False  # int8 weights + per-channel fp32 scales
+    # KV-cache pool storage format ("int8" / "float8_e4m3fn" / ...): the
+    # paper's fixed-point declaration-retyping applied to the *cache* kind —
+    # pk/pv stored narrow with per-page fp32 scales, dequantized on load
+    cache_dtype: str | None = None
 
     @staticmethod
     def make(name: str) -> "DTypePolicy":
         """Named policies mirroring the paper's precision levels.
 
         double -> f32 everywhere;  float -> bf16 compute / f32 params;
-        half   -> bf16 params+compute;  fixed -> int8 weights (emulated).
+        half   -> bf16 params+compute;  fixed -> int8 weights (emulated);
+        cache_<dtype> -> quantized KV-cache pool at <dtype>.
         """
         if name in ("double", "f32", "float32"):
             return DTypePolicy(jnp.float32, jnp.float32, jnp.float32)
@@ -56,6 +61,9 @@ class DTypePolicy:
             return DTypePolicy(jnp.bfloat16, jnp.bfloat16, jnp.float32)
         if name in ("fixed", "int8"):
             return DTypePolicy(jnp.bfloat16, jnp.bfloat16, jnp.float32, quantized=True)
+        if name.startswith("cache_"):
+            return DTypePolicy(jnp.bfloat16, jnp.bfloat16, jnp.float32,
+                               cache_dtype=name[len("cache_"):])
         raise ValueError(f"unknown policy name {name!r}")
 
 

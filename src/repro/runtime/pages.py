@@ -76,6 +76,22 @@ def _copy_pool_page(pool, src, dst):
     return pool.at[..., dst, :, :, :].set(pool[..., src, :, :, :])
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_scale_row(scales, src, dst):
+    """Scale-sidecar half of a copy-on-write split: the new private page
+    keeps the donor page's quantization scales, so its already-written
+    slots dequantize to the same values.  Page axis is -2 ((P, K) or
+    (n, P, K))."""
+    return scales.at[..., dst, :].set(scales[..., src, :])
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _zero_scale_rows(scales, pages):
+    """Pop freed pages' scale rows back to the 0.0 free-page sentinel, so a
+    later re-allocation sees a fresh page (first write records its scale)."""
+    return scales.at[..., pages, :].set(0.0)
+
+
 class PoolExhausted(RuntimeError):
     """Raised when an alloc/grow asks for more pages than the free list holds."""
 
@@ -313,12 +329,19 @@ class PagedCacheManager:
 
     def __init__(self, num_pages: int, page_size: int, *,
                  max_len: int | None = None, window: int | None = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 cache_dtype: str | None = None):
+        from repro.kernels.flash_attention.ops import resolve_cache_dtype
+
         self.pool = PagePool(num_pages, page_size)
         self.page_size = page_size
         self.max_len = max_len          # logical linear-cache capacity
         self.window = window            # model's sliding/local window
         self.prefix_sharing = prefix_sharing
+        # quantized pool storage ("int8" / "float8_*"): pk/pv at the narrow
+        # dtype plus fp32 per-page-per-head scale sidecars.  Unknown / fp
+        # names resolve to None — the pool stays at the model dtype.
+        self.cache_dtype = resolve_cache_dtype(cache_dtype)
         self._pools: dict[str, dict[str, jax.Array]] = {}
         self._groups: dict[str, dict[str, Any]] = {}  # structure, 1st admit
         self._meta: dict[Any, dict[str, Any]] = {}    # per-request state
@@ -454,18 +477,34 @@ class PagedCacheManager:
         self._scan_structure(probe_cache, ring=ring, length=length)
         self._ensure_pools(self.pool.num_pages)
 
+    def _quant_dtype(self, info):
+        """Pool storage dtype override for a group, or None to stay fp.
+        Ring groups never quantize: the wrap rewrites page-interior slots,
+        which breaks the fixed first-write page-scale policy."""
+        if self.cache_dtype is None or info["ring"]:
+            return None
+        return self.cache_dtype
+
     def _ensure_pools(self, num_pages: int) -> None:
         ps = self.page_size
         for name, info in self._groups.items():
             if name in self._pools:
                 continue
+            qdt = self._quant_dtype(info)
             shape = (num_pages, ps, info["kv_heads"], info["head_dim"])
+            sshape = (num_pages, info["kv_heads"])
             if info["scanned"]:
                 shape = (info["n"], *shape)
-            self._pools[name] = {
-                "pk": jnp.zeros(shape, info["dtype"]),
-                "pv": jnp.zeros(shape, info["dtype"]),
+                sshape = (info["n"], *sshape)
+            pools = {
+                "pk": jnp.zeros(shape, qdt or info["dtype"]),
+                "pv": jnp.zeros(shape, qdt or info["dtype"]),
             }
+            if qdt is not None:
+                # fp32 per-page-per-head dequant scales; 0.0 = free page
+                pools["ksc"] = jnp.zeros(sshape, jnp.float32)
+                pools["vsc"] = jnp.zeros(sshape, jnp.float32)
+            self._pools[name] = pools
 
     @property
     def table_width(self) -> int:
@@ -617,10 +656,20 @@ class PagedCacheManager:
         meta = self._meta[rid]
         for name, info in self._groups.items():
             group = new_cache[name]
-            self._pools[name] = {"pk": group["pk"], "pv": group["pv"]}
+            self._pools[name] = self._pool_state(group)
             if info["ring"]:
                 meta["pos"][name] = group["pos"]  # (W,) or (n, W)
         self._register_prefix(rid, tokens)
+
+    @staticmethod
+    def _pool_state(group: dict) -> dict:
+        """The shared pool arrays a step hands back: pk/pv plus the scale
+        sidecars when the group is quantized."""
+        state = {"pk": group["pk"], "pv": group["pv"]}
+        for key in ("ksc", "vsc"):
+            if key in group:
+                state[key] = group[key]
+        return state
 
     def admit_shared(self, rid, tokens, *, final_len: int,
                      pages: Sequence[int]) -> None:
@@ -701,12 +750,34 @@ class PagedCacheManager:
                     arr = arr[..., :need, :, :]
                 paged = arr.reshape(*arr.shape[:-3], len(pages), ps,
                                     *arr.shape[-2:])
-                pool = self._pools[name][dst_key]
+                pools = self._pools[name]
+                sc_key = {"pk": "ksc", "pv": "vsc"}[dst_key]
+                if sc_key in pools:
+                    from repro.kernels.flash_attention.ops import (
+                        kv_scale_from_absmax,
+                        quantize_kv_write,
+                    )
+
+                    # per-page-per-head absmax; the zero padding past the
+                    # prompt neither raises it nor survives dequant
+                    scale = kv_scale_from_absmax(
+                        jnp.max(jnp.abs(paged.astype(jnp.float32)),
+                                axis=(-3, -1)),
+                        pools[dst_key].dtype)
+                    paged = quantize_kv_write(paged, scale[..., None, :],
+                                              pools[dst_key].dtype)
+                    sc = pools[sc_key]
+                    if info["scanned"]:
+                        sc = sc.at[:, pages_arr].set(scale)
+                    else:
+                        sc = sc.at[pages_arr].set(scale)
+                    pools[sc_key] = sc
+                pool = pools[dst_key]
                 if info["scanned"]:
                     pool = pool.at[:, pages_arr].set(paged)
                 else:
                     pool = pool.at[pages_arr].set(paged)
-                self._pools[name][dst_key] = pool
+                pools[dst_key] = pool
 
         meta: dict[str, Any] = {
             "length": length,
@@ -723,7 +794,20 @@ class PagedCacheManager:
     def retire(self, rid) -> None:
         freed = self.pool.release(rid)
         self._purge_keys(freed)
+        self._pop_scales(freed)
         del self._meta[rid]
+
+    def _pop_scales(self, freed: Sequence[int]) -> None:
+        """Reset freed pages' sidecar rows to the free-page sentinel: a
+        page's scale lives exactly as long as the page does."""
+        if not freed:
+            return
+        idx = jnp.asarray(list(freed), jnp.int32)
+        for name in self._groups:
+            pools = self._pools.get(name)
+            if pools and "ksc" in pools:
+                pools["ksc"] = _zero_scale_rows(pools["ksc"], idx)
+                pools["vsc"] = _zero_scale_rows(pools["vsc"], idx)
 
     # -- per-step batch composition ---------------------------------------------
 
@@ -750,9 +834,13 @@ class PagedCacheManager:
                 continue
             old, new = split
             for name in self._groups:
+                pools = self._pools[name]
                 for key in ("pk", "pv"):
-                    self._pools[name][key] = _copy_pool_page(
-                        self._pools[name][key], old, new)
+                    pools[key] = _copy_pool_page(pools[key], old, new)
+                if "ksc" in pools:
+                    # private copy dequantizes identically to the donor
+                    pools["ksc"] = _copy_scale_row(pools["ksc"], old, new)
+                    pools["vsc"] = _copy_scale_row(pools["vsc"], old, new)
             self.cow_splits += 1
 
     def batch(self, rids: list[Any], *, tokens: int = 1) -> dict:
@@ -816,7 +904,7 @@ class PagedCacheManager:
         rejected tokens)."""
         for name, info in self._groups.items():
             group = new_cache[name]
-            self._pools[name] = {"pk": group["pk"], "pv": group["pv"]}
+            self._pools[name] = self._pool_state(group)
             if info["ring"]:
                 axis = 1 if info["scanned"] else 0
                 for i, rid in enumerate(rids):
@@ -852,6 +940,7 @@ class PagedCacheManager:
         freed = self.pool.truncate(rid, self._slots_needed(new_length))
         if freed:
             self._purge_keys(freed)
+            self._pop_scales(freed)
         if "kv_pos" in m:
             kvp = m["kv_pos"]
             ar = jnp.arange(kvp.shape[-1], dtype=jnp.int32)
@@ -860,20 +949,35 @@ class PagedCacheManager:
 
     # -- introspection -----------------------------------------------------------
 
+    def _group_page_bytes(self, name: str, info: dict) -> int:
+        """Per-live-page bytes of one group across its layers: quantized
+        payload at the *pool* dtype plus the fp32 scale sidecar rows."""
+        pools = self._pools.get(name)
+        qdt = self._quant_dtype(info)
+        dtype = pools["pk"].dtype if pools else (qdt or info["dtype"])
+        quantized = ("ksc" in pools) if pools else qdt is not None
+        per_page = 2 * (self.page_size * info["kv_heads"] * info["head_dim"]
+                        * np.dtype(dtype).itemsize)
+        if quantized:
+            per_page += 2 * info["kv_heads"] * 4  # k + v fp32 scale rows
+        layers = info["n"] if info["scanned"] else 1
+        return layers * per_page
+
     def hbm_pool_bytes(self) -> int:
         """Allocated KV bytes: *distinct* live pages across every layer
-        pool — shared prefix pages count once."""
-        total = 0
-        for name, info in self._groups.items():
-            per_page = (self.page_size * info["kv_heads"] * info["head_dim"]
-                        * np.dtype(info["dtype"]).itemsize)
-            layers = info["n"] if info["scanned"] else 1
-            total += 2 * layers * per_page * self.pool.live_pages
-        return total
+        pool — shared prefix pages count once, quantized pools count their
+        narrow payload plus scale sidecars."""
+        return sum(self._group_page_bytes(name, info) * self.pool.live_pages
+                   for name, info in self._groups.items())
 
     def stats(self) -> dict[str, Any]:
         """Pool economics snapshot: distinct vs mapped pages (the gap is
-        the prefix-sharing saving), peak values, hit/split counters."""
+        the prefix-sharing saving), peak values, hit/split counters, and
+        the dtype-aware pool HBM footprint (benches consume these instead
+        of recomputing bytes by hand)."""
+        bytes_now = self.hbm_pool_bytes()
+        page_bytes = sum(self._group_page_bytes(name, info)
+                         for name, info in self._groups.items())
         return {
             "num_pages": self.pool.num_pages,
             "page_size": self.page_size,
@@ -883,7 +987,12 @@ class PagedCacheManager:
             "peak_mapped_pages": self.pool.peak_mapped,
             "prefix_hits": self.prefix_hits,
             "cow_splits": self.cow_splits,
-            "hbm_pool_bytes": self.hbm_pool_bytes(),
+            "hbm_pool_bytes": bytes_now,
+            "pool_hbm_bytes": bytes_now,
+            "peak_pool_hbm_bytes": page_bytes * self.pool.peak_live,
+            "page_hbm_bytes": page_bytes,
+            "cache_dtype": (np.dtype(self.cache_dtype).name
+                            if self.cache_dtype is not None else None),
         }
 
 
@@ -918,3 +1027,26 @@ def build_linear_pool(ks, vs, page_size: int, *, max_len: int | None = None,
             pv[p, : sl.stop - sl.start] = v[sl]
     tables = jnp.asarray(pool.table_rows(range(len(ks)), width))
     return jnp.asarray(pk), jnp.asarray(pv), tables, pool
+
+
+def quantize_linear_pool(pk, pv, cache_dtype: str):
+    """Quantize a `build_linear_pool` pool to (qpk, qpv, ksc, vsc): per-
+    page-per-head absmax scales ((P, K) fp32, 0.0 on all-zero free pages),
+    payload at the requested cache dtype.  Bench/kernel-test convenience —
+    serving pools quantize at write time inside Attention."""
+    from repro.kernels.flash_attention.ops import (
+        kv_scale_from_absmax,
+        quantize_kv_write,
+        resolve_cache_dtype,
+    )
+
+    dt = resolve_cache_dtype(cache_dtype)
+    if dt is None:
+        raise ValueError(f"not a quantized cache dtype: {cache_dtype!r}")
+    ksc = kv_scale_from_absmax(
+        jnp.max(jnp.abs(jnp.asarray(pk, jnp.float32)), axis=(-3, -1)), dt)
+    vsc = kv_scale_from_absmax(
+        jnp.max(jnp.abs(jnp.asarray(pv, jnp.float32)), axis=(-3, -1)), dt)
+    qpk = quantize_kv_write(pk, ksc[..., None, :], dt)
+    qpv = quantize_kv_write(pv, vsc[..., None, :], dt)
+    return qpk, qpv, ksc, vsc

@@ -47,6 +47,11 @@ class ServerConfig:
     # proposes per verify round; None/0 falls back to the woven
     # "speculative_draft_len" knob, then to plain one-token decode
     draft_len: int | None = None
+    # quantized page pool (serve_continuous): "int8" / "float8_e4m3fn" /
+    # "float8_e5m2" stores pk/pv quantized with per-page-per-KV-head scale
+    # sidecars; None falls back to the woven "flash_cache_dtype" knob, and
+    # fp names (the tuner's accuracy-fallback arm) mean: keep the fp pool
+    cache_dtype: str | None = None
 
 
 class Server:
@@ -121,6 +126,7 @@ class Server:
         self._paged_dtype = None
         self.last_pool_stats: dict[str, Any] | None = None  # serve_continuous
         self.last_spec_stats: dict[str, Any] | None = None  # speculative serve
+        self._last_admit_rescored = False  # last admission was a re-score
         self._verify_steps: dict[tuple, Callable] = {}  # (variant, S) -> fn
 
     def _variant(self) -> str | None:
@@ -240,6 +246,18 @@ class Server:
             or DEFAULT_PAGE_SIZE
         return max(1, min(int(ps), self.cfg.max_cache_len))
 
+    def _cache_dtype(self, state) -> str | None:
+        """Resolved pool-quantization dtype name: explicit config wins,
+        then the woven "flash_cache_dtype" knob.  Names outside CACHE_QMAX
+        (the tuner's fp fallback arm, e.g. "float16") mean unquantized."""
+        from repro.kernels.flash_attention.ops import CACHE_QMAX
+
+        name = self.cfg.cache_dtype or state.extra.get("flash_cache_dtype")
+        if name is None:
+            return None
+        name = str(name)
+        return name if name in CACHE_QMAX else None
+
     def _paged_admit(self, manager: PagedCacheManager, rid, prompt,
                      final_len: int, variant) -> int:
         """Admit one request into the page pool, prefilling *directly into
@@ -286,6 +304,7 @@ class Server:
                 if shared_len >= S:      # page-aligned prompt: drop a page
                     shared_pages = shared_pages[:-1]
                     shared_len -= ps
+        self._last_admit_rescored = shared_len >= S
         if shared_len >= S:
             manager.admit_shared(rid, toks_np, final_len=final_len,
                                  pages=shared_pages)
@@ -308,6 +327,22 @@ class Server:
             )
             manager.admit_finish(rid, new_cache, toks_np)
         return int(jnp.argmax(logits[0, -1], axis=-1))
+
+    def _admit_grouped(self, manager: PagedCacheManager, rid, prompt,
+                       final_len: int, first_tok: int) -> int | None:
+        """Identical-prompt group admission: the member's full prompt is
+        already pool-resident (its donor was just admitted through the
+        re-score path), so it maps the donor's pages and reuses the donor's
+        re-scored first token — the group shares ONE re-score step instead
+        of running one per member.  Returns None (caller falls back to a
+        full `_paged_admit`) if the prompt is no longer a full-prefix hit,
+        e.g. the donor's pages were retired between the scan and now."""
+        toks_np = np.asarray(prompt, np.int64).reshape(-1)
+        pages, shared_len = manager.match_prefix(toks_np)
+        if shared_len < toks_np.shape[0]:
+            return None
+        manager.admit_shared(rid, toks_np, final_len=final_len, pages=pages)
+        return int(first_tok)
 
     def _verify_step(self, variant, draft_len: int) -> Callable:
         """Compiled widened-q verify step (S = draft_len + 1 q tokens per
@@ -377,6 +412,9 @@ class Server:
                tuple(np.asarray(p).tobytes() for p in prompts), n)
         if k:  # spec serves memoize separately (same tokens, different stats)
             key = key + (int(k),)
+        cache_dtype = self._cache_dtype(self.woven.state)
+        if cache_dtype:  # quantized pools emit different (clipped) logits
+            key = key + (("cache_dtype", cache_dtype),)
         if self.memo is not None and self.memo.running:
             hit, out = self.memo.lookup(key)
             if hit:
@@ -399,6 +437,7 @@ class Server:
         )
         state.extra["cache_max_len"] = self.cfg.max_cache_len
         ps = page_size or self._page_size(state)
+        cache_dtype = self._cache_dtype(state)  # variant knobs win
 
         if k is None:
             k = int(state.extra.get("speculative_draft_len", 0) or 0)
@@ -425,7 +464,7 @@ class Server:
         manager = PagedCacheManager(
             pool_pages, ps, max_len=self.cfg.max_cache_len,
             window=getattr(self.woven.program.cfg, "attn_window", None),
-            prefix_sharing=share,
+            prefix_sharing=share, cache_dtype=cache_dtype,
         )
         # feedback observations are per-knob-setting: start a fresh window,
         # bucketed by batch size (a decode step's cost scales with the live
@@ -452,7 +491,7 @@ class Server:
                 max_len=self.cfg.max_cache_len,
                 window=getattr(draft_srv.woven.program.cfg,
                                "attn_window", None),
-                prefix_sharing=False,
+                prefix_sharing=False, cache_dtype=cache_dtype,
             )
 
         waiting = deque(range(len(prompts)))  # arrival order
@@ -465,9 +504,19 @@ class Server:
                  "proposed": 0, "accepted": 0, "emitted_spec": 0,
                  "draft_steps": 0, "verify_steps": 0, "decode_steps": 0}
 
-        def admit_one(rid) -> None:
-            tok = self._paged_admit(manager, rid, prompts[rid],
-                                    finals[rid], variant)
+        grouped = {"admissions": 0}  # identical-prompt shared re-scores
+
+        def admit_one(rid, reuse_from=None) -> None:
+            tok = None
+            if reuse_from is not None:
+                tok = self._admit_grouped(manager, rid, prompts[rid],
+                                          finals[rid],
+                                          outputs[reuse_from][0])
+                if tok is not None:
+                    grouped["admissions"] += 1
+            if tok is None:
+                tok = self._paged_admit(manager, rid, prompts[rid],
+                                        finals[rid], variant)
             outputs[rid] = [tok]
             active[rid] = {"tok": tok, "pos": lengths[rid]}
             if not spec["checked"]:
@@ -509,6 +558,21 @@ class Server:
                         return
                 admit_one(rid)
                 waiting.remove(rid)
+                if not (manager.prefix_sharing and waiting
+                        and self._last_admit_rescored):
+                    continue
+                # identical queued prompts admit as a group sharing the
+                # re-score that just ran: each member maps the same pages
+                # and reuses the donor's first token — one re-score step
+                # for the whole group instead of one per member
+                base = np.asarray(prompts[rid], np.int64).reshape(-1)
+                for cand in [c for c in waiting if np.array_equal(
+                        np.asarray(prompts[c], np.int64).reshape(-1), base)]:
+                    if len(active) >= max_batch or not manager.can_admit(
+                            finals[cand], tokens=prompts[cand]):
+                        break
+                    admit_one(cand, reuse_from=rid)
+                    waiting.remove(cand)
 
         admit_ready()
         while active or waiting:
@@ -623,6 +687,7 @@ class Server:
                     active[rid]["pos"] += 1
 
         self.last_pool_stats = manager.stats()
+        self.last_pool_stats["grouped_admissions"] = grouped["admissions"]
         if k:
             p = stats["proposed"]
             stats["acceptance"] = stats["accepted"] / p if p else 0.0

@@ -1,0 +1,572 @@
+"""Quantized paged KV cache (the PR 7 precision layer).
+
+Covers:
+  - the quantization primitives: full-grid scale resolution
+    (absmax / qmax), fixed-scale clipping writes, the 0.0 free-page
+    sentinel, fp knob values resolving to "keep the fp pool";
+  - in-kernel dequant parity: quantized paged / dense / widened-q
+    flash_decode matches the fp kernel run on the explicitly dequantized
+    values (the XLA `paged_gather_kv` path included);
+  - PagedCacheManager scale sidecars: rows live exactly as long as their
+    page (admit/retire/rollback), copy-on-write copies the donor's scale
+    row, ring pools stay fp, stats() reports dtype-aware pool bytes —
+    property-tested under random admit/share/CoW/rollback/retire churn;
+  - end-to-end int8 serving: shared == unshared, speculative == plain
+    greedy, identical waiting prompts grouped into one re-score;
+  - the weave path (cache_<dtype> precision policies -> the
+    "flash_cache_dtype" extra) and the accuracy-constrained dtype DSE
+    (error column persisted, tightened budget forces the fp fallback,
+    on-device rows keyed separately, runtime refinement keeps working
+    with the categorical dtype knob).
+"""
+
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from _hypothesis_compat import given, settings, st
+
+from repro.kernels.flash_attention.ops import (
+    CACHE_QMAX,
+    cache_qmax,
+    dequantize_kv,
+    flash_decode,
+    kv_scale_from_absmax,
+    paged_gather_kv,
+    quantize_kv_write,
+    resolve_cache_dtype,
+)
+from repro.runtime.pages import (
+    PagedCacheManager,
+    build_linear_pool,
+    cdiv,
+    quantize_linear_pool,
+)
+
+import jax
+
+
+def _server(arch, **cfg_kw):
+    from repro.configs.base import SHAPES
+    from repro.core.program import Program
+    from repro.launch.weave import default_weave
+    from repro.runtime.server import Server, ServerConfig
+
+    program = Program.from_arch(arch, kind="serve", reduced=True)
+    woven = default_weave(program, SHAPES["prefill_32k"], {})
+    return Server(woven, ServerConfig(max_cache_len=24, decode_tokens=4,
+                                      **cfg_kw))
+
+
+PROMPTS = [np.ones((5,), np.int32),
+           (np.arange(1, 9) % 50).astype(np.int32),
+           np.full((3,), 7, np.int32)]
+
+
+class TestQuantPrimitives:
+    def test_scale_spans_full_code_grid(self):
+        """The recorded scale is absmax/qmax — a raw absmax scale would
+        round every int8 code into {-1, 0, 1}."""
+        x = jnp.asarray(np.linspace(-3.0, 3.0, 64), jnp.float32)
+        scale = kv_scale_from_absmax(jnp.max(jnp.abs(x)), jnp.int8)
+        q = jnp.round(jnp.clip(x / scale, -127, 127))
+        assert float(jnp.max(jnp.abs(q))) == 127.0
+
+    @pytest.mark.parametrize("name", sorted(CACHE_QMAX))
+    def test_roundtrip_error_bounded_by_half_step(self, name):
+        dt = resolve_cache_dtype(name)
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((16, 2, 8)), jnp.float32)
+        absmax = jnp.max(jnp.abs(x), axis=(0, 2))  # per-head (K,)
+        scale = kv_scale_from_absmax(absmax, dt)
+        q = quantize_kv_write(x, scale[None, :], dt)
+        back = dequantize_kv(q, scale[None, :])
+        step = float(jnp.max(absmax)) / cache_qmax(name)
+        if name == "int8":
+            bound = step / 2 + 1e-6
+        else:  # fp grids are relative; e5m2's 2 mantissa bits are worst
+            bound = float(jnp.max(absmax)) / 8
+        assert float(jnp.max(jnp.abs(back - x))) <= bound
+
+    def test_zero_scale_sentinel_is_safe(self):
+        """scale == 0.0 marks a free page: the write path divides safely
+        (no NaN/inf) and the read path dequantizes the page to zeros."""
+        x = jnp.ones((4, 2, 8), jnp.float32)
+        q = quantize_kv_write(x, jnp.zeros((4, 2)), jnp.int8)
+        assert np.isfinite(np.asarray(q, np.float32)).all()
+        back = dequantize_kv(q, jnp.zeros((4, 2)))
+        assert not np.asarray(back).any()
+
+    def test_fp_names_resolve_to_none(self):
+        assert resolve_cache_dtype("float16") is None
+        assert resolve_cache_dtype("bfloat16") is None
+        assert resolve_cache_dtype(None) is None
+        assert resolve_cache_dtype("int8") == jnp.int8
+
+
+def _mixed_pool(dtype="int8", lengths=(5, 19, 32), ps=8, K=2, D=32):
+    rng = np.random.default_rng(11)
+    ks = [jnp.asarray(rng.standard_normal((L, K, D)), jnp.float32)
+          for L in lengths]
+    vs = [jnp.asarray(rng.standard_normal((L, K, D)), jnp.float32)
+          for L in lengths]
+    max_len = max(lengths)
+    pk, pv, tables, pool = build_linear_pool(ks, vs, ps, max_len=max_len)
+    qpk, qpv, ksc, vsc = quantize_linear_pool(pk, pv, dtype)
+    return pk, pv, qpk, qpv, ksc, vsc, tables, max_len, lengths
+
+
+class TestKernelDequantParity:
+    """The in-kernel dequant must match running the fp kernel on the
+    explicitly dequantized pool — same values, same block walk."""
+
+    def test_paged_matches_dequantized_pool(self):
+        (pk, pv, qpk, qpv, ksc, vsc, tables, max_len,
+         lengths) = _mixed_pool()
+        B, H, D = len(lengths), 4, pk.shape[-1]
+        q = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (B, 1, H, D)), jnp.float32)
+        index = jnp.asarray([L - 1 for L in lengths], jnp.int32)
+        dk = dequantize_kv(qpk, ksc[:, None, :])
+        dv = dequantize_kv(qpv, vsc[:, None, :])
+        out_q = flash_decode(q, qpk, qpv, index, tables=tables,
+                             kv_len=max_len, block_kv=8,
+                             k_scale=ksc, v_scale=vsc)
+        out_ref = flash_decode(q, dk, dv, index, tables=tables,
+                               kv_len=max_len, block_kv=8)
+        np.testing.assert_allclose(np.asarray(out_q), np.asarray(out_ref),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_widened_q_matches_dequantized_pool(self):
+        """The speculative verify tile (S > 1 q tokens) dequantizes the
+        same way — one launch scores the whole draft block."""
+        (pk, pv, qpk, qpv, ksc, vsc, tables, max_len,
+         lengths) = _mixed_pool(lengths=(13, 27, 32))
+        B, S, H, D = len(lengths), 3, 4, pk.shape[-1]
+        q = jnp.asarray(np.random.default_rng(1).standard_normal(
+            (B, S, H, D)), jnp.float32)
+        index = jnp.asarray([L - S for L in lengths], jnp.int32)
+        dk = dequantize_kv(qpk, ksc[:, None, :])
+        dv = dequantize_kv(qpv, vsc[:, None, :])
+        out_q = flash_decode(q, qpk, qpv, index, tables=tables,
+                             kv_len=max_len, block_kv=8,
+                             k_scale=ksc, v_scale=vsc)
+        out_ref = flash_decode(q, dk, dv, index, tables=tables,
+                               kv_len=max_len, block_kv=8)
+        np.testing.assert_allclose(np.asarray(out_q), np.asarray(out_ref),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_dense_scale_page_matches_dequantized(self):
+        """The dense (ring/linear stacked) layout carries (B, NP, K)
+        scales at `scale_page` granularity."""
+        B, T, H, K, D, sp = 2, 64, 4, 2, 32, 16
+        rng = np.random.default_rng(5)
+        k = jnp.asarray(rng.standard_normal((B, T, K, D)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, T, K, D)), jnp.float32)
+        q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
+        nk = k.reshape(B, T // sp, sp, K, D)
+        nv = v.reshape(B, T // sp, sp, K, D)
+        ksc = kv_scale_from_absmax(
+            jnp.max(jnp.abs(nk), axis=(2, 4)), jnp.int8)  # (B, NP, K)
+        vsc = kv_scale_from_absmax(jnp.max(jnp.abs(nv), axis=(2, 4)),
+                                   jnp.int8)
+        qk = quantize_kv_write(nk, ksc[:, :, None, :],
+                               jnp.int8).reshape(B, T, K, D)
+        qv = quantize_kv_write(nv, vsc[:, :, None, :],
+                               jnp.int8).reshape(B, T, K, D)
+        dk = dequantize_kv(qk.reshape(B, T // sp, sp, K, D),
+                           ksc[:, :, None, :]).reshape(B, T, K, D)
+        dv = dequantize_kv(qv.reshape(B, T // sp, sp, K, D),
+                           vsc[:, :, None, :]).reshape(B, T, K, D)
+        index = jnp.asarray([T - 1, T - 9], jnp.int32)
+        out_q = flash_decode(q, qk, qv, index, block_kv=16,
+                             k_scale=ksc, v_scale=vsc, scale_page=sp)
+        out_ref = flash_decode(q, dk, dv, index, block_kv=16)
+        np.testing.assert_allclose(np.asarray(out_q), np.asarray(out_ref),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_xla_gather_dequantizes(self):
+        (pk, pv, qpk, qpv, ksc, vsc, tables, max_len,
+         lengths) = _mixed_pool()
+        gk, gv = paged_gather_kv(qpk, qpv, tables, max_len,
+                                 k_scale=ksc, v_scale=vsc)
+        rk, rv = paged_gather_kv(dequantize_kv(qpk, ksc[:, None, :]),
+                                 dequantize_kv(qpv, vsc[:, None, :]),
+                                 tables, max_len)
+        np.testing.assert_allclose(np.asarray(gk), np.asarray(rk), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(gv), np.asarray(rv), atol=1e-6)
+
+
+# -- manager sidecars under churn ---------------------------------------------
+
+_PS, _MAXLEN, _K, _D = 8, 32, 2, 4
+
+
+def _admit_cache(rng, L):
+    k = rng.standard_normal((1, _MAXLEN, _K, _D))
+    v = rng.standard_normal((1, _MAXLEN, _K, _D))
+    k[:, L:] = 0.0
+    v[:, L:] = 0.0
+    return {"layers": {"k": jnp.asarray(k, jnp.float32),
+                       "v": jnp.asarray(v, jnp.float32),
+                       "index": jnp.full((1,), L, jnp.int32)}}
+
+
+def _assert_sidecar_invariants(mgr):
+    """A page's scale rows live exactly as long as the page: free pages
+    hold the 0.0 sentinel, every referenced page holds positive scales."""
+    free = set(mgr.pool._free)
+    for name in mgr._groups:
+        pools = mgr._pools.get(name)
+        if not pools or "ksc" not in pools:
+            continue
+        ksc = np.asarray(pools["ksc"])
+        vsc = np.asarray(pools["vsc"])
+        for p in range(mgr.pool.num_pages):
+            if p in free:
+                assert not ksc[p].any(), (p, ksc[p])
+                assert not vsc[p].any(), (p, vsc[p])
+            else:
+                assert (ksc[p] > 0).all(), (p, ksc[p])
+                assert (vsc[p] > 0).all(), (p, vsc[p])
+
+
+def _run_churn(ops):
+    """Drive admit / share / CoW / rollback / retire against an int8 pool,
+    checking the sidecar invariant after every op."""
+    mgr = PagedCacheManager(24, _PS, max_len=_MAXLEN, cache_dtype="int8")
+    rng = np.random.default_rng(0)
+    live: dict[int, int] = {}     # rid -> prompt length
+    shared: set[int] = set()
+    next_rid = 0
+    for code, arg in ops:
+        op = ("admit", "share", "cow", "rollback", "retire")[code % 5]
+        if op == "admit":
+            L = 3 + arg % (_MAXLEN - 3)
+            if not mgr.can_admit(L):
+                continue
+            mgr.admit(next_rid, _admit_cache(rng, L), final_len=L)
+            live[next_rid] = L
+            next_rid += 1
+        elif op == "share" and live:
+            donor = sorted(live)[arg % len(live)]
+            L = live[donor]
+            pages = list(mgr.pool.tables[donor])[:cdiv(L, _PS)]
+            toks = np.ones((L,), np.int64)
+            mgr.admit_shared(next_rid, toks, final_len=L, pages=pages)
+            live[next_rid] = L
+            shared.add(next_rid)
+            next_rid += 1
+        elif op == "cow" and shared:
+            rid = sorted(shared)[arg % len(shared)]
+            L = mgr._meta[rid]["length"]
+            # only a mid-page next slot lands in a (possibly shared) page
+            if L % _PS and L < _MAXLEN and mgr.pool.free_pages:
+                mgr._cow_for_write(rid)
+        elif op == "rollback" and live:
+            rid = sorted(live)[arg % len(live)]
+            new_len = max(1, live[rid] // 2)
+            mgr.rollback(rid, new_len)
+            live[rid] = new_len
+        elif op == "retire" and live:
+            rid = sorted(live)[arg % len(live)]
+            mgr.retire(rid)
+            del live[rid]
+            shared.discard(rid)
+        _assert_sidecar_invariants(mgr)
+    return mgr
+
+
+class TestManagerSidecars:
+    def test_rows_live_with_their_page(self):
+        rng = np.random.default_rng(1)
+        mgr = PagedCacheManager(8, _PS, max_len=_MAXLEN, cache_dtype="int8")
+        mgr.admit("a", _admit_cache(rng, 19), final_len=19)
+        pools = mgr._pools["layers"]
+        assert pools["pk"].dtype == jnp.int8
+        pages = list(mgr.pool.tables["a"])
+        ksc = np.asarray(pools["ksc"])
+        assert all((ksc[p] > 0).all() for p in pages)
+        _assert_sidecar_invariants(mgr)
+        mgr.retire("a")
+        assert not np.asarray(mgr._pools["layers"]["ksc"]).any()
+
+    def test_cow_copies_the_donor_scale_row(self):
+        rng = np.random.default_rng(2)
+        mgr = PagedCacheManager(8, _PS, max_len=_MAXLEN, cache_dtype="int8")
+        mgr.admit("a", _admit_cache(rng, 13), final_len=16)
+        tail = mgr.pool.tables["a"][-1]
+        mgr.admit_shared("b", np.ones((13,), np.int64), final_len=16,
+                         pages=list(mgr.pool.tables["a"]))
+        before = np.asarray(mgr._pools["layers"]["ksc"])[tail].copy()
+        mgr._cow_for_write("b")
+        assert mgr.cow_splits == 1
+        new_tail = mgr.pool.tables["b"][-1]
+        assert new_tail != tail
+        after = np.asarray(mgr._pools["layers"]["ksc"])
+        np.testing.assert_array_equal(after[new_tail], before)  # copied
+        np.testing.assert_array_equal(after[tail], before)      # untouched
+        _assert_sidecar_invariants(mgr)
+
+    def test_rollback_pops_truncated_scales(self):
+        rng = np.random.default_rng(4)
+        mgr = PagedCacheManager(8, _PS, max_len=_MAXLEN, cache_dtype="int8")
+        mgr.admit("a", _admit_cache(rng, 30), final_len=30)  # 4 pages
+        dropped = mgr.pool.tables["a"][1:]
+        mgr.rollback("a", 7)  # back to 1 page
+        ksc = np.asarray(mgr._pools["layers"]["ksc"])
+        assert all(not ksc[p].any() for p in dropped)
+        _assert_sidecar_invariants(mgr)
+
+    def test_ring_groups_stay_fp(self):
+        mgr = PagedCacheManager(8, _PS, max_len=_MAXLEN, window=16,
+                                cache_dtype="int8")
+        assert mgr._quant_dtype({"ring": True}) is None
+        assert mgr._quant_dtype({"ring": False}) == jnp.int8
+
+    def test_stats_report_dtype_aware_bytes(self):
+        rng = np.random.default_rng(6)
+        managers = {}
+        for name, dt in (("fp", None), ("q", "int8")):
+            mgr = PagedCacheManager(8, _PS, max_len=_MAXLEN, cache_dtype=dt)
+            mgr.admit("a", _admit_cache(rng, 19), final_len=19)
+            managers[name] = mgr.stats()
+        fp, q = managers["fp"], managers["q"]
+        assert fp["cache_dtype"] is None and q["cache_dtype"] == "int8"
+        # int8 payload + fp32 sidecars vs the fp32 pool
+        assert q["page_hbm_bytes"] == 2 * _PS * _K * _D + 2 * _K * 4
+        assert fp["page_hbm_bytes"] == 2 * _PS * _K * _D * 4
+        assert q["pool_hbm_bytes"] == q["live_pages"] * q["page_hbm_bytes"]
+        assert q["peak_pool_hbm_bytes"] == (q["peak_live_pages"]
+                                            * q["page_hbm_bytes"])
+
+    def test_deterministic_churn(self):
+        rng = np.random.default_rng(42)
+        for _ in range(4):
+            ops = [(int(rng.integers(0, 5)), int(rng.integers(0, 10 ** 6)))
+                   for _ in range(20)]
+            _run_churn(ops)
+
+    @given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 10 ** 6)),
+                    min_size=1, max_size=20))
+    @settings(max_examples=20, deadline=None)
+    def test_churn_property(self, ops):
+        _run_churn(ops)
+
+
+class TestQuantizedServing:
+    def test_shared_equals_unshared_int8(self):
+        """Shared pages hold exactly the bytes an exclusive admission
+        would have written — fixed first-write scales, never requantized —
+        so prefix sharing stays bit-invisible under quantization."""
+        srv = _server("yi-6b", cache_dtype="int8")
+        base = (np.arange(1, 17) % 40 + 1).astype(np.int32)
+        prompts = [np.concatenate([base, np.array([21, 22], np.int32)]),
+                   np.concatenate([base, np.array([31], np.int32)])]
+        out_s = srv.serve_continuous(prompts, page_size=8)
+        assert srv.last_pool_stats["cache_dtype"] == "int8"
+        assert srv.last_pool_stats["prefix_hits"] > 0
+        out_u = srv.serve_continuous(prompts, page_size=8,
+                                     prefix_sharing=False)
+        for a, b in zip(out_s, out_u):
+            np.testing.assert_array_equal(a, b)
+
+    def test_speculative_equals_plain_greedy_int8(self):
+        """Draft, verify and plain decode all read the same quantized
+        pages at the same recorded scales — rollback frees pages without
+        requantizing survivors, so speculation stays bit-exact."""
+        srv = _server("yi-6b", cache_dtype="int8")
+        spec = srv.serve_continuous(PROMPTS, page_size=8, draft_len=2)
+        assert srv.last_pool_stats["cache_dtype"] == "int8"
+        plain = srv.serve_continuous(PROMPTS, page_size=8)
+        for s, p in zip(spec, plain):
+            np.testing.assert_array_equal(s, p)
+
+    def test_fp_knob_value_keeps_the_fp_pool(self):
+        srv = _server("yi-6b", cache_dtype="float16")
+        srv.serve_continuous(PROMPTS, page_size=8)
+        assert srv.last_pool_stats["cache_dtype"] is None
+
+    def test_woven_extra_selects_the_pool_dtype(self):
+        srv = _server("yi-6b")
+        srv.woven.state.extra["flash_cache_dtype"] = "int8"
+        srv.serve_continuous(PROMPTS, page_size=8)
+        assert srv.last_pool_stats["cache_dtype"] == "int8"
+
+    def test_identical_waiting_prompts_grouped_into_one_rescore(self):
+        """Satellite: N identical waiting prompts admit off a single
+        re-score — one rescore dispatch, the rest ride its logits."""
+        srv = _server("yi-6b")
+        A = (np.arange(1, 10) % 23 + 1).astype(np.int32)
+        prompts = [A, A.copy(), A.copy()]
+        out = srv.serve_continuous(prompts, page_size=8)
+        rescores = sum(srv.rescore_vc.dispatch_counts.values())
+        assert rescores == 1, srv.rescore_vc.dispatch_counts
+        assert srv.last_pool_stats["grouped_admissions"] == 1
+        ref = srv.serve_continuous(prompts, page_size=8,
+                                   prefix_sharing=False)
+        for a, b in zip(out, ref):
+            np.testing.assert_array_equal(a, b)
+
+
+class TestPrecisionWeave:
+    def test_cache_policy_name_parses(self):
+        from repro.nn.dtypes import DTypePolicy
+
+        pol = DTypePolicy.make("cache_int8")
+        assert pol.cache_dtype == "int8"
+        assert DTypePolicy.make("half").cache_dtype is None
+
+    def test_change_precision_weaves_cache_extra(self):
+        from repro.core.program import Program
+        from repro.core.strategies.precision import ChangePrecision
+        from repro.core.weaver import Weaver
+
+        program = Program.from_arch("gemma-2b", reduced=True)
+        woven = Weaver(program).weave([ChangePrecision("*", "cache_int8")])
+        assert woven.state.extra["flash_cache_dtype"] == "int8"
+        # storage-only: no compute policy override was installed
+        assert len(woven.state.policies.entries) == 1  # the "*" default
+
+    def test_mixed_versions_include_cache_variants(self):
+        from repro.core.program import Program
+        from repro.core.strategies.precision import MixedPrecisionVersions
+        from repro.core.weaver import Weaver
+
+        program = Program.from_arch("gemma-2b", reduced=True)
+        aspect = MixedPrecisionVersions(["*"],
+                                        policies=("float", "cache_int8"))
+        woven = Weaver(program).weave([aspect])
+        cache_states = [
+            woven.variant_state(n) for n in aspect.generated
+            if woven.variant_state(n).extra.get("flash_cache_dtype")
+        ]
+        assert cache_states
+        assert cache_states[0].extra["flash_cache_dtype"] == "int8"
+
+
+def _stub_measures(err_by_dtype):
+    def measure(**kn):
+        return 1.0
+
+    def error(**kn):
+        return err_by_dtype.get(str(kn["cache_dtype"]), 0.0)
+
+    return measure, error
+
+
+class TestQuantizedCacheDSE:
+    def _sig(self):
+        from repro.autotune.kernel_tuner import quantized_cache_signature
+
+        return quantized_cache_signature(2, 256, 4, 2, 64, "float32")
+
+    def _tune(self, tmp_path, err=None, budget=0.05):
+        from repro.autotune.kernel_tuner import (
+            KernelTuner,
+            tune_quantized_cache,
+        )
+
+        tuner = KernelTuner(str(tmp_path / "q.json"))
+        measure, error = _stub_measures(
+            err or {"int8": 0.02, "float8_e4m3fn": 0.2, "float8_e5m2": 0.2})
+        sig = self._sig()
+        knobs = tune_quantized_cache(sig, error_budget=budget, tuner=tuner,
+                                     measure=measure, error_measure=error)
+        return tuner, sig, knobs
+
+    def test_space_has_the_dtype_knob(self):
+        from repro.autotune.kernel_tuner import KERNEL_SPACES
+
+        space = KERNEL_SPACES["quantized_cache"]
+        assert "float16" in space["cache_dtype"]
+        assert "int8" in space["cache_dtype"]
+
+    def test_dse_persists_error_column_and_picks_capacity(self, tmp_path):
+        tuner, sig, knobs = self._tune(tmp_path)
+        # int8 halves pool bytes and fits the budget -> beats float16
+        assert knobs["cache_dtype"] == "int8"
+        entry = tuner.cache.get(tuner._key(sig))
+        assert entry["error_budget"] == 0.05
+        assert entry["device"] == "interpret"
+        for row in entry["ops"]:
+            assert "max_logit_err" in row["metrics"]
+            assert "tokens_per_hbm_byte" in row["metrics"]
+
+    def test_pool_bytes_model_favours_int8(self):
+        from repro.autotune.kernel_tuner import quantized_pool_bytes
+
+        sig = self._sig()
+        kn = {"page_size": 128, "block_kv_dec": 128}
+        b_fp = quantized_pool_bytes(sig, {**kn, "cache_dtype": "float16"})
+        b_q = quantized_pool_bytes(sig, {**kn, "cache_dtype": "int8"})
+        assert b_q / b_fp <= 0.55
+
+    def test_tightened_budget_forces_fp_fallback(self, tmp_path):
+        from repro.autotune.kernel_tuner import select_cache_knobs
+
+        tuner, sig, knobs = self._tune(tmp_path)
+        assert knobs["cache_dtype"] == "int8"
+        tight = select_cache_knobs(sig, error_budget=1e-6, tuner=tuner)
+        assert tight["cache_dtype"] == "float16"
+        entry = tuner.cache.get(tuner._key(sig))
+        assert entry["error_budget"] == 1e-6  # persisted with the re-pick
+        back = select_cache_knobs(sig, error_budget=0.05, tuner=tuner)
+        assert back["cache_dtype"] == "int8"
+
+    def test_untuned_signature_selects_none(self, tmp_path):
+        from repro.autotune.kernel_tuner import (
+            KernelTuner,
+            select_cache_knobs,
+        )
+
+        tuner = KernelTuner(str(tmp_path / "none.json"))
+        assert select_cache_knobs(self._sig(), error_budget=0.05,
+                                  tuner=tuner) is None
+
+    def test_on_device_rows_key_separately(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_TUNER_ON_DEVICE", "1")
+        tuner, sig, knobs = self._tune(tmp_path)
+        dev = str(jax.default_backend())
+        assert tuner._key(sig).endswith(f"@{dev}")
+        entry = tuner.cache.get(tuner._key(sig))
+        assert entry["device"] == dev
+        monkeypatch.delenv("REPRO_TUNER_ON_DEVICE")
+        # interpret lookups never see the on-device row
+        assert tuner.lookup(sig) is None
+
+    def test_runtime_refinement_keeps_categorical_knobs(self, tmp_path):
+        from repro.autotune.kernel_tuner import refine_from_runtime
+
+        tuner, sig, knobs = self._tune(tmp_path)
+        refined = refine_from_runtime(sig, {"latency_s": 2.0}, tuner=tuner)
+        assert isinstance(refined["cache_dtype"], str)
+        entry = tuner.cache.get(tuner._key(sig))
+        assert entry["error_budget"] == 0.05  # extra columns survive
+        assert "runtime" in entry
+
+    def test_tuned_aspect_weaves_cache_dtype_extra(self, tmp_path,
+                                                   monkeypatch):
+        from repro.autotune.kernel_tuner import (
+            KernelTuner,
+            tune_quantized_cache,
+        )
+        from repro.core.program import Program
+        from repro.core.strategies.kernels import TunedKernelAspect
+        from repro.core.weaver import Weaver
+
+        path = str(tmp_path / "weave.json")
+        monkeypatch.setenv("REPRO_TUNER_CACHE", path)
+        program = Program.from_arch("gemma-2b", reduced=True)
+        aspect = TunedKernelAspect(2, 256, dtype="bfloat16", cache_len=256)
+        sig = aspect.quantized_signature(program.cfg)
+        measure, error = _stub_measures({"int8": 0.01})
+        tune_quantized_cache(sig, tuner=KernelTuner(path), measure=measure,
+                             error_measure=error)
+        woven = Weaver(program).weave([aspect])
+        assert woven.state.extra["flash_cache_dtype"] == "int8"
+        assert "flash_cache_dtype" in woven.knobs
+        assert woven.knobs["flash_cache_dtype"].default == "int8"
