@@ -16,6 +16,7 @@ BENCH_kernels.json: pruned-vs-dense grid + tuned-vs-default blocks).
   prefix_cache       (kernels)    shared-prefix pool pages + direct-to-pool prefill
   speculative        (kernels)    draft/verify loop vs plain greedy + streamed-KV oracle
   quantized_cache    (kernels)    int8/fp8 pool HBM + logits error + dtype DSE
+  robustness         (serving)    single-fault sweep: recovery/parity/audit/goodput
   roofline_report    §Roofline    table from dry-run artifacts
 
 Flags:
@@ -37,7 +38,7 @@ ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
 QUICK_MODULES = ("weaving", "kernels", "flash_bwd", "flash_decode",
                  "paged_decode", "prefix_cache", "speculative",
-                 "quantized_cache")
+                 "quantized_cache", "robustness")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -60,6 +61,7 @@ def main(argv: list[str] | None = None) -> None:
         precision_versions,
         prefix_cache,
         quantized_cache,
+        robustness,
         roofline_report,
         speculative,
         weaving,
@@ -67,7 +69,8 @@ def main(argv: list[str] | None = None) -> None:
 
     modules = [weaving, precision_versions, kernels, flash_bwd, flash_decode,
                paged_decode, prefix_cache, speculative, quantized_cache,
-               betweenness, docking_dse, navigation_autotune, roofline_report]
+               robustness, betweenness, docking_dse, navigation_autotune,
+               roofline_report]
     if args.only:
         names = {n.strip() for n in args.only.split(",")}
         modules = [m for m in modules
@@ -78,8 +81,8 @@ def main(argv: list[str] | None = None) -> None:
                               (weaving, precision_versions, kernels,
                                flash_bwd, flash_decode, paged_decode,
                                prefix_cache, speculative, quantized_cache,
-                               betweenness, docking_dse, navigation_autotune,
-                               roofline_report))
+                               robustness, betweenness, docking_dse,
+                               navigation_autotune, roofline_report))
             ap.error(f"--only {args.only!r} matches no benchmark; "
                      f"valid names: {valid}")
     elif args.quick:

@@ -28,26 +28,70 @@ from repro.monitor.examon import ExamonBroker
 
 
 class Watchdog:
+    """Per-step deadline on a single reused timer thread.
+
+    `beat()` re-arms one monotonic deadline instead of spawning a fresh
+    `threading.Timer` per step (the old shape leaked a thread per beat and
+    left a cancel/fire race: a Timer already past `cancel()`'s check could
+    still run `_fire` and count a phantom timeout).  Here the expiry test,
+    the timeout count and every re-arm/cancel happen under one lock, so a
+    beat or cancel that lands before expiry always wins — a late wake-up
+    observes the moved/cleared deadline and goes back to waiting.  The
+    callback runs outside the lock (it may beat/cancel re-entrantly).
+    """
+
     def __init__(self, deadline_s: float, on_timeout: Callable[[], None]):
         self.deadline_s = deadline_s
         self.on_timeout = on_timeout
-        self._timer: threading.Timer | None = None
         self.timeouts = 0
+        self._cond = threading.Condition()
+        self._deadline: float | None = None  # monotonic; None = disarmed
+        self._closed = False
+        self._thread: threading.Thread | None = None
 
     def beat(self) -> None:
-        self.cancel()
-        self._timer = threading.Timer(self.deadline_s, self._fire)
-        self._timer.daemon = True
-        self._timer.start()
-
-    def _fire(self) -> None:
-        self.timeouts += 1
-        self.on_timeout()
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("watchdog is closed")
+            self._deadline = time.monotonic() + self.deadline_s
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._run, name="watchdog", daemon=True)
+                self._thread.start()
+            self._cond.notify()
 
     def cancel(self) -> None:
-        if self._timer is not None:
-            self._timer.cancel()
-            self._timer = None
+        with self._cond:
+            self._deadline = None
+            self._cond.notify()
+
+    def close(self) -> None:
+        """Disarm and stop the timer thread (idempotent)."""
+        with self._cond:
+            self._deadline = None
+            self._closed = True
+            self._cond.notify()
+        if self._thread is not None and self._thread is not threading.current_thread():
+            self._thread.join(timeout=1.0)
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                if self._closed:
+                    return
+                if self._deadline is None:
+                    self._cond.wait()
+                    continue
+                wait = self._deadline - time.monotonic()
+                if wait > 0:
+                    self._cond.wait(wait)
+                    continue
+                # expired while holding the lock: no beat/cancel can have
+                # moved the deadline between the check and the count
+                self._deadline = None
+                self.timeouts += 1
+                cb = self.on_timeout
+            cb()
 
 
 # ---------------------------------------------------------------------------

@@ -797,6 +797,19 @@ class PagedCacheManager:
         self._pop_scales(freed)
         del self._meta[rid]
 
+    def abort(self, rid) -> None:
+        """Best-effort rollback of a partial admission (or a forced
+        eviction): release the request's pages if it holds any and drop
+        its meta — idempotent, so fault-isolation paths can call it
+        without knowing how far the admission got.  Freed pages leave the
+        prefix index and their scale-sidecar rows reset to the free-page
+        sentinel, exactly as `retire` would."""
+        if rid in self.pool.tables:
+            freed = self.pool.release(rid)
+            self._purge_keys(freed)
+            self._pop_scales(freed)
+        self._meta.pop(rid, None)
+
     def _pop_scales(self, freed: Sequence[int]) -> None:
         """Reset freed pages' sidecar rows to the free-page sentinel: a
         page's scale lives exactly as long as the page does."""
@@ -994,6 +1007,151 @@ class PagedCacheManager:
             "cache_dtype": (np.dtype(self.cache_dtype).name
                             if self.cache_dtype is not None else None),
         }
+
+
+# ---------------------------------------------------------------------------
+# Invariant auditing (fault-isolation debug barrier)
+# ---------------------------------------------------------------------------
+
+
+class PoolInvariantError(RuntimeError):
+    """A pool/manager invariant does not hold — state corruption caught at
+    the barrier where it happened, not three steps later."""
+
+
+class PoolAuditor:
+    """Invariant checker over a PagePool (and optionally the manager that
+    owns it).  Run at retire/rollback barriers under the `pool_audit`
+    debug knob: every check is host-side bookkeeping except the
+    scale-sidecar sentinel check, which is gated separately because it
+    forces a device transfer.
+
+    Invariants:
+      * refcount conservation — every page's refcount equals the number
+        of table entries mapping it, across all live tables;
+      * free/referenced disjointness — no page is both on the free list
+        and referenced (and the free list holds no duplicates);
+      * conservation — free + distinct referenced pages partition the
+        pool exactly;
+      * table liveness — every table entry is a valid page id with
+        refcount >= 1, and no table maps the same page at two logical
+        positions;
+      * manager consistency — tables and per-request meta cover the same
+        request ids, each table spans the pages its live length needs and
+        never exceeds its `final_len` reservation, and every prefix-index
+        entry points at a live page;
+      * scale-sidecar consistency (`check_device=True`) — free pages'
+        quantization scale rows sit at the 0.0 free-page sentinel.
+    """
+
+    def __init__(self, target: "PagePool | PagedCacheManager", *,
+                 check_device: bool = False):
+        if isinstance(target, PagedCacheManager):
+            self.manager: PagedCacheManager | None = target
+            self.pool = target.pool
+        else:
+            self.manager = None
+            self.pool = target
+        self.check_device = check_device
+
+    def _fail(self, violations: list[str]) -> None:
+        if violations:
+            raise PoolInvariantError(
+                "pool invariant violation(s): " + "; ".join(violations))
+
+    def audit(self) -> dict[str, Any]:
+        """Check every invariant; raises PoolInvariantError on the first
+        audit with violations, returns a summary dict otherwise."""
+        pool = self.pool
+        bad: list[str] = []
+        free = list(pool._free)
+        free_set = set(free)
+        if len(free) != len(free_set):
+            bad.append("free list holds duplicate pages")
+        mapped: dict[int, int] = {}
+        for rid, table in pool.tables.items():
+            seen_here: set[int] = set()
+            for logical, p in enumerate(table):
+                if not (0 <= p < pool.num_pages):
+                    bad.append(f"table {rid!r}[{logical}] = {p} out of range")
+                    continue
+                if p in seen_here:
+                    bad.append(f"table {rid!r} maps page {p} twice")
+                seen_here.add(p)
+                mapped[p] = mapped.get(p, 0) + 1
+        for p in range(pool.num_pages):
+            refs = pool._refs[p]
+            n_mapped = mapped.get(p, 0)
+            if refs != n_mapped:
+                bad.append(
+                    f"page {p}: refcount {refs} != {n_mapped} table entries")
+            if p in free_set and refs > 0:
+                bad.append(f"page {p} both free and referenced ({refs})")
+            if p not in free_set and refs == 0:
+                bad.append(f"page {p} neither free nor referenced (leak)")
+        if len(free_set) + len(mapped) != pool.num_pages:
+            bad.append(
+                f"conservation: {len(free_set)} free + {len(mapped)} live "
+                f"!= {pool.num_pages} pages")
+        checks = 4
+        if self.manager is not None:
+            checks += self._audit_manager(bad)
+        self._fail(bad)
+        return {"checks": checks, "live_pages": len(mapped),
+                "free_pages": len(free_set),
+                "requests": len(pool.tables)}
+
+    def _audit_manager(self, bad: list[str]) -> int:
+        mgr = self.manager
+        pool = self.pool
+        if set(pool.tables) != set(mgr._meta):
+            bad.append(
+                f"tables {sorted(map(repr, pool.tables))} != meta "
+                f"{sorted(map(repr, mgr._meta))}")
+        for rid, meta in mgr._meta.items():
+            table = pool.tables.get(rid)
+            if table is None:
+                continue
+            if mgr._groups:
+                need = mgr._slots_needed(meta["length"])
+                cap = mgr._slots_needed(meta["final_len"])
+                if len(table) < need:
+                    bad.append(
+                        f"table {rid!r} holds {len(table)} pages, live "
+                        f"length {meta['length']} needs {need}")
+                if len(table) > cap:
+                    bad.append(
+                        f"table {rid!r} holds {len(table)} pages past its "
+                        f"final_len reservation ({cap})")
+        for key, page in mgr._prefix_index.items():
+            if not (0 <= page < pool.num_pages) or pool._refs[page] <= 0:
+                bad.append(f"prefix key {key[:2]} maps dead page {page}")
+        checks = 3
+        if self.check_device:
+            checks += self._audit_sidecars(bad)
+        return checks
+
+    def _audit_sidecars(self, bad: list[str]) -> int:
+        mgr = self.manager
+        free = sorted(self.pool._free)
+        if not free:
+            return 1
+        for name in mgr._groups:
+            pools = mgr._pools.get(name)
+            if not pools or "ksc" not in pools:
+                continue
+            for key in ("ksc", "vsc"):
+                rows = np.asarray(pools[key])[..., free, :]
+                if np.any(rows != 0.0):
+                    bad.append(
+                        f"group {name!r} {key} sidecar: free pages hold "
+                        "non-sentinel scales")
+        return 1
+
+
+def audit_pool(target, **kwargs) -> dict[str, Any]:
+    """One-shot invariant audit — `PoolAuditor(target).audit()`."""
+    return PoolAuditor(target, **kwargs).audit()
 
 
 # ---------------------------------------------------------------------------

@@ -18,12 +18,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.strategies.resilience import (
+    DEFAULT_POLICY,
+    FaultError,
+    NonFiniteLogits,
+)
 from repro.core.weaver import WovenProgram
+from repro.distributed.fault import Watchdog
 from repro.memo.table import MemoTable
 from repro.monitor.examon import ExamonBroker, get_default_broker
 from repro.monitor.sensors import apply_wrappers
 from repro.nn.module import init_params
-from repro.runtime.pages import PagedCacheManager, cdiv, paged_compatible
+from repro.runtime.pages import (
+    PagedCacheManager,
+    PoolAuditor,
+    PoolExhausted,
+    cdiv,
+    paged_compatible,
+)
 from repro.runtime.steps import (
     build_decode_step,
     build_paged_prefill_step,
@@ -52,6 +64,13 @@ class ServerConfig:
     # sidecars; None falls back to the woven "flash_cache_dtype" knob, and
     # fp names (the tuner's accuracy-fallback arm) mean: keep the fp pool
     cache_dtype: str | None = None
+    # resilience (serve_continuous): per-request SLO, bounded retry budget
+    # around transient step faults, and PoolAuditor barriers; None falls
+    # back to the woven "serve_resilience" policy (ResilienceAspect), then
+    # to resilience.DEFAULT_POLICY
+    deadline_s: float | None = None
+    retries: int | None = None
+    pool_audit: bool | None = None
 
 
 class Server:
@@ -126,6 +145,8 @@ class Server:
         self._paged_dtype = None
         self.last_pool_stats: dict[str, Any] | None = None  # serve_continuous
         self.last_spec_stats: dict[str, Any] | None = None  # speculative serve
+        self.last_fault_stats: dict[str, Any] | None = None  # resilience layer
+        self.last_outcomes: list[dict[str, Any]] | None = None  # per request
         self._last_admit_rescored = False  # last admission was a re-score
         self._verify_steps: dict[tuple, Callable] = {}  # (variant, S) -> fn
 
@@ -258,8 +279,22 @@ class Server:
         name = str(name)
         return name if name in CACHE_QMAX else None
 
+    def _resilience(self, state) -> dict[str, Any]:
+        """Resolved recovery policy: resilience.DEFAULT_POLICY under the
+        woven "serve_resilience" extra (ResilienceAspect), with explicit
+        ServerConfig fields winning."""
+        pol = dict(DEFAULT_POLICY)
+        pol.update(state.extra.get("serve_resilience") or {})
+        if self.cfg.deadline_s is not None:
+            pol["deadline_s"] = float(self.cfg.deadline_s)
+        if self.cfg.retries is not None:
+            pol["retries"] = int(self.cfg.retries)
+        if self.cfg.pool_audit is not None:
+            pol["pool_audit"] = bool(self.cfg.pool_audit)
+        return pol
+
     def _paged_admit(self, manager: PagedCacheManager, rid, prompt,
-                     final_len: int, variant) -> int:
+                     final_len: int, variant, inj=None) -> tuple[int, Any]:
         """Admit one request into the page pool, prefilling *directly into
         pool pages*, and return its first output token.
 
@@ -272,6 +307,12 @@ class Server:
         Peak HBM per admission is O(live prompt tokens) for one layer
         at a time — only the non-shared suffix is *computed* — never the
         all-layer dense O(max_len) cache the packing path used to build.
+
+        Returns (first token, fired "paged_prefill" fault spec or None) —
+        the join point consults `inj` (a woven FaultInjector) right before
+        the dispatch, and the first-token logits are checked finite: a
+        NaN/Inf admission rolls its partial pool state back and raises
+        `NonFiniteLogits` for the caller's structured-rejection path.
         """
         toks = jnp.asarray(prompt, jnp.int32).reshape(1, -1)
         toks_np = np.asarray(prompt, np.int64).reshape(-1)
@@ -305,6 +346,11 @@ class Server:
                     shared_pages = shared_pages[:-1]
                     shared_len -= ps
         self._last_admit_rescored = shared_len >= S
+        # "paged_prefill" join point fires before any pool allocation, so a
+        # raise-kind fault leaves nothing to roll back (the caller's abort
+        # is then a no-op); a nan-kind poisons the logits below, driving
+        # the same non-finite detector a real NaN would hit
+        spec = inj.fire("paged_prefill", rid=rid) if inj is not None else None
         if shared_len >= S:
             manager.admit_shared(rid, toks_np, final_len=final_len,
                                  pages=shared_pages)
@@ -326,7 +372,14 @@ class Server:
                 view, prefix_len=start,
             )
             manager.admit_finish(rid, new_cache, toks_np)
-        return int(jnp.argmax(logits[0, -1], axis=-1))
+        if spec is not None and spec.kind == "nan_logits":
+            logits = jnp.full_like(logits, jnp.nan)
+        if not bool(np.isfinite(float(
+                jnp.max(logits[0, -1].astype(jnp.float32))))):
+            manager.abort(rid)
+            raise NonFiniteLogits(
+                f"non-finite prefill logits for request {rid!r}")
+        return int(jnp.argmax(logits[0, -1], axis=-1)), spec
 
     def _admit_grouped(self, manager: PagedCacheManager, rid, prompt,
                        final_len: int, first_tok: int) -> int | None:
@@ -367,7 +420,10 @@ class Server:
                          max_batch: int | None = None,
                          prefix_sharing: bool | None = None,
                          draft_len: int | None = None,
-                         draft: "Server | None" = None) -> list[np.ndarray]:
+                         draft: "Server | None" = None,
+                         fault_injector=None,
+                         deadline_s: float | None = None,
+                         pool_audit: bool | None = None) -> list[np.ndarray]:
         """Continuous batching over a prefix-shared paged KV-cache pool.
 
         Unlike `serve_batch` — which prefils everything up front, pads
@@ -403,6 +459,18 @@ class Server:
         the draft only changes how many target steps it takes.  Ring
         pools fall back to plain decode (eviction breaks the widened
         mask); acceptance stats land in `last_spec_stats`.
+
+        Resilience (woven ResilienceAspect, or the `fault_injector` /
+        `deadline_s` / `pool_audit` arguments): faults are isolated
+        per-request instead of killing the serve.  Failed or oversized
+        admissions get structured `last_outcomes` entries; NaN/Inf logits
+        quarantine only the victim (its pages retire, the batch re-forms);
+        draft faults degrade speculation to plain decode; overdue requests
+        retire with partial output and a `deadline_exceeded` marker;
+        transient step faults retry with bounded backoff.  Survivors'
+        tokens stay bit-identical to a fault-free serve, and
+        `last_fault_stats` / ExaMon `serve/fault/*` topics record every
+        event (zero events when nothing is woven).
         """
         if not prompts:
             return []
@@ -415,7 +483,18 @@ class Server:
         cache_dtype = self._cache_dtype(self.woven.state)
         if cache_dtype:  # quantized pools emit different (clipped) logits
             key = key + (("cache_dtype", cache_dtype),)
-        if self.memo is not None and self.memo.running:
+        # armed fault injection and deadline policies make a serve
+        # non-reproducible from its prompt key alone (the memo key carries
+        # no pool geometry or fault schedule): bypass the memo entirely —
+        # a hit would skip every join point, an update would poison the
+        # table with fault-shaped outputs
+        pre_inj = fault_injector if fault_injector is not None \
+            else self.woven.state.extra.get("fault_injector")
+        pre_deadline = deadline_s if deadline_s is not None \
+            else self._resilience(self.woven.state)["deadline_s"]
+        memo_ok = (pre_inj is None or not pre_inj.armed) \
+            and pre_deadline is None
+        if memo_ok and self.memo is not None and self.memo.running:
             hit, out = self.memo.lookup(key)
             if hit:
                 # a memo hit serves no decode steps and builds no pool:
@@ -429,6 +508,8 @@ class Server:
                 self._paged_dtype = None
                 self.last_pool_stats = None
                 self.last_spec_stats = None
+                self.last_fault_stats = None
+                self.last_outcomes = None
                 return out
         t0 = time.perf_counter()
         variant = self._variant()
@@ -438,6 +519,13 @@ class Server:
         state.extra["cache_max_len"] = self.cfg.max_cache_len
         ps = page_size or self._page_size(state)
         cache_dtype = self._cache_dtype(state)  # variant knobs win
+        res = self._resilience(state)
+        if deadline_s is not None:
+            res["deadline_s"] = float(deadline_s)
+        if pool_audit is not None:
+            res["pool_audit"] = bool(pool_audit)
+        inj = fault_injector if fault_injector is not None \
+            else state.extra.get("fault_injector")
 
         if k is None:
             k = int(state.extra.get("speculative_draft_len", 0) or 0)
@@ -506,7 +594,144 @@ class Server:
 
         grouped = {"admissions": 0}  # identical-prompt shared re-scores
 
+        # -- resilience machinery ---------------------------------------------
+        # every fault the policy can absorb lands in `outcome` / `actions`
+        # instead of escaping serve_continuous; with no injector woven and
+        # no deadline policy this layer is pass-through and serving is
+        # bit-identical to the fault-free path
+        outcome = {r: {"status": "ok", "reason": None}
+                   for r in range(len(prompts))}
+        actions: list[dict] = []  # recovery actions taken (host side)
+        inj_seen = len(inj.events) if inj is not None else 0
+        fstats = {"retries": 0, "quarantined": 0, "rejected": 0,
+                  "oversized": 0, "deadline_exceeded": 0, "failed": 0,
+                  "degraded": None, "audits": 0, "watchdog_timeouts": 0}
+        start_t: dict[int, float] = {}     # admission wall clock per request
+        forced_deadline: set[int] = set()  # injected SLO overruns
+        deadline_s_eff = res["deadline_s"]
+        retries_max = int(res["retries"])
+        backoff_s = float(res["backoff_s"])
+        watchdog: Watchdog | None = None
+        if res["step_deadline_s"]:
+            watchdog = Watchdog(
+                float(res["step_deadline_s"]),
+                lambda: actions.append({"point": "decode_step",
+                                        "kind": "watchdog_overrun"}))
+
+        class _StepAbort(Exception):
+            """A step failed past the retry budget (or non-transiently):
+            the serve drains with structured `failed` outcomes instead of
+            letting the exception escape."""
+
+            def __init__(self, point, cause):
+                super().__init__(f"{point}: {cause}")
+                self.point, self.cause = point, cause
+
+        def _fire(point, *, rid=None, rids=None):
+            if inj is None:
+                return None
+            fired = inj.fire(point, rid=rid, rids=rids)
+            if fired is not None and fired.kind == "deadline" \
+                    and fired.rid is not None:
+                # SLO overrun: the victim is forced past its deadline; the
+                # sweep at the next round start retires it with partial
+                # output
+                forced_deadline.add(fired.rid)
+            return fired
+
+        def _retry(point, fn):
+            """Bounded retry-with-backoff around one step's transient
+            faults (injected raises / pool exhaustion fire *before* the
+            jitted dispatch, so re-running is safe even though the step
+            donates its cache; manager.batch is idempotent).  Anything
+            else aborts the serve's stepping via _StepAbort — never by
+            letting the exception escape."""
+            attempt = 0
+            while True:
+                try:
+                    return fn()
+                except (FaultError, PoolExhausted) as e:
+                    attempt += 1
+                    fstats["retries"] += 1
+                    actions.append({"point": point, "kind": "retry",
+                                    "attempt": attempt, "error": str(e)})
+                    if attempt > retries_max:
+                        raise _StepAbort(point, e) from e
+                    if backoff_s:
+                        time.sleep(backoff_s * (2 ** (attempt - 1)))
+                except Exception as e:  # non-transient: no retry
+                    raise _StepAbort(point, e) from e
+
+        def _audit():
+            # PoolAuditor barriers under the debug knob: corruption is
+            # caught at the fault, not three steps later
+            if not res["pool_audit"]:
+                return
+            fstats["audits"] += 1
+            PoolAuditor(manager, check_device=True).audit()
+            if dmanager is not None:
+                PoolAuditor(dmanager).audit()
+
+        def _reject(rid, reason, status="rejected"):
+            outcome[rid] = {"status": status, "reason": reason}
+            fstats[status] += 1
+            actions.append({"point": "admit", "kind": status, "rid": rid,
+                            "reason": reason})
+
+        def _drop(rid):
+            """Release every trace of `rid` from both pools + the batch."""
+            manager.abort(rid)
+            if dmanager is not None:
+                dmanager.abort(rid)
+            active.pop(rid, None)
+            start_t.pop(rid, None)
+            forced_deadline.discard(rid)
+
+        def _quarantine(rid, reason):
+            # NaN/Inf logits quarantine exactly the victim: its pages
+            # retire, its partial output survives, the batch re-forms
+            outcome[rid] = {"status": "quarantined", "reason": reason}
+            fstats["quarantined"] += 1
+            actions.append({"point": "decode_step", "kind": "quarantined",
+                            "rid": rid, "reason": reason})
+            _drop(rid)
+
+        def _degrade(reason):
+            """Speculation is an optimization: any draft-side fault (or
+            repeated all-reject verify rounds under the patience policy)
+            turns it off for the rest of the serve — a draft failure never
+            touches target state, so output parity holds."""
+            if not spec["on"]:
+                return
+            spec["on"] = False
+            fstats["degraded"] = reason
+            actions.append({"point": "draft_step", "kind": "degraded",
+                            "reason": reason})
+            if dmanager is not None:
+                for r in list(dmanager.pool.tables):
+                    dmanager.abort(r)
+
+        def _retire(rid):
+            try:
+                _retry("retire", lambda: (_fire("retire", rid=rid),
+                                          manager.retire(rid)))
+            except _StepAbort as e:
+                # a retire that keeps failing force-drops the references —
+                # leaking pages on a fault path would starve later
+                # admissions
+                manager.abort(rid)
+                actions.append({"point": "retire", "kind": "forced_abort",
+                                "rid": rid, "error": str(e.cause)})
+            if dmanager is not None:
+                dmanager.abort(rid)
+
         def admit_one(rid, reuse_from=None) -> None:
+            aspec = _fire("admit", rid=rid)
+            if aspec is not None and aspec.kind == "nan_logits":
+                # an admission with poisoned logits has no usable first
+                # token: reject it through the non-finite path
+                raise NonFiniteLogits(
+                    f"injected non-finite admission logits for {rid!r}")
             tok = None
             if reuse_from is not None:
                 tok = self._admit_grouped(manager, rid, prompts[rid],
@@ -515,10 +740,13 @@ class Server:
                 if tok is not None:
                     grouped["admissions"] += 1
             if tok is None:
-                tok = self._paged_admit(manager, rid, prompts[rid],
-                                        finals[rid], variant)
+                tok, pspec = self._paged_admit(manager, rid, prompts[rid],
+                                               finals[rid], variant, inj=inj)
+                if pspec is not None and pspec.kind == "deadline":
+                    forced_deadline.add(rid)
             outputs[rid] = [tok]
             active[rid] = {"tok": tok, "pos": lengths[rid]}
+            start_t[rid] = time.monotonic()
             if not spec["checked"]:
                 # pool family is known after the first admission: ring
                 # pools evict on write, which breaks the widened-q verify
@@ -527,9 +755,30 @@ class Server:
                 spec["on"] = bool(k) and not manager._ring_pool()
             if spec["on"]:
                 # draft admits in lockstep (its length must equal the
-                # target's accepted length at every round start)
-                draft_srv._paged_admit(dmanager, rid, prompts[rid],
-                                       finals[rid], None)
+                # target's accepted length at every round start); a draft
+                # admission fault degrades speculation but keeps the
+                # target admission — the request decodes plain.  This also
+                # closes the old leak where a draft throw stranded the
+                # target's pages and `active`/`outputs` entries.
+                try:
+                    draft_srv._paged_admit(dmanager, rid, prompts[rid],
+                                           finals[rid], None, inj=inj)
+                except Exception as e:
+                    _degrade(f"draft admission failed: {e}")
+
+        def try_admit(rid, reuse_from=None) -> bool:
+            try:
+                admit_one(rid, reuse_from)
+                return True
+            except (FaultError, PoolExhausted) as e:
+                # a failed admission is isolated to the one request: its
+                # partial pool state rolls back and it gets a structured
+                # rejection — the serve (and every other request) goes on
+                outputs.pop(rid, None)
+                _drop(rid)
+                _reject(rid, str(e))
+                _audit()
+                return False
 
         def admit_ready() -> None:
             while waiting and len(active) < max_batch:
@@ -556,9 +805,9 @@ class Server:
                     # below instead of a raw PoolExhausted out of pool.alloc
                     if not manager.can_admit(finals[rid], tokens=prompts[rid]):
                         return
-                admit_one(rid)
+                ok = try_admit(rid)
                 waiting.remove(rid)
-                if not (manager.prefix_sharing and waiting
+                if not (ok and manager.prefix_sharing and waiting
                         and self._last_admit_rescored):
                     continue
                 # identical queued prompts admit as a group sharing the
@@ -571,25 +820,60 @@ class Server:
                     if len(active) >= max_batch or not manager.can_admit(
                             finals[cand], tokens=prompts[cand]):
                         break
-                    admit_one(cand, reuse_from=rid)
+                    try_admit(cand, reuse_from=rid)
                     waiting.remove(cand)
 
+        # prompts the cache could never host are rejected up front — the
+        # old path crashed the whole serve mid-flight on the first one
+        for r in [r for r in list(waiting)
+                  if lengths[r] > self.cfg.max_cache_len]:
+            waiting.remove(r)
+            _reject(r, f"prompt ({lengths[r]} tokens) exceeds "
+                       f"max_cache_len ({self.cfg.max_cache_len})",
+                    status="oversized")
+
+        mismatch_rounds = 0
+        aborted: Exception | None = None
         admit_ready()
         while active or waiting:
             # retire before stepping: requests at their budget free pages
             done = [r for r in active if len(outputs[r]) >= n]
             for rid in done:
-                manager.retire(rid)
-                if spec["on"]:
-                    dmanager.retire(rid)
+                _retire(rid)
                 del active[rid]
-            if done:
+            # per-request SLO sweep: overdue requests (wall clock past
+            # deadline_s, or forced over by an injected `deadline` fault)
+            # retire with partial output and a deadline_exceeded marker
+            overdue = []
+            if deadline_s_eff is not None or forced_deadline:
+                now = time.monotonic()
+                overdue = [r for r in active
+                           if r in forced_deadline
+                           or (deadline_s_eff is not None
+                               and now - start_t[r] > deadline_s_eff)]
+            for rid in overdue:
+                outcome[rid] = {"status": "deadline_exceeded",
+                                "reason": "request exceeded its deadline"}
+                fstats["deadline_exceeded"] += 1
+                actions.append({"point": "decode_step", "kind": "deadline",
+                                "rid": rid, "emitted": len(outputs[rid])})
+                _retire(rid)
+                active.pop(rid, None)
+                forced_deadline.discard(rid)
+            if done or overdue:
+                _audit()
                 admit_ready()
             if not active:
-                if waiting:  # pool can't fit the next request's worst case
-                    raise RuntimeError(
-                        f"page pool too small: request {waiting[0]} needs "
-                        f"more pages than the pool holds")
+                if waiting:
+                    # pool at its emptiest still can't fit the head
+                    # request: reject *it* and keep serving the rest — the
+                    # old batch-killing RuntimeError here threw away every
+                    # completed request's output with it
+                    rid = waiting.popleft()
+                    _reject(rid, f"page pool too small: request {rid} "
+                                 f"needs more pages than the pool holds")
+                    admit_ready()
+                    continue
                 break
 
             rids = list(active)
@@ -606,31 +890,70 @@ class Server:
                 # draft proposes k greedy tokens; the final iteration is a
                 # write-only catch-up (its KV for slot pos+k is needed when
                 # every draft token is accepted), its proposal is unused
-                for s in range(S):
-                    dcache = dmanager.batch(rids)
-                    dpos = jnp.asarray([[pos0[r] + s] for r in rids],
-                                       jnp.int32)
-                    dlogits, dnew = draft_srv.decode_vc(
-                        None, draft_srv.params,
-                        {"tokens": jnp.asarray(fed[:, s:s + 1], jnp.int32),
-                         "positions": dpos},
-                        dcache)
-                    dmanager.absorb(rids, dnew)
-                    stats["draft_steps"] += 1
-                    if s < S - 1:
-                        fed[:, s + 1] = np.asarray(
-                            jnp.argmax(dlogits[:, -1], axis=-1), np.int64)
+                try:
+                    for s in range(S):
+                        dspec = _fire("draft_step", rids=rids)
+                        dcache = dmanager.batch(rids)
+                        dpos = jnp.asarray([[pos0[r] + s] for r in rids],
+                                           jnp.int32)
+                        dlogits, dnew = draft_srv.decode_vc(
+                            None, draft_srv.params,
+                            {"tokens": jnp.asarray(fed[:, s:s + 1],
+                                                   jnp.int32),
+                             "positions": dpos},
+                            dcache)
+                        if dspec is not None \
+                                and dspec.kind == "nan_logits":
+                            # a poisoned proposal is still a legal token
+                            # after argmax (NaN rows argmax to 0): the
+                            # verify step rejects garbage proposals, so a
+                            # bad draft costs steps, never correctness
+                            vi = rids.index(dspec.rid) \
+                                if dspec.rid in rids else 0
+                            dlogits = dlogits.at[vi].set(jnp.nan)
+                        dmanager.absorb(rids, dnew)
+                        stats["draft_steps"] += 1
+                        if s < S - 1:
+                            fed[:, s + 1] = np.asarray(
+                                jnp.argmax(dlogits[:, -1], axis=-1),
+                                np.int64)
+                except Exception as e:
+                    # draft-side fault: no target state was touched this
+                    # round — degrade to plain decode and re-run the round
+                    _degrade(f"draft fault: {e}")
+                    continue
+
                 # ONE widened-q target step scores all S draft positions
-                cache = manager.batch(rids, tokens=S)
-                vpos = jnp.asarray(
-                    [[pos0[r] + s for s in range(S)] for r in rids],
-                    jnp.int32)
-                ts = time.perf_counter()
-                logits, new_cache = self._verify_step(variant, k)(
-                    self.params,
-                    {"tokens": jnp.asarray(fed, jnp.int32),
-                     "positions": vpos},
-                    cache)
+                def _verify_round():
+                    _fire("cow", rids=rids)
+                    cache = manager.batch(rids, tokens=S)
+                    vspec = _fire("verify_step", rids=rids)
+                    vpos = jnp.asarray(
+                        [[pos0[r] + s for s in range(S)] for r in rids],
+                        jnp.int32)
+                    ts = time.perf_counter()
+                    if watchdog is not None:
+                        watchdog.beat()
+                    logits, new_cache = self._verify_step(variant, k)(
+                        self.params,
+                        {"tokens": jnp.asarray(fed, jnp.int32),
+                         "positions": vpos},
+                        cache)
+                    if watchdog is not None:
+                        watchdog.cancel()
+                    return vspec, ts, logits, new_cache
+
+                try:
+                    vspec, ts, logits, new_cache = _retry("verify_step",
+                                                          _verify_round)
+                except _StepAbort as err:
+                    aborted = err
+                    break
+                if vspec is not None and vspec.kind == "nan_logits":
+                    vi = rids.index(vspec.rid) if vspec.rid in rids else 0
+                    logits = logits.at[vi].set(jnp.nan)
+                finite = np.asarray(jnp.isfinite(jnp.max(
+                    logits.astype(jnp.float32), axis=(-2, -1))))
                 targ = np.asarray(jnp.argmax(logits, axis=-1), np.int64)
                 if stats["verify_steps"]:  # skip the jit-tracing first step
                     verify_lats.append(time.perf_counter() - ts)
@@ -638,7 +961,13 @@ class Server:
                 stats["verify_steps"] += 1
                 stats["rounds"] += 1
                 stats["request_rounds"] += len(rids)
+                accepted_round = 0
+                rolled = False
                 for i, rid in enumerate(rids):
+                    if not finite[i]:
+                        _quarantine(rid, "non-finite verify logits")
+                        rolled = True
+                        continue
                     # accept the longest draft prefix matching the
                     # target's own argmax chain, plus the correction
                     # token — every emitted token is a target argmax,
@@ -650,24 +979,66 @@ class Server:
                     outputs[rid].extend(int(t) for t in targ[i, :e])
                     new_len = pos0[rid] + e
                     # rejected tail: O(1) refcount rollback, no page copies
-                    manager.rollback(rid, new_len)
-                    dmanager.rollback(rid, new_len)
+                    try:
+                        _retry("rollback", lambda rid=rid, nl=new_len: (
+                            _fire("rollback", rid=rid),
+                            manager.rollback(rid, nl),
+                            dmanager.rollback(rid, nl)))
+                    except _StepAbort as err:
+                        # a rollback that keeps failing leaves the
+                        # request's length unknown: quarantine it
+                        _quarantine(rid, f"rollback failed: {err.cause}")
+                        rolled = True
+                        continue
                     active[rid]["tok"] = int(targ[i, e - 1])
                     active[rid]["pos"] = new_len
                     stats["proposed"] += k
                     stats["accepted"] += a
                     stats["emitted_spec"] += e
+                    accepted_round += a
+                    rolled = True
+                if rolled:
+                    _audit()
+                if accepted_round == 0:
+                    mismatch_rounds += 1
+                    patience = res["spec_patience"]
+                    if patience is not None \
+                            and mismatch_rounds >= int(patience):
+                        _degrade(f"{mismatch_rounds} consecutive "
+                                 f"all-reject verify rounds")
+                else:
+                    mismatch_rounds = 0
             else:
-                cache = manager.batch(rids)
-                tok = jnp.asarray([[active[r]["tok"]] for r in rids],
-                                  jnp.int32)
-                pos = jnp.asarray([[active[r]["pos"]] for r in rids],
-                                  jnp.int32)
-                ts = time.perf_counter()
-                logits, new_cache = self.decode_vc(
-                    variant, self.params,
-                    {"tokens": tok, "positions": pos}, cache,
-                )
+                def _decode_round():
+                    _fire("cow", rids=rids)
+                    cache = manager.batch(rids)
+                    pspec = _fire("decode_step", rids=rids)
+                    tok = jnp.asarray([[active[r]["tok"]] for r in rids],
+                                      jnp.int32)
+                    pos = jnp.asarray([[active[r]["pos"]] for r in rids],
+                                      jnp.int32)
+                    ts = time.perf_counter()
+                    if watchdog is not None:
+                        watchdog.beat()
+                    logits, new_cache = self.decode_vc(
+                        variant, self.params,
+                        {"tokens": tok, "positions": pos}, cache,
+                    )
+                    if watchdog is not None:
+                        watchdog.cancel()
+                    return pspec, ts, logits, new_cache
+
+                try:
+                    pspec, ts, logits, new_cache = _retry("decode_step",
+                                                          _decode_round)
+                except _StepAbort as err:
+                    aborted = err
+                    break
+                if pspec is not None and pspec.kind == "nan_logits":
+                    vi = rids.index(pspec.rid) if pspec.rid in rids else 0
+                    logits = logits.at[vi].set(jnp.nan)
+                finite = np.asarray(jnp.isfinite(jnp.max(
+                    logits[:, -1].astype(jnp.float32), axis=-1)))
                 nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int64)
                 # first step at each batch size pays jit tracing —
                 # excluding it keeps the tuner-feedback observations
@@ -681,10 +1052,36 @@ class Server:
                 seen_batches.add(len(rids))
                 manager.absorb(rids, new_cache)
                 stats["decode_steps"] += 1
+                hit_nan = False
                 for i, rid in enumerate(rids):
+                    if not finite[i]:
+                        _quarantine(rid, "non-finite decode logits")
+                        hit_nan = True
+                        continue
                     outputs[rid].append(int(nxt[i]))
                     active[rid]["tok"] = int(nxt[i])
                     active[rid]["pos"] += 1
+                if hit_nan:
+                    _audit()
+
+        if aborted is not None:
+            # a step failed past its retry budget: every in-flight request
+            # fails *structurally* (partial output kept, pool released) —
+            # the exception itself never escapes
+            for rid in list(active):
+                outcome[rid] = {"status": "failed",
+                                "reason": f"{aborted.point} failed: "
+                                          f"{aborted.cause}"}
+                fstats["failed"] += 1
+                _drop(rid)
+            while waiting:
+                _reject(waiting.popleft(),
+                        f"serve aborted at {aborted.point}",
+                        status="failed")
+        if watchdog is not None:
+            fstats["watchdog_timeouts"] = watchdog.timeouts
+            watchdog.close()
+        _audit()  # final barrier: the drained pools must be consistent
 
         self.last_pool_stats = manager.stats()
         self.last_pool_stats["grouped_admissions"] = grouped["admissions"]
@@ -701,10 +1098,34 @@ class Server:
             self.last_spec_stats = stats
         else:
             self.last_spec_stats = None
-        self._paged_dtype = next(iter(manager._groups.values()))["dtype"]
-        self._paged_sig = self._paged_signature(
-            batch=min(max_batch, len(prompts)), dtype=self._paged_dtype)
-        result = [np.asarray(outputs[r][:n], np.int64)
+        if manager._groups:
+            self._paged_dtype = next(iter(manager._groups.values()))["dtype"]
+            self._paged_sig = self._paged_signature(
+                batch=min(max_batch, len(prompts)), dtype=self._paged_dtype)
+        else:
+            # every request was rejected before the pool learned its
+            # structure — no kernel signature to refine against
+            self._paged_dtype = None
+            self._paged_sig = None
+        injected = list(inj.events[inj_seen:]) if inj is not None else []
+        for ev in injected:
+            self.broker.publish(
+                f"serve/fault/{ev['point']}/{ev['kind']}"
+                f"@host{jax.process_index()}", 1.0)
+        by_status: dict[str, int] = {}
+        for r in range(len(prompts)):
+            s = outcome[r]["status"]
+            by_status[s] = by_status.get(s, 0) + 1
+        self.last_fault_stats = {"events": len(injected),
+                                 "injected_events": injected,
+                                 "actions": actions,
+                                 "outcomes": by_status, **fstats}
+        self.last_outcomes = [
+            {"rid": r, "status": outcome[r]["status"],
+             "reason": outcome[r]["reason"],
+             "tokens": len(outputs.get(r, [])[:n])}
+            for r in range(len(prompts))]
+        result = [np.asarray(outputs.get(r, [])[:n], np.int64)
                   for r in range(len(prompts))]
         dt = time.perf_counter() - t0
         self.latencies.append(dt)
@@ -712,7 +1133,12 @@ class Server:
         self.broker.publish(f"serve/latency/@host{jax.process_index()}", dt)
         if self.margot is not None:
             self.margot.observe("latency", dt)
-        if self.memo is not None:
+        # fault-shaped results (rejections, quarantines, deadline cuts)
+        # must never be memoized: the memo key carries no pool geometry or
+        # fault schedule, so a later right-sized serve would replay them
+        clean = (memo_ok and not injected and not actions
+                 and all(outcome[r]["status"] == "ok" for r in outcome))
+        if self.memo is not None and clean:
             self.memo.update(key, result)
         return result
 

@@ -147,6 +147,15 @@ class Trainer:
         if self.params is None and not self.maybe_restore():
             self.init_state()
         watchdog = Watchdog(self.cfg.watchdog_deadline_s, self._on_timeout)
+        try:
+            return self._run_loop(watchdog, steps)
+        finally:
+            # the old per-beat Timer shape left a live timer that could
+            # fire after run() returned; the reused thread is disarmed and
+            # joined here instead
+            watchdog.close()
+
+    def _run_loop(self, watchdog: Watchdog, steps: int) -> list[dict]:
         target = self.step + steps
         while self.step < target:
             if self.preemption.pending:

@@ -392,10 +392,21 @@ class TestContinuousServer:
         for b, c in zip(batched, cont):
             np.testing.assert_array_equal(b, c)
 
-    def test_pool_too_small_raises(self):
+    def test_pool_too_small_rejects_only_unfittable(self):
+        """An unfittable request no longer kills the serve (the old path
+        raised RuntimeError mid-serve and threw away every completed
+        request's output): it gets a structured rejection and everyone
+        else's tokens survive, bit-identical to a roomy serve."""
         srv = _server("yi-6b")
-        with pytest.raises((RuntimeError, PoolExhausted)):
-            srv.serve_continuous(PROMPTS, page_size=8, pool_pages=1)
+        roomy = srv.serve_continuous(PROMPTS, page_size=8)
+        out = srv.serve_continuous(PROMPTS, page_size=8, pool_pages=1)
+        st = {o["rid"]: o["status"] for o in srv.last_outcomes}
+        # prompt 1 (7 tokens -> final 10 -> 2 pages) can never fit 1 page
+        assert st[1] == "rejected" and out[1].size == 0
+        assert "page pool too small" in srv.last_outcomes[1]["reason"]
+        for r in (0, 2):  # 1-page requests serve sequentially, bit-exact
+            assert st[r] == "ok"
+            np.testing.assert_array_equal(out[r], roomy[r])
 
     def test_ssm_family_raises(self):
         srv = _server("rwkv6-3b")
@@ -467,11 +478,14 @@ class TestAdmissionControl:
         structure yet), wasting a full prefill and dying with a raw
         PoolExhausted out of pool.alloc.  The capacity check now derives
         slots-per-token before packing, so an oversized *first* request
-        hits the clean 'page pool too small' path without prefilling."""
+        hits the clean 'page pool too small' rejection without
+        prefilling."""
         srv = _server("yi-6b")
         big = (np.arange(12) % 9 + 1).astype(np.int32)  # final 15 -> 2 pages
-        with pytest.raises(RuntimeError, match="page pool too small"):
-            srv.serve_continuous([big], page_size=8, pool_pages=1)
+        out = srv.serve_continuous([big], page_size=8, pool_pages=1)
+        assert out[0].size == 0
+        assert srv.last_outcomes[0]["status"] == "rejected"
+        assert "page pool too small" in srv.last_outcomes[0]["reason"]
         for vc in (srv.prefill_vc, srv.probe_vc, srv.paged_prefill_vc,
                    srv.rescore_vc):
             assert not vc.dispatch_counts  # nothing was prefilled
