@@ -1,0 +1,167 @@
+"""Multi-replica fleet bench: the kill-a-replica-mid-wave sweep.
+
+Measures the PR 9 acceptance claims on a shared-system-prompt workload
+(every prompt opens with the same page-aligned system prompt, so
+prefix-affinity routing has something to key on):
+
+  clean      injection off: every request ok, tokens bit-identical to a
+             single-server fault-free `serve_continuous` baseline, ZERO
+             fleet events — the fleet layer adds routing, nothing else;
+             prefix_hits land on >= 2 replicas (wave-size spill warms a
+             second replica with the hot prefix).
+  kill       one replica killed mid-wave (`replica_loss` join point at
+             the second dispatch): the victim's completed requests are
+             kept, its incomplete ones re-dispatch to survivors after
+             the heartbeat monitor declares death, a hot spare swaps in
+             — 100% recovery, survivor bit-parity, and the re-dispatched
+             requests' tokens still match the baseline bit-for-bit.
+  drain      one replica SIGTERM-drained mid-wave: its in-flight cohort
+             finishes, the waiting queue hands off to peers — 100%
+             completion with full bit-parity.
+
+Merges a `fleet` section into artifacts/bench/BENCH_kernels.json;
+runnable standalone via `benchmarks/run.py --only fleet`.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.base import SHAPES
+from repro.core.program import Program
+from repro.core.strategies.resilience import FaultInjector
+from repro.launch.weave import default_weave
+from repro.runtime.fleet import ServingFleet
+from repro.runtime.server import Server, ServerConfig
+
+
+def _parity(outs, base) -> float:
+    ok = sum(1 for a, b in zip(outs, base) if np.array_equal(a, b))
+    return ok / len(base) if base else 1.0
+
+
+def run(artifacts: str, *, quick: bool = False) -> list[str]:
+    rows: list[str] = []
+    replicas = 2 if quick else 3
+    spares = 1
+    n_req = 8 if quick else 12
+    wave_size = 3
+    decode_tokens = 5
+    max_cache_len = 24
+
+    program = Program.from_arch("yi-6b", kind="serve", reduced=True)
+    woven = default_weave(program, SHAPES["prefill_32k"], {})
+    cfg = ServerConfig(max_cache_len=max_cache_len,
+                       decode_tokens=decode_tokens,
+                       max_batch=2, page_size=8)
+
+    def factory() -> Server:
+        return Server(woven, cfg)
+
+    # shared-system-prompt workload: one page (8 tokens) of shared
+    # prefix, distinct 3-token tails
+    rng = np.random.default_rng(31)
+    sys_prompt = rng.integers(1, program.cfg.vocab, 8)
+    prompts = [np.concatenate([
+        sys_prompt, rng.integers(1, program.cfg.vocab, 3)]).astype(np.int64)
+        for _ in range(n_req)]
+
+    # single-server fault-free baseline: the bit-parity reference
+    t0 = time.perf_counter()
+    base = factory().serve_continuous(prompts, decode_tokens=decode_tokens)
+    t_base = time.perf_counter() - t0
+
+    # -- clean: routing only, no injection --------------------------------
+    fleet = ServingFleet(factory, replicas=replicas, spares=spares,
+                         wave_size=wave_size)
+    t0 = time.perf_counter()
+    outs = fleet.serve(prompts, decode_tokens=decode_tokens)
+    t_clean = time.perf_counter() - t0
+    st = fleet.last_fleet_stats
+    clean = {
+        "outcomes": dict(st["outcomes"]),
+        "parity": _parity(outs, base),
+        "fleet_events": len(st["events"]),
+        "injected_events": len(st["injected_events"]),
+        "affinity_hits": int(st["affinity_hits"]),
+        "replicas_with_prefix_hits": list(st["replicas_with_prefix_hits"]),
+        "rounds": int(st["rounds"]),
+        "latency_s": float(t_clean),
+        "baseline_latency_s": float(t_base),
+    }
+    assert clean["fleet_events"] == 0 and clean["injected_events"] == 0, (
+        "injection off must report zero fleet events")
+
+    # -- kill: one replica lost mid-wave ----------------------------------
+    inj = FaultInjector.single("replica_loss", "raise", at=1)
+    fleet_k = ServingFleet(factory, replicas=replicas, spares=spares,
+                           wave_size=wave_size, injector=inj)
+    t0 = time.perf_counter()
+    outs_k = fleet_k.serve(prompts, decode_tokens=decode_tokens)
+    t_kill = time.perf_counter() - t0
+    st_k = fleet_k.last_fleet_stats
+    loss = next((e for e in st_k["events"] if e["kind"] == "replica_loss"),
+                {})
+    red = [o for o in fleet_k.last_outcomes if o["attempts"] > 0]
+    red_parity = (sum(1 for o in red if np.array_equal(
+        outs_k[o["rid"]], base[o["rid"]])) / len(red)) if red else 0.0
+    kill = {
+        "outcomes": dict(st_k["outcomes"]),
+        "recovery": st_k["outcomes"].get("ok", 0) / n_req,
+        "survivor_parity": _parity(outs_k, base),
+        "redispatched": int(st_k["redispatched"]),
+        "redispatch_token_parity": float(red_parity),
+        "kept_on_victim": int(loss.get("kept", 0)),
+        "events": [e["kind"] for e in st_k["events"]],
+        "rounds": int(st_k["rounds"]),
+        "latency_s": float(t_kill),
+    }
+
+    # -- drain: one replica SIGTERM-drained mid-wave ----------------------
+    fleet_d = ServingFleet(factory, replicas=replicas, spares=spares,
+                           wave_size=wave_size + 1)
+    fleet_d.request_drain(0)
+    t0 = time.perf_counter()
+    outs_d = fleet_d.serve(prompts, decode_tokens=decode_tokens)
+    t_drain = time.perf_counter() - t0
+    st_d = fleet_d.last_fleet_stats
+    dev = next((e for e in st_d["events"] if e["kind"] == "drain"), {})
+    drain = {
+        "outcomes": dict(st_d["outcomes"]),
+        "recovery": st_d["outcomes"].get("ok", 0) / n_req,
+        "parity": _parity(outs_d, base),
+        "finished_inflight": int(dev.get("finished", 0)),
+        "handoff": int(dev.get("handoff", 0)),
+        "events": [e["kind"] for e in st_d["events"]],
+        "latency_s": float(t_drain),
+    }
+
+    section = {
+        "config": {"replicas": replicas, "spares": spares,
+                   "requests": n_req, "wave_size": wave_size,
+                   "decode_tokens": decode_tokens,
+                   "shared_prefix_tokens": 8},
+        "clean": clean,
+        "kill": kill,
+        "drain": drain,
+    }
+
+    rows.append(
+        f"fleet,{(t_clean + t_kill + t_drain)*1e6:.0f},"
+        f"recovery={kill['recovery']:.2f};parity={kill['survivor_parity']:.2f};"
+        f"redispatched={kill['redispatched']};"
+        f"affinity_replicas={len(clean['replicas_with_prefix_hits'])}"
+    )
+    print(f"  fleet[{replicas}r+{spares}s, {n_req} req]: clean parity "
+          f"{clean['parity']:.0%} ({clean['fleet_events']} events), kill "
+          f"recovery {kill['recovery']:.0%} / parity "
+          f"{kill['survivor_parity']:.0%} ({kill['redispatched']} "
+          f"re-dispatched, {kill['kept_on_victim']} kept), drain parity "
+          f"{drain['parity']:.0%} ({drain['handoff']} handed off)")
+
+    from benchmarks.kernels import merge_bench_sections
+
+    merge_bench_sections(artifacts, {"fleet": section})
+    return rows

@@ -17,6 +17,7 @@ BENCH_kernels.json: pruned-vs-dense grid + tuned-vs-default blocks).
   speculative        (kernels)    draft/verify loop vs plain greedy + streamed-KV oracle
   quantized_cache    (kernels)    int8/fp8 pool HBM + logits error + dtype DSE
   robustness         (serving)    single-fault sweep: recovery/parity/audit/goodput
+  fleet              (serving)    multi-replica kill/drain sweep: recovery/parity/affinity
   roofline_report    §Roofline    table from dry-run artifacts
 
 Flags:
@@ -38,7 +39,7 @@ ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
 QUICK_MODULES = ("weaving", "kernels", "flash_bwd", "flash_decode",
                  "paged_decode", "prefix_cache", "speculative",
-                 "quantized_cache", "robustness")
+                 "quantized_cache", "robustness", "fleet")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -55,6 +56,7 @@ def main(argv: list[str] | None = None) -> None:
         docking_dse,
         flash_bwd,
         flash_decode,
+        fleet,
         kernels,
         navigation_autotune,
         paged_decode,
@@ -69,7 +71,8 @@ def main(argv: list[str] | None = None) -> None:
 
     modules = [weaving, precision_versions, kernels, flash_bwd, flash_decode,
                paged_decode, prefix_cache, speculative, quantized_cache,
-               robustness, betweenness, docking_dse, navigation_autotune,
+               robustness, fleet, betweenness, docking_dse,
+               navigation_autotune,
                roofline_report]
     if args.only:
         names = {n.strip() for n in args.only.split(",")}
@@ -81,7 +84,8 @@ def main(argv: list[str] | None = None) -> None:
                               (weaving, precision_versions, kernels,
                                flash_bwd, flash_decode, paged_decode,
                                prefix_cache, speculative, quantized_cache,
-                               robustness, betweenness, docking_dse,
+                               robustness, fleet, betweenness,
+                               docking_dse,
                                navigation_autotune, roofline_report))
             ap.error(f"--only {args.only!r} matches no benchmark; "
                      f"valid names: {valid}")

@@ -42,6 +42,13 @@ from repro.core.weaver import Aspect, Weaver
 
 JOIN_POINTS = ("admit", "paged_prefill", "decode_step", "verify_step",
                "draft_step", "cow", "rollback", "retire")
+# fleet-level join points (runtime/fleet.ServingFleet): one routing
+# decision, one replica dispatch, one drain check — the injector drives the
+# kill-a-replica / SIGTERM-drain sweeps the same way it drives the serving
+# sweep.  Kept separate from JOIN_POINTS so the within-replica fault sweep
+# (benchmarks/robustness, tests) keeps its exact 8-point matrix.
+FLEET_JOIN_POINTS = ("route", "replica_loss", "drain")
+ALL_JOIN_POINTS = JOIN_POINTS + FLEET_JOIN_POINTS
 FAULT_KINDS = ("raise", "nan_logits", "pool_exhausted", "deadline")
 
 # default recovery policy the server falls back to when no ResilienceAspect
@@ -91,9 +98,9 @@ class FaultSpec:
     repeat: int = 1
 
     def __post_init__(self):
-        if self.point not in JOIN_POINTS:
+        if self.point not in ALL_JOIN_POINTS:
             raise ValueError(f"unknown join point {self.point!r}; "
-                             f"one of {JOIN_POINTS}")
+                             f"one of {ALL_JOIN_POINTS}")
         if self.kind not in FAULT_KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}; "
                              f"one of {FAULT_KINDS}")
@@ -129,7 +136,7 @@ class FaultInjector:
         self._schedule: list[FaultSpec] = [self._coerce(f) for f in faults]
         self._remaining: list[int] = [s.repeat for s in self._schedule]
         self._rng = np.random.default_rng(seed)
-        self.visits: dict[str, int] = {p: 0 for p in JOIN_POINTS}
+        self.visits: dict[str, int] = {p: 0 for p in ALL_JOIN_POINTS}
         self.events: list[dict[str, Any]] = []
 
     @staticmethod
@@ -158,7 +165,7 @@ class FaultInjector:
         same injector replays the same fault sequence."""
         self._remaining = [s.repeat for s in self._schedule]
         self._rng = np.random.default_rng(self._seed)
-        self.visits = {p: 0 for p in JOIN_POINTS}
+        self.visits = {p: 0 for p in ALL_JOIN_POINTS}
         self.events = []
 
     def _match(self, point: str, visit: int) -> FaultSpec | None:
@@ -178,7 +185,7 @@ class FaultInjector:
         consumed its one-shot fault passes clean on the next visit."""
         from repro.runtime.pages import PoolExhausted
 
-        if point not in JOIN_POINTS:
+        if point not in ALL_JOIN_POINTS:
             raise ValueError(f"unknown join point {point!r}")
         visit = self.visits[point]
         self.visits[point] = visit + 1
@@ -256,3 +263,65 @@ class ResilienceAspect(Aspect):
         if self.injector is not None:
             weaver.set_extra("fault_injector", self.injector)
         weaver.set_extra("serve_resilience", dict(self.policy))
+
+
+# default fleet recovery policy (runtime/fleet.ServingFleet falls back to
+# this when no FleetResilienceAspect was woven and the constructor leaves
+# the knobs unset)
+DEFAULT_FLEET_POLICY: dict[str, Any] = {
+    "retries": 2,              # re-dispatches per request after replica loss
+    "backoff_s": 0.0,          # base backoff before a re-dispatch (doubles)
+    "deadline_s": None,        # per-request fleet SLO (None: no deadline)
+    "affinity": True,          # prefix-affinity routing (else least-loaded)
+    "wave_size": 4,            # requests routed to one replica per round
+    "dead_after_rounds": 1.5,  # missed-beat rounds before a replica is dead
+    "straggler_factor": 2.0,   # HeartbeatMonitor straggler threshold
+    "straggler_patience": 3,   # consecutive slow rounds before flagging
+}
+
+
+class FleetResilienceAspect(Aspect):
+    """Weave the fleet-level serving policy (runtime/fleet.ServingFleet).
+
+    The same AOP argument one level up: replica placement, prefix-affinity
+    routing, replica-loss re-dispatch and graceful drain are extra-
+    functional concerns of the *fleet*, woven as extras rather than
+    hard-coded into the router:
+
+      * `fleet_injector`    consulted at the fleet join points
+                            (`route`, `replica_loss`, `drain`);
+      * `fleet_resilience`  {retries, backoff_s, deadline_s, affinity,
+                            wave_size, dead_after_rounds, straggler_factor,
+                            straggler_patience} — explicit ServingFleet
+                            constructor arguments still win.
+
+    The analysis pass selects the attention join points exactly like
+    `ResilienceAspect`: the fleet's unit of placement is a replica whose
+    page pool hosts attention K/V — the state replica loss puts at risk.
+    """
+
+    name = "FleetResilience"
+
+    def __init__(self, injector: FaultInjector | None = None, *,
+                 retries: int = 2, backoff_s: float = 0.0,
+                 deadline_s: float | None = None, affinity: bool = True,
+                 wave_size: int = 4, dead_after_rounds: float = 1.5,
+                 straggler_factor: float = 2.0, straggler_patience: int = 3):
+        self.injector = injector
+        self.policy = {
+            "retries": int(retries),
+            "backoff_s": float(backoff_s),
+            "deadline_s": deadline_s,
+            "affinity": bool(affinity),
+            "wave_size": int(wave_size),
+            "dead_after_rounds": float(dead_after_rounds),
+            "straggler_factor": float(straggler_factor),
+            "straggler_patience": int(straggler_patience),
+        }
+
+    def apply(self, weaver: Weaver) -> None:
+        for jp in weaver.select("*", kind="attention"):
+            jp.attr("kind")
+        if self.injector is not None:
+            weaver.set_extra("fleet_injector", self.injector)
+        weaver.set_extra("fleet_resilience", dict(self.policy))

@@ -125,30 +125,58 @@ class PreemptionHandler:
 
 
 class HeartbeatMonitor:
+    """Straggler + liveness detection over `fleet/heartbeat/@host<i>` beats.
+
+    Liveness runs on ONE clock: beats are stamped at *arrival* with the
+    monitor's own `clock` (default `time.monotonic`), never with the
+    broker-delivered publish timestamp — `ExamonBroker.publish` defaults to
+    `time.monotonic()` but accepts any explicit `timestamp` (epoch seconds,
+    logical step counters), so trusting it would compare timestamps across
+    clock domains and mis-declare liveness.  A caller living in a different
+    time domain (e.g. the serving fleet's round counter) passes its own
+    `clock` and gets consistent `check_liveness` semantics for free.
+    """
+
     def __init__(self, broker: ExamonBroker, *, factor: float = 2.0,
                  patience: int = 3, window: int = 16,
                  on_straggler: Callable[[int], None] | None = None,
                  on_dead: Callable[[int], None] | None = None,
-                 dead_after_s: float = 30.0):
+                 dead_after_s: float = 30.0,
+                 clock: Callable[[], float] | None = None):
         self.factor = factor
         self.patience = patience
         self.dead_after_s = dead_after_s
         self.on_straggler = on_straggler or (lambda host: None)
         self.on_dead = on_dead or (lambda host: None)
+        self._clock = clock or time.monotonic
         self._times: dict[int, deque] = defaultdict(lambda: deque(maxlen=window))
         self._last_seen: dict[int, float] = {}
         self._strikes: dict[int, int] = defaultdict(int)
         self.flagged: set[int] = set()
         self.dead: set[int] = set()
+        self.malformed_beats = 0
         broker.subscribe("fleet/heartbeat/*", self._on_beat)
 
-    def _host_of(self, topic: str) -> int:
-        return int(topic.rsplit("@host", 1)[-1])
+    @staticmethod
+    def _host_of(topic: str) -> int | None:
+        """Host index from `...@host<i>`, or None for a malformed topic —
+        a beat without the suffix (or with a non-numeric one) must be
+        dropped and counted, never crash the broker's subscriber fan-out."""
+        parts = topic.rsplit("@host", 1)
+        if len(parts) != 2 or not parts[1].isdigit():
+            return None
+        return int(parts[1])
 
     def _on_beat(self, topic: str, step_time: float, ts: float) -> None:
         host = self._host_of(topic)
+        if host is None:
+            self.malformed_beats += 1
+            return
         self._times[host].append(step_time)
-        self._last_seen[host] = ts
+        self._last_seen[host] = self._clock()
+        # a beat from a declared-dead slot means a replacement took it over
+        # (hot spare): the slot is live again
+        self.dead.discard(host)
         self._check(host)
 
     def _median_all(self) -> float:
@@ -173,11 +201,23 @@ class HeartbeatMonitor:
             self.flagged.discard(host)
 
     def check_liveness(self, now: float | None = None) -> None:
-        now = time.monotonic() if now is None else now
+        """Declare hosts dead after `dead_after_s` of silence.  `now`
+        defaults to the monitor's own clock — the same one that stamped the
+        beats — so the comparison never crosses clock domains."""
+        now = self._clock() if now is None else now
         for host, last in list(self._last_seen.items()):
             if now - last > self.dead_after_s and host not in self.dead:
                 self.dead.add(host)
                 self.on_dead(host)
+
+    def forget(self, host: int) -> None:
+        """Drop all state for a retired host slot (e.g. after its in-flight
+        work was re-dispatched), so a stale entry can't re-trigger on_dead."""
+        self._times.pop(host, None)
+        self._last_seen.pop(host, None)
+        self._strikes.pop(host, None)
+        self.flagged.discard(host)
+        self.dead.discard(host)
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,15 @@
 """Serving launcher (reduced-config CPU demo of the serve path).
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 4
+
+Three modes:
+  (default)     legacy solo `serve()` per request;
+  --continuous  one `serve_continuous` wave over the whole request set
+                (paged pool, prefix sharing), printing each request's
+                structured outcome;
+  --fleet N     route the same wave across N `ServingFleet` replicas
+                (prefix-affinity routing + replica-loss recovery), see
+                `repro.launch.fleet` for the full fleet CLI.
 """
 
 from __future__ import annotations
@@ -16,6 +25,13 @@ from repro.models.registry import ARCHS
 from repro.runtime.server import Server, ServerConfig
 
 
+def _print_outcomes(outcomes, outputs) -> None:
+    for o in outcomes:
+        rep = f" replica={o['replica']}" if "replica" in o else ""
+        print(f"  rid {o['rid']}: {o['status']:<18} tokens={o['tokens']}"
+              f"{rep}" + (f"  ({o['reason']})" if o["reason"] else ""))
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), default="yi-6b")
@@ -23,15 +39,49 @@ def main() -> int:
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--decode-tokens", type=int, default=8)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve all requests through one continuous-"
+                         "batching wave and print structured outcomes")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="route the wave across N fleet replicas "
+                         "(implies --continuous)")
     args = ap.parse_args()
 
     program = Program.from_arch(args.arch, kind="serve", reduced=True)
     woven = default_weave(program, SHAPES["prefill_32k"], {})
-    server = Server(woven, ServerConfig(
+    cfg = ServerConfig(
         max_cache_len=args.prompt_len + args.decode_tokens + 1,
         decode_tokens=args.decode_tokens,
-    ))
+    )
     rng = np.random.default_rng(0)
+
+    if args.fleet > 0:
+        from repro.runtime.fleet import ServingFleet
+
+        prompts = [rng.integers(0, program.cfg.vocab, args.prompt_len)
+                   .astype(np.int64) for _ in range(args.requests)]
+        fleet = ServingFleet(lambda: Server(woven, cfg),
+                             replicas=args.fleet)
+        outs = fleet.serve(prompts, decode_tokens=args.decode_tokens)
+        stats = fleet.last_fleet_stats
+        print(f"fleet of {args.fleet}: {stats['outcomes']} in "
+              f"{stats['rounds']} round(s); affinity hits "
+              f"{stats['affinity_hits']}")
+        _print_outcomes(fleet.last_outcomes, outs)
+        return 0
+
+    server = Server(woven, cfg)
+    if args.continuous:
+        prompts = [rng.integers(0, program.cfg.vocab, args.prompt_len)
+                   .astype(np.int64) for _ in range(args.requests)]
+        outs = server.serve_continuous(
+            prompts, decode_tokens=args.decode_tokens)
+        print(f"continuous wave: {len(prompts)} request(s), pool "
+              f"{server.last_pool_stats['live_pages']} live pages, "
+              f"{server.last_pool_stats['prefix_hits']} prefix hits")
+        _print_outcomes(server.last_outcomes, outs)
+        return 0
+
     for i in range(args.requests):
         prompt = rng.integers(0, program.cfg.vocab,
                               (args.batch, args.prompt_len), dtype=np.int32)

@@ -423,7 +423,8 @@ class Server:
                          draft: "Server | None" = None,
                          fault_injector=None,
                          deadline_s: float | None = None,
-                         pool_audit: bool | None = None) -> list[np.ndarray]:
+                         pool_audit: bool | None = None,
+                         preemption=None) -> list[np.ndarray]:
         """Continuous batching over a prefix-shared paged KV-cache pool.
 
         Unlike `serve_batch` — which prefils everything up front, pads
@@ -471,6 +472,13 @@ class Server:
         tokens stay bit-identical to a fault-free serve, and
         `last_fault_stats` / ExaMon `serve/fault/*` topics record every
         event (zero events when nothing is woven).
+
+        Graceful drain (`preemption`, a PreemptionHandler or anything with
+        a `.pending` bool): once preemption is requested — SIGTERM on a
+        real host, `request()` in tests — no new request is admitted;
+        every in-flight request finishes its full decode normally, and the
+        undrained waiting queue returns structured `drained` outcomes (so
+        a fleet layer can hand those requests to a peer replica).
         """
         if not prompts:
             return []
@@ -492,8 +500,9 @@ class Server:
             else self.woven.state.extra.get("fault_injector")
         pre_deadline = deadline_s if deadline_s is not None \
             else self._resilience(self.woven.state)["deadline_s"]
+        # a preemptible serve may drain mid-queue — same non-reproducibility
         memo_ok = (pre_inj is None or not pre_inj.armed) \
-            and pre_deadline is None
+            and pre_deadline is None and preemption is None
         if memo_ok and self.memo is not None and self.memo.running:
             hit, out = self.memo.lookup(key)
             if hit:
@@ -605,7 +614,8 @@ class Server:
         inj_seen = len(inj.events) if inj is not None else 0
         fstats = {"retries": 0, "quarantined": 0, "rejected": 0,
                   "oversized": 0, "deadline_exceeded": 0, "failed": 0,
-                  "degraded": None, "audits": 0, "watchdog_timeouts": 0}
+                  "drained": 0, "degraded": None, "audits": 0,
+                  "watchdog_timeouts": 0}
         start_t: dict[int, float] = {}     # admission wall clock per request
         forced_deadline: set[int] = set()  # injected SLO overruns
         deadline_s_eff = res["deadline_s"]
@@ -823,6 +833,24 @@ class Server:
                     try_admit(cand, reuse_from=rid)
                     waiting.remove(cand)
 
+        def _drain_waiting() -> None:
+            """Preemption: hand the not-yet-admitted queue back with
+            structured `drained` outcomes — in-flight work is untouched."""
+            while waiting:
+                rid = waiting.popleft()
+                outcome[rid] = {"status": "drained",
+                                "reason": "preemption requested: "
+                                          "admissions stopped"}
+                fstats["drained"] += 1
+                actions.append({"point": "drain", "kind": "drained",
+                                "rid": rid})
+
+        def _admit_or_drain() -> None:
+            if preemption is not None and preemption.pending:
+                _drain_waiting()
+                return
+            admit_ready()
+
         # prompts the cache could never host are rejected up front — the
         # old path crashed the whole serve mid-flight on the first one
         for r in [r for r in list(waiting)
@@ -834,8 +862,14 @@ class Server:
 
         mismatch_rounds = 0
         aborted: Exception | None = None
-        admit_ready()
+        _admit_or_drain()
         while active or waiting:
+            # preemption arriving mid-wave drains the queue at the next
+            # round boundary; the admitted batch keeps decoding to the end
+            if preemption is not None and preemption.pending and waiting:
+                _drain_waiting()
+                if not active:
+                    break
             # retire before stepping: requests at their budget free pages
             done = [r for r in active if len(outputs[r]) >= n]
             for rid in done:
@@ -862,7 +896,7 @@ class Server:
                 forced_deadline.discard(rid)
             if done or overdue:
                 _audit()
-                admit_ready()
+                _admit_or_drain()
             if not active:
                 if waiting:
                     # pool at its emptiest still can't fit the head
@@ -872,7 +906,7 @@ class Server:
                     rid = waiting.popleft()
                     _reject(rid, f"page pool too small: request {rid} "
                                  f"needs more pages than the pool holds")
-                    admit_ready()
+                    _admit_or_drain()
                     continue
                 break
 
