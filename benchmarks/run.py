@@ -18,6 +18,7 @@ BENCH_kernels.json: pruned-vs-dense grid + tuned-vs-default blocks).
   quantized_cache    (kernels)    int8/fp8 pool HBM + logits error + dtype DSE
   robustness         (serving)    single-fault sweep: recovery/parity/audit/goodput
   fleet              (serving)    multi-replica kill/drain sweep: recovery/parity/affinity
+  qos                (serving)    governed vs static SLO attainment under load ramp
   roofline_report    §Roofline    table from dry-run artifacts
 
 Flags:
@@ -39,7 +40,7 @@ ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
 QUICK_MODULES = ("weaving", "kernels", "flash_bwd", "flash_decode",
                  "paged_decode", "prefix_cache", "speculative",
-                 "quantized_cache", "robustness", "fleet")
+                 "quantized_cache", "robustness", "fleet", "qos")
 
 
 def main(argv: list[str] | None = None) -> None:
@@ -62,6 +63,7 @@ def main(argv: list[str] | None = None) -> None:
         paged_decode,
         precision_versions,
         prefix_cache,
+        qos,
         quantized_cache,
         robustness,
         roofline_report,
@@ -71,7 +73,7 @@ def main(argv: list[str] | None = None) -> None:
 
     modules = [weaving, precision_versions, kernels, flash_bwd, flash_decode,
                paged_decode, prefix_cache, speculative, quantized_cache,
-               robustness, fleet, betweenness, docking_dse,
+               robustness, fleet, qos, betweenness, docking_dse,
                navigation_autotune,
                roofline_report]
     if args.only:
@@ -84,7 +86,7 @@ def main(argv: list[str] | None = None) -> None:
                               (weaving, precision_versions, kernels,
                                flash_bwd, flash_decode, paged_decode,
                                prefix_cache, speculative, quantized_cache,
-                               robustness, fleet, betweenness,
+                               robustness, fleet, qos, betweenness,
                                docking_dse,
                                navigation_autotune, roofline_report))
             ap.error(f"--only {args.only!r} matches no benchmark; "

@@ -112,7 +112,25 @@ class Margot:
     # -- Monitor ---------------------------------------------------------------
 
     def observe(self, metric: str, value: float) -> None:
-        self._obs.setdefault(metric, deque(maxlen=self.window)).append(float(value))
+        """Record one observation of `metric`.
+
+        The per-metric history is a sliding window (`deque(maxlen=window)`),
+        not an unbounded list: a long-running managed application — e.g. a
+        `serve_stream` session observing every wave — stays O(window)
+        memory, and the reactive error coefficient in `_analyze` tracks
+        *recent* load instead of averaging the whole session's history.
+        Non-finite values are dropped (a poisoned observation would wedge
+        the error coefficient at NaN for a full window)."""
+        value = float(value)
+        if not math.isfinite(value):
+            return
+        window = self._obs.get(metric)
+        if window is None or window.maxlen != self.window:
+            # (re)build on first use or after a live `self.window` resize,
+            # keeping the most recent tail of what was already observed
+            window = deque(window or (), maxlen=self.window)
+            self._obs[metric] = window
+        window.append(value)
 
     # -- Analyze: reactive error coefficients -------------------------------------
 

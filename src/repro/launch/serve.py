@@ -2,11 +2,15 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 4
 
-Three modes:
+Four modes:
   (default)     legacy solo `serve()` per request;
   --continuous  one `serve_continuous` wave over the whole request set
                 (paged pool, prefix sharing), printing each request's
                 structured outcome;
+  --stream      drive the `serve_stream` event loop directly, printing
+                per-token events with TTFT / inter-token latency columns
+                (add --slo-ttft-s / --slo-tok-s to run under the QoS
+                governor with those SLOs as mARGOt Goals);
   --fleet N     route the same wave across N `ServingFleet` replicas
                 (prefix-affinity routing + replica-loss recovery), see
                 `repro.launch.fleet` for the full fleet CLI.
@@ -42,6 +46,15 @@ def main() -> int:
     ap.add_argument("--continuous", action="store_true",
                     help="serve all requests through one continuous-"
                          "batching wave and print structured outcomes")
+    ap.add_argument("--stream", action="store_true",
+                    help="drive the serve_stream event loop: print "
+                         "per-token events with TTFT/inter-token latency")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill tokens per wave (stream mode)")
+    ap.add_argument("--slo-ttft-s", type=float, default=None,
+                    help="TTFT SLO — enables the QoS governor (stream)")
+    ap.add_argument("--slo-tok-s", type=float, default=None,
+                    help="inter-token SLO — enables the QoS governor")
     ap.add_argument("--fleet", type=int, default=0, metavar="N",
                     help="route the wave across N fleet replicas "
                          "(implies --continuous)")
@@ -71,6 +84,62 @@ def main() -> int:
         return 0
 
     server = Server(woven, cfg)
+    if args.stream:
+        prompts = [rng.integers(0, program.cfg.vocab, args.prompt_len)
+                   .astype(np.int64) for _ in range(args.requests)]
+        qos = None
+        if args.slo_ttft_s is not None or args.slo_tok_s is not None:
+            qos = {}  # governed under DEFAULT_QOS_POLICY + these SLOs
+        gen = server.serve_stream(
+            prompts, decode_tokens=args.decode_tokens,
+            prefill_chunk=args.prefill_chunk, qos=qos,
+            slo_ttft_s=args.slo_ttft_s, slo_tok_s=args.slo_tok_s)
+        import time as _time
+
+        t_start = _time.perf_counter()
+        last_tok: dict[int, float] = {}
+        print(f"{'wave':>5} {'event':<14} {'rid':>4} "
+              f"{'ttft_ms':>8} {'gap_ms':>7}  detail")
+        while True:
+            try:
+                ev = next(gen)
+            except StopIteration as stop:
+                outs = stop.value
+                break
+            kind, rid = ev["event"], ev.get("rid", -1)
+            ttft = gap = ""
+            if kind == "token":
+                if ev["index"] == 0:
+                    ttft = f"{1e3 * (ev['t'] - t_start):.1f}"
+                elif rid in last_tok:
+                    gap = f"{1e3 * (ev['t'] - last_tok[rid]):.1f}"
+                last_tok[rid] = ev["t"]
+                detail = f"token={ev['token']} index={ev['index']}"
+            elif kind == "wave":
+                detail = (f"batch={ev['batch']} emitted={ev['emitted']} "
+                          f"prefill_tokens={ev['prefill_tokens']} "
+                          f"op={ev['op']}")
+            else:
+                detail = " ".join(f"{k}={v}" for k, v in ev.items()
+                                  if k not in ("event", "wave", "t", "rid"))
+            print(f"{ev['wave']:>5} {kind:<14} "
+                  f"{rid if rid >= 0 else '':>4} {ttft:>8} {gap:>7}  "
+                  f"{detail}")
+        for o in server.last_outcomes:
+            ttft_ms = (f"{1e3 * o['ttft_s']:.1f}ms"
+                       if o["ttft_s"] is not None else "-")
+            gap_ms = (f"{1e3 * o['tok_gap_max_s']:.1f}ms"
+                      if o["tok_gap_max_s"] is not None else "-")
+            print(f"  rid {o['rid']}: {o['status']:<18} "
+                  f"tokens={o['tokens']} ttft={ttft_ms} max_gap={gap_ms}")
+        if server.last_qos_stats is not None:
+            q = server.last_qos_stats
+            print(f"qos: {q['switches']} OP switch(es), "
+                  f"{q['distinct_ops']} distinct OP(s), "
+                  f"objective={q['objective']}, "
+                  f"energy={q['energy_j']:.1f}J")
+        return 0
+
     if args.continuous:
         prompts = [rng.integers(0, program.cfg.vocab, args.prompt_len)
                    .astype(np.int64) for _ in range(args.requests)]

@@ -55,6 +55,14 @@ class PowerCapper:
             self._tasks[task_id].power = power_watts
             self._control_locked()
 
+    def set_cap(self, cap_watts: float) -> None:
+        """Move the node budget at runtime (a QoS governor reconfiguring
+        under a new power envelope) and re-run the control step against
+        the last reported powers, under the same lock `report` holds."""
+        with self._lock:
+            self.cap_watts = float(cap_watts)
+            self._control_locked()
+
     # -- control loop ------------------------------------------------------------
 
     def total_power(self) -> float:
@@ -93,5 +101,11 @@ class PowerCapper:
                         break
 
     def snapshot(self) -> list[dict]:
+        """Point-in-time copy of the task table.  Holds the same lock as
+        `report`/`_control_locked`/`set_cap`: a snapshot taken during a
+        concurrent control step sees either the pre- or post-step
+        frequencies, never a half-applied throttle order — the rows are
+        deep-copied dicts, so the caller can't race later mutations
+        either."""
         with self._lock:
             return [dataclasses.asdict(t) for t in self._tasks.values()]

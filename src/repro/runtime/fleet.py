@@ -186,6 +186,29 @@ class ServingFleet:
     def _live(self) -> list[Replica]:
         return [r for r in self.replicas if r.alive]
 
+    def _qos_rollup(self) -> dict[str, Any] | None:
+        """Aggregate per-replica QoS-governor stats (replicas serving
+        under a woven QoSAspect populate `server.last_qos_stats`): total
+        OP switches, the distinct OPs seen fleet-wide, and the summed
+        energy ledger.  None when no replica ran governed."""
+        per: list[dict[str, Any]] = []
+        for rep in self.replicas:
+            q = getattr(rep.server, "last_qos_stats", None)
+            if q is not None:
+                per.append({"host": rep.host, "switches": q["switches"],
+                            "distinct_ops": q["distinct_ops"],
+                            "tokens": q["tokens"],
+                            "energy_j": q["energy_j"]})
+        if not per:
+            return None
+        energy = sum(p["energy_j"] for p in per)
+        tokens = sum(p["tokens"] for p in per)
+        return {"replicas": per,
+                "switches": sum(p["switches"] for p in per),
+                "energy_j": energy,
+                "tokens": tokens,
+                "tokens_per_joule": tokens / energy if energy > 0 else None}
+
     # -- drain / spare management -----------------------------------------
 
     def request_drain(self, host: int, *, after_polls: int = 1) -> None:
@@ -504,6 +527,10 @@ class ServingFleet:
             "replicas_with_prefix_hits": sorted(
                 rep.host for rep in self.replicas if rep.prefix_hits > 0),
             "affinity_hits": sum(r.affinity_hits for r in self.replicas),
+            # QoS plane rollup: replicas serving under a woven QoSAspect
+            # report per-replica OP switches and the fleet energy ledger
+            # (None when no replica ran governed)
+            "qos": self._qos_rollup(),
         }
         return [outputs.get(r, np.asarray([], np.int64))
                 for r in range(n_req)]

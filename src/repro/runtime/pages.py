@@ -633,11 +633,22 @@ class PagedCacheManager:
                                 shared=shared_pages)
         self.prefix_hits += len(shared_pages)
         self._new_meta(rid, S, final_len)
+        return self.prefill_view(rid, start), start
 
+    def prefill_view(self, rid, resident: int) -> dict:
+        """Single-request paged *prefill* cache view with ``index`` pinned
+        at `resident` tokens already pool-written — the view `admit_begin`
+        hands a fresh admission (resident = shared prefix length) and the
+        chunked-prefill loop re-requests between chunks (resident = last
+        chunk boundary).  Chunk boundaries must stay page-aligned: a
+        quantized page's scale is fixed by its first write, so every page
+        must be written by exactly one prefill dispatch for the pool bytes
+        to match a one-shot prefill bit-for-bit.
+        """
         view: dict[str, Any] = {}
         for name, info in self._groups.items():
             group: dict[str, Any] = dict(self._pools[name])
-            idx = np.full((1,), start, np.int32)
+            idx = np.full((1,), resident, np.int32)
             if info["scanned"]:
                 group["index"] = jnp.asarray(np.tile(idx, (info["n"], 1)))
             else:
@@ -645,20 +656,29 @@ class PagedCacheManager:
             if info["ring"]:
                 W = info["length"]
                 shape = (info["n"], W) if info["scanned"] else (W,)
-                group["pos"] = jnp.full(shape, -1, jnp.int32)
+                pos = self._meta.get(rid, {}).get("pos", {}).get(name)
+                group["pos"] = jnp.full(shape, -1, jnp.int32) \
+                    if pos is None else pos
             view[name] = group
         view["block_tables"] = self._table_row(rid)
-        return view, start
+        return view
 
-    def admit_finish(self, rid, new_cache: dict, tokens) -> None:
-        """Absorb the paged-prefill step's outputs (pools now hold the
-        suffix K/V) and register the prompt in the prefix index."""
+    def absorb_prefill(self, rid, new_cache: dict) -> None:
+        """Absorb one prefill *chunk*'s pool writes (pk/pv plus the scale
+        sidecars, ring write positions) without registering the prompt —
+        `admit_finish` runs once, on the final chunk, when every prompt
+        page holds its bytes."""
         meta = self._meta[rid]
         for name, info in self._groups.items():
             group = new_cache[name]
             self._pools[name] = self._pool_state(group)
             if info["ring"]:
                 meta["pos"][name] = group["pos"]  # (W,) or (n, W)
+
+    def admit_finish(self, rid, new_cache: dict, tokens) -> None:
+        """Absorb the paged-prefill step's outputs (pools now hold the
+        suffix K/V) and register the prompt in the prefix index."""
+        self.absorb_prefill(rid, new_cache)
         self._register_prefix(rid, tokens)
 
     @staticmethod

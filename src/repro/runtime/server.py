@@ -71,6 +71,13 @@ class ServerConfig:
     deadline_s: float | None = None
     retries: int | None = None
     pool_audit: bool | None = None
+    # QoS-adaptive streaming (serve_stream): tokens of a long admission
+    # prefilled per decode wave (0/None: one-shot admission, unless a woven
+    # QoS governor drives the knob), and per-request latency SLOs threaded
+    # into the QoS policy (TTFT and per-token gap, seconds)
+    prefill_chunk: int | None = None
+    slo_ttft_s: float | None = None
+    slo_tok_s: float | None = None
 
 
 class Server:
@@ -138,15 +145,22 @@ class Server:
         self.params = init_params(woven.program.model, jax.random.PRNGKey(cfg.seed),
                                   woven.state.policies)
         self.served = 0
-        self.latencies: list[float] = []
-        self.decode_step_latencies: list[float] = []  # serve_continuous steps
-        self._step_lat_by_batch: dict[int, list[float]] = {}
+        # latency histories are sliding windows (deques), not unbounded
+        # lists: a long-running serve_stream session appends per wave, and
+        # the feedback consumers (refine_kernel_tuner, the launchers'
+        # percentile prints) only ever want recent observations anyway
+        self.history_window = 4096
+        self.latencies: deque[float] = deque(maxlen=self.history_window)
+        self.decode_step_latencies: deque[float] = \
+            deque(maxlen=self.history_window)  # serve_stream steps
+        self._step_lat_by_batch: dict[int, deque[float]] = {}
         self._paged_sig = None  # last paged-decode signature served
         self._paged_dtype = None
         self.last_pool_stats: dict[str, Any] | None = None  # serve_continuous
         self.last_spec_stats: dict[str, Any] | None = None  # speculative serve
         self.last_fault_stats: dict[str, Any] | None = None  # resilience layer
         self.last_outcomes: list[dict[str, Any]] | None = None  # per request
+        self.last_qos_stats: dict[str, Any] | None = None  # QoS governor
         self._last_admit_rescored = False  # last admission was a re-score
         self._verify_steps: dict[tuple, Callable] = {}  # (variant, S) -> fn
 
@@ -413,6 +427,168 @@ class Server:
             self._verify_steps[key] = fn
         return fn
 
+    def _qos_governor(self, state, qos, slo_ttft_s=None, slo_tok_s=None):
+        """Resolve the serving QoS control plane: an explicit QoSGovernor
+        (or policy dict) argument wins, then a woven `qos_governor`
+        instance, then the woven `serve_qos` policy (QoSAspect); `False`
+        forces it off.  ServerConfig / argument SLOs override the policy's
+        before the governor is built."""
+        from repro.runtime.qos import QoSGovernor
+
+        if qos is False:
+            return None
+        if isinstance(qos, QoSGovernor):
+            return qos
+        if qos is None:
+            gov = state.extra.get("qos_governor")
+            if gov is not None:
+                return gov
+        pol = qos if isinstance(qos, dict) else state.extra.get("serve_qos")
+        if pol is None:
+            return None
+        pol = dict(pol)
+        if self.cfg.slo_ttft_s is not None:
+            pol["slo_ttft_s"] = float(self.cfg.slo_ttft_s)
+        if self.cfg.slo_tok_s is not None:
+            pol["slo_tok_s"] = float(self.cfg.slo_tok_s)
+        if slo_ttft_s is not None:
+            pol["slo_ttft_s"] = float(slo_ttft_s)
+        if slo_tok_s is not None:
+            pol["slo_tok_s"] = float(slo_tok_s)
+        if not pol.get("enabled", True):
+            return None
+        return QoSGovernor(pol, broker=self.broker)
+
+    def _qos_enabled(self, qos) -> bool:
+        """Cheap pre-check (no governor construction) used by the memo
+        gate: would serve_stream run under a QoS control plane?"""
+        if qos is False:
+            return False
+        if qos is not None:
+            return True
+        extra = self.woven.state.extra
+        return extra.get("qos_governor") is not None \
+            or extra.get("serve_qos") is not None
+
+    def _paged_admit_chunked(self, manager: PagedCacheManager, rid, prompt,
+                             final_len: int, variant, inj=None,
+                             chunk: int = 0):
+        """Chunked direct-to-pool admission: reserve the block table up
+        front, then prefill page-aligned `chunk`-token slices of the
+        non-shared suffix one call at a time, so a long admission spreads
+        across decode waves instead of stalling the in-flight batch.
+
+        Returns (tok, spec, cont):
+          * tok set, cont None — the admission completed in one shot
+            (full-prompt prefix hit, ring pool, blocked-softmax prompt, or
+            a suffix that fits one chunk): delegated to `_paged_admit`;
+          * tok None, cont a closure — call cont() once per wave: it
+            returns {"tok": None, "resident": r, "chunk": c} after an
+            interior chunk and {"tok": first_token, ...} once the final
+            chunk ran (admit_finish absorbed the pool and registered the
+            prefix).  A non-finite final chunk aborts the pool state and
+            raises NonFiniteLogits exactly like the one-shot path.
+
+        Parity: chunk boundaries are rounded down to page multiples (the
+        shared prefix is page-aligned, so every pool page is written by
+        exactly one dispatch and quantized first-write scales match a
+        one-shot prefill), and each interior chunk runs the same widened-q
+        suffix-over-prefix shape a prefix-sharing admission uses — already
+        bit-identical to the dense one-shot prefill by the prefix-sharing
+        parity suites.  Prompts on the blocked-softmax path (S > 2 *
+        xla_attn_block) keep the one-shot prefill: their logits come from
+        a different (blocked online-softmax) numeric family and splitting
+        would change them.  Ring pools keep it too (eviction on write
+        breaks the resident-prefix invariant between chunks).  The
+        "paged_prefill" join point fires once, at reservation time,
+        exactly like the one-shot path fires it before pool allocation.
+        """
+        toks = jnp.asarray(prompt, jnp.int32).reshape(1, -1)
+        toks_np = np.asarray(prompt, np.int64).reshape(-1)
+        S = int(toks.shape[1])
+        if not manager.has_structure:
+            _, probe = self.probe_vc(variant, self.params,
+                                     {"tokens": toks[:, :1]})
+            if not paged_compatible(probe):
+                raise ValueError(
+                    "model cache is not paged-compatible (SSM/recurrent "
+                    "state) — use serve_batch")
+            ring = manager.window is not None and manager.window < S
+            manager.init_structure(probe, ring=ring)
+        state_extra = self.woven.variant_state(
+            None if variant in (None, "__default__") else variant
+        ).extra
+        blocked = S > 2 * int(state_extra.get("xla_attn_block", 1024))
+        shared_pages, shared_len = manager.match_prefix(toks_np)
+        ps = manager.page_size
+        step = max(ps, (int(chunk) // ps) * ps)  # page-aligned, >= 1 page
+        if (shared_len >= S or manager._ring_pool() or blocked
+                or S - shared_len <= step):
+            tok, spec = self._paged_admit(manager, rid, prompt, final_len,
+                                          variant, inj=inj)
+            return tok, spec, None
+        self._last_admit_rescored = False
+        spec = inj.fire("paged_prefill", rid=rid) if inj is not None else None
+        _, start = manager.admit_begin(
+            rid, toks_np, final_len=final_len,
+            shared_pages=shared_pages, shared_len=shared_len)
+        st = {"done": start}
+
+        def cont() -> dict:
+            done = st["done"]
+            end = min(done + step, S)
+            pos = jnp.arange(done, end, dtype=jnp.int32)[None]
+            # the view is rebuilt per chunk, never cached: the dispatches
+            # interleaved between chunks (decode steps, other admissions)
+            # donate the pool arrays, so a held view would reference
+            # deleted buffers — prefill_view rebinds to the live pools
+            logits, new_cache = self.paged_prefill_vc(
+                variant, self.params,
+                {"tokens": toks[:, done:end], "positions": pos},
+                manager.prefill_view(rid, done), prefix_len=done)
+            if end < S:
+                manager.absorb_prefill(rid, new_cache)
+                st["done"] = end
+                return {"tok": None, "resident": end, "chunk": end - done}
+            manager.admit_finish(rid, new_cache, toks_np)
+            lg = logits
+            if spec is not None and spec.kind == "nan_logits":
+                lg = jnp.full_like(lg, jnp.nan)
+            if not bool(np.isfinite(float(
+                    jnp.max(lg[0, -1].astype(jnp.float32))))):
+                manager.abort(rid)
+                raise NonFiniteLogits(
+                    f"non-finite prefill logits for request {rid!r}")
+            return {"tok": int(jnp.argmax(lg[0, -1], axis=-1)),
+                    "resident": S, "chunk": end - done}
+
+        return None, spec, cont
+
+    @staticmethod
+    def _draft_sync(draft_srv: "Server", dmanager: PagedCacheManager,
+                    rids, active, outputs, lengths) -> None:
+        """Restore the speculative lockstep invariant (draft resident
+        length == target accepted length at round start) by replaying the
+        target's emitted tokens through the draft cache.  Static-k serves
+        never need this — rollback keeps both pools in sync — but a QoS
+        governor that lowers draft_len to 0 for some waves leaves the
+        draft behind by the tokens those plain waves emitted."""
+        for r in rids:
+            dlen = int(dmanager._meta[r]["length"])
+            tgt = int(active[r]["pos"])
+            while dlen < tgt:
+                # slot p holds sequence token p; for p >= prompt length
+                # that token is outputs[p - S]
+                t = outputs[r][dlen - lengths[r]]
+                dcache = dmanager.batch([r])
+                _, dnew = draft_srv.decode_vc(
+                    None, draft_srv.params,
+                    {"tokens": jnp.asarray([[t]], jnp.int32),
+                     "positions": jnp.asarray([[dlen]], jnp.int32)},
+                    dcache)
+                dmanager.absorb([r], dnew)
+                dlen += 1
+
     def serve_continuous(self, prompts: list[np.ndarray], *,
                          decode_tokens: int | None = None,
                          page_size: int | None = None,
@@ -424,8 +600,21 @@ class Server:
                          fault_injector=None,
                          deadline_s: float | None = None,
                          pool_audit: bool | None = None,
-                         preemption=None) -> list[np.ndarray]:
+                         preemption=None,
+                         prefill_chunk: int | None = None,
+                         qos=None,
+                         arrival_waves=None,
+                         slo_ttft_s: float | None = None,
+                         slo_tok_s: float | None = None,
+                         on_event=None) -> list[np.ndarray]:
         """Continuous batching over a prefix-shared paged KV-cache pool.
+
+        This is the thin compatibility wrapper over the `serve_stream`
+        event loop: it handles the memo table (the stream engine never
+        touches it), drains the per-token event stream (`on_event`
+        receives each event dict when given), and returns the collected
+        outputs — token-for-token identical to what the pre-stream
+        monolith produced.
 
         Unlike `serve_batch` — which prefils everything up front, pads
         every request's cache to the same length and decodes the fixed
@@ -500,9 +689,16 @@ class Server:
             else self.woven.state.extra.get("fault_injector")
         pre_deadline = deadline_s if deadline_s is not None \
             else self._resilience(self.woven.state)["deadline_s"]
-        # a preemptible serve may drain mid-queue — same non-reproducibility
+        chunk_pre = prefill_chunk if prefill_chunk is not None \
+            else self.cfg.prefill_chunk
+        # a preemptible serve may drain mid-queue — same non-reproducibility.
+        # Chunked/QoS/arrival serves keep token bit-parity but carry
+        # per-wave stats and governor state a memo hit would silently skip,
+        # so they bypass the table too (conservative: outputs would match).
         memo_ok = (pre_inj is None or not pre_inj.armed) \
-            and pre_deadline is None and preemption is None
+            and pre_deadline is None and preemption is None \
+            and not chunk_pre and arrival_waves is None \
+            and not self._qos_enabled(qos)
         if memo_ok and self.memo is not None and self.memo.running:
             hit, out = self.memo.lookup(key)
             if hit:
@@ -511,7 +707,8 @@ class Server:
                 # pool stats so a following refine_kernel_tuner (or a
                 # stats reader) never sees stale state from an earlier
                 # (differently-shaped or differently-knobbed) serve
-                self.decode_step_latencies = []
+                self.decode_step_latencies = deque(
+                    maxlen=self.history_window)
                 self._step_lat_by_batch = {}
                 self._paged_sig = None
                 self._paged_dtype = None
@@ -519,7 +716,95 @@ class Server:
                 self.last_spec_stats = None
                 self.last_fault_stats = None
                 self.last_outcomes = None
+                self.last_qos_stats = None
                 return out
+        gen = self.serve_stream(
+            prompts, decode_tokens=n, page_size=page_size,
+            pool_pages=pool_pages, max_batch=max_batch,
+            prefix_sharing=prefix_sharing, draft_len=draft_len,
+            draft=draft, fault_injector=fault_injector,
+            deadline_s=deadline_s, pool_audit=pool_audit,
+            preemption=preemption, prefill_chunk=prefill_chunk, qos=qos,
+            arrival_waves=arrival_waves, slo_ttft_s=slo_ttft_s,
+            slo_tok_s=slo_tok_s)
+        while True:
+            try:
+                ev = next(gen)
+            except StopIteration as stop:
+                result = stop.value
+                break
+            if on_event is not None:
+                on_event(ev)
+        # fault-shaped results (rejections, quarantines, deadline cuts)
+        # must never be memoized: the memo key carries no pool geometry or
+        # fault schedule, so a later right-sized serve would replay them
+        fs = self.last_fault_stats
+        clean = (memo_ok and fs["events"] == 0 and not fs["actions"]
+                 and all(o["status"] == "ok" for o in self.last_outcomes))
+        if self.memo is not None and clean:
+            self.memo.update(key, result)
+        return result
+
+    def serve_stream(self, prompts: list[np.ndarray], *,
+                     decode_tokens: int | None = None,
+                     page_size: int | None = None,
+                     pool_pages: int | None = None,
+                     max_batch: int | None = None,
+                     prefix_sharing: bool | None = None,
+                     draft_len: int | None = None,
+                     draft: "Server | None" = None,
+                     fault_injector=None,
+                     deadline_s: float | None = None,
+                     pool_audit: bool | None = None,
+                     preemption=None,
+                     prefill_chunk: int | None = None,
+                     qos=None,
+                     arrival_waves=None,
+                     slo_ttft_s: float | None = None,
+                     slo_tok_s: float | None = None):
+        """The streaming serving engine: a generator over per-token events.
+
+        This is `serve_continuous`'s wave loop — admission, chunked
+        prefill, decode/verify steps, retirement, fault isolation —
+        refactored into an event loop that *yields* as tokens appear and
+        *returns* the final per-request output list (read it from
+        `StopIteration.value`, or use the `serve_continuous` wrapper).
+        Event dicts (all carry "wave" — the logical wave index — and "t",
+        a `perf_counter` stamp recorded at creation):
+
+          {"event": "admit",         "rid": r}
+          {"event": "prefill_chunk", "rid": r, "resident": i, "total": S}
+          {"event": "token",  "rid": r, "token": t, "index": i}
+          {"event": "outcome","rid": r, "status": s, "reason": ..., "tokens": n}
+          {"event": "wave",   "batch": B, "dt_s": dt, "emitted": e,
+           "prefill_tokens": p, "k": k_eff, "op": knobs-or-None}
+
+        Chunked prefill (`prefill_chunk` > 0, ServerConfig, or the QoS
+        governor's knob): a long admission reserves its block table up
+        front, then prefills one page-aligned chunk per wave through the
+        widened-q suffix-over-prefix shape, so in-flight decodes keep
+        emitting a token every wave while the newcomer streams in — token
+        outputs stay bit-identical to one-shot admission (see
+        `_paged_admit_chunked` for the parity argument and gates).
+
+        QoS control plane (`qos`: a QoSGovernor, a policy dict, a woven
+        QoSAspect, or False to force off): the serving operating point —
+        max_batch x prefill_chunk x draft_len x frequency (power cap) — is
+        a mARGOt application re-selected online as load shifts, with
+        per-request TTFT / per-token SLOs as Goal constraints and tokens/s
+        or tokens/joule as the objective; observed wave latencies feed
+        `Margot.observe` and the modeled power feeds the PowerCapper.
+        Every emitted token is still a target argmax, so governor knob
+        moves never change the output bytes — only when they appear.
+
+        `arrival_waves` (one int per prompt) lands requests on a logical
+        wave clock instead of all-at-wave-0 — the deterministic open-loop
+        load ramp the qos bench drives.
+        """
+        if not prompts:
+            return []
+        n = decode_tokens or self.cfg.decode_tokens
+        k = draft_len if draft_len is not None else self.cfg.draft_len
         t0 = time.perf_counter()
         variant = self._variant()
         state = self.woven.variant_state(
@@ -535,16 +820,31 @@ class Server:
             res["pool_audit"] = bool(pool_audit)
         inj = fault_injector if fault_injector is not None \
             else state.extra.get("fault_injector")
+        gov = self._qos_governor(state, qos, slo_ttft_s, slo_tok_s)
+        # chunked prefill: explicit argument, then ServerConfig, then the
+        # governor's prefill_chunk knob (0/None: one-shot admission).
+        # Capacity-routed MoE couples prefill tokens within the group
+        # (capacity/drop decisions see the whole dispatch), so a chunked
+        # prefill would not be bit-identical — the gate stays off there.
+        chunk_ok = self.woven.program.cfg.family != "moe"
+        chunk_cfg = prefill_chunk if prefill_chunk is not None \
+            else self.cfg.prefill_chunk
 
         if k is None:
             k = int(state.extra.get("speculative_draft_len", 0) or 0)
         k = max(0, int(k))
+        # the governor may raise draft_len at runtime: reserve verify
+        # slack (and size the draft pool) for the largest knob value
+        k_max = k
+        if gov is not None:
+            k_max = max([k] + [int(v) for v in gov.knob_values("draft_len")])
 
         lengths = [int(np.asarray(p).reshape(-1).shape[0]) for p in prompts]
         # speculative verify steps write up to k slots past the accepted
         # length before rolling back — reserve that slack at admission so
         # draft-block writes can never outrun the block table
-        finals = [min(S + n - 1 + k, self.cfg.max_cache_len) for S in lengths]
+        finals = [min(S + n - 1 + k_max, self.cfg.max_cache_len)
+                  for S in lengths]
         max_batch = max_batch or self.cfg.max_batch or len(prompts)
         pool_pages = pool_pages or self.cfg.pool_pages \
             or max(sum(cdiv(f, ps) for f in finals), 1)
@@ -566,18 +866,18 @@ class Server:
         # feedback observations are per-knob-setting: start a fresh window,
         # bucketed by batch size (a decode step's cost scales with the live
         # batch, and the DSE signature is keyed to one batch)
-        self.decode_step_latencies = []
+        self.decode_step_latencies = deque(maxlen=self.history_window)
         self._step_lat_by_batch = {}
 
-        if k and self.woven.program.cfg.family == "moe":
+        if k_max and self.woven.program.cfg.family == "moe":
             # Capacity-routed MoE couples tokens within a group: a verify
             # step's S-token router sees different capacity/drop decisions
             # than S sequential one-token steps, so verify logits would
             # not be bit-identical to plain decode.  Speculation stays off.
-            k = 0
+            k = k_max = 0
         draft_srv = draft or self.draft or self  # self-speculation default
         dmanager: PagedCacheManager | None = None
-        if k:
+        if k_max:
             # the draft keeps its own (unshared) page pool with the same
             # continuous-batching dynamics; sized for full concurrency so
             # a draft admission can never fail behind a target admission
@@ -591,8 +891,25 @@ class Server:
                 prefix_sharing=False, cache_dtype=cache_dtype,
             )
 
-        waiting = deque(range(len(prompts)))  # arrival order
+        # logical-clock arrivals: requests with a future arrival wave sit
+        # in `pending` until the wave counter reaches them — the
+        # deterministic open-loop ramp the qos bench drives.  Default
+        # (None): everything arrives at wave 0, exactly the old semantics.
+        arrive_at = None
+        if arrival_waves is not None:
+            if len(arrival_waves) != len(prompts):
+                raise ValueError("arrival_waves must have one wave index "
+                                 "per prompt")
+            arrive_at = [max(0, int(w)) for w in arrival_waves]
+        waiting: deque = deque()              # arrived, not yet admitted
+        pending: deque = deque()              # not yet arrived (wave clock)
+        if arrive_at is None:
+            waiting.extend(range(len(prompts)))
+        else:
+            pending.extend(sorted(range(len(prompts)),
+                                  key=lambda r: (arrive_at[r], r)))
         active: dict[int, dict] = {}          # rid -> {"tok", "pos"}
+        prefilling: dict[int, Any] = {}       # rid -> chunked-admit cont
         outputs: dict[int, list[int]] = {}
         seen_batches: set[int] = set()        # batch sizes already compiled
         spec = {"on": False, "checked": False}
@@ -602,6 +919,40 @@ class Server:
                  "draft_steps": 0, "verify_steps": 0, "decode_steps": 0}
 
         grouped = {"admissions": 0}  # identical-prompt shared re-scores
+
+        # the live operating point: base values from the arguments/config,
+        # re-selected by the governor as load shifts (closures read this)
+        knobs = {"max_batch": max_batch,
+                 "chunk": int(chunk_cfg or 0) if chunk_ok else 0,
+                 "k": k, "freq": 1.0}
+
+        # per-token stream events accumulate here and are yielded at wave
+        # boundaries; "t" is stamped at creation so latency math is exact
+        # regardless of when the consumer drains
+        evq: list[dict] = []
+        wave = 0
+        wavestat = {"emitted": 0, "prefill_tokens": 0}
+        now0 = time.perf_counter()
+        rq: dict[int, dict] = {
+            r: {"arrive_t": now0, "arrive_wave": 0, "first_t": None,
+                "first_wave": None, "tok_t": []}
+            for r in range(len(prompts))}
+
+        def _emit(kind: str, **kw) -> None:
+            evq.append({"event": kind, "wave": wave,
+                        "t": time.perf_counter(), **kw})
+
+        def _first_token(rid, tok) -> None:
+            outputs[rid] = [tok]
+            active[rid] = {"tok": tok, "pos": lengths[rid]}
+            m = rq[rid]
+            m["first_t"] = time.perf_counter()
+            m["first_wave"] = wave
+            m["tok_t"].append(m["first_t"])
+            wavestat["emitted"] += 1
+            _emit("token", rid=rid, token=tok, index=0)
+            if gov is not None:
+                gov.observe("ttft_s", m["first_t"] - m["arrive_t"])
 
         # -- resilience machinery ---------------------------------------------
         # every fault the policy can absorb lands in `outcome` / `actions`
@@ -687,6 +1038,8 @@ class Server:
             fstats[status] += 1
             actions.append({"point": "admit", "kind": status, "rid": rid,
                             "reason": reason})
+            _emit("outcome", rid=rid, status=status, reason=reason,
+                  tokens=len(outputs.get(rid, [])))
 
         def _drop(rid):
             """Release every trace of `rid` from both pools + the batch."""
@@ -694,6 +1047,7 @@ class Server:
             if dmanager is not None:
                 dmanager.abort(rid)
             active.pop(rid, None)
+            prefilling.pop(rid, None)
             start_t.pop(rid, None)
             forced_deadline.discard(rid)
 
@@ -704,6 +1058,8 @@ class Server:
             fstats["quarantined"] += 1
             actions.append({"point": "decode_step", "kind": "quarantined",
                             "rid": rid, "reason": reason})
+            _emit("outcome", rid=rid, status="quarantined", reason=reason,
+                  tokens=len(outputs.get(rid, [])))
             _drop(rid)
 
         def _degrade(reason):
@@ -742,6 +1098,7 @@ class Server:
                 # token: reject it through the non-finite path
                 raise NonFiniteLogits(
                     f"injected non-finite admission logits for {rid!r}")
+            _emit("admit", rid=rid)
             tok = None
             if reuse_from is not None:
                 tok = self._admit_grouped(manager, rid, prompts[rid],
@@ -749,20 +1106,39 @@ class Server:
                                           outputs[reuse_from][0])
                 if tok is not None:
                     grouped["admissions"] += 1
+            cont = None
             if tok is None:
-                tok, pspec = self._paged_admit(manager, rid, prompts[rid],
-                                               finals[rid], variant, inj=inj)
+                chunk = int(knobs["chunk"] or 0)
+                if chunk > 0:
+                    tok, pspec, cont = self._paged_admit_chunked(
+                        manager, rid, prompts[rid], finals[rid], variant,
+                        inj=inj, chunk=chunk)
+                else:
+                    tok, pspec = self._paged_admit(
+                        manager, rid, prompts[rid], finals[rid], variant,
+                        inj=inj)
                 if pspec is not None and pspec.kind == "deadline":
                     forced_deadline.add(rid)
-            outputs[rid] = [tok]
-            active[rid] = {"tok": tok, "pos": lengths[rid]}
+                if cont is None:
+                    # a one-shot admission processed the whole prompt this
+                    # wave — billed into the wave event like a chunk is, so
+                    # the governor's tok_s observations (and any modeled
+                    # clock over the event stream) see admission stalls on
+                    # both prefill paths
+                    wavestat["prefill_tokens"] += lengths[rid]
             start_t[rid] = time.monotonic()
+            if cont is not None:
+                # chunked admission in flight: the block table is
+                # reserved, the prompt streams in one chunk per wave
+                prefilling[rid] = cont
+            else:
+                _first_token(rid, tok)
             if not spec["checked"]:
                 # pool family is known after the first admission: ring
                 # pools evict on write, which breaks the widened-q verify
                 # mask — the server gates speculation to linear pools
                 spec["checked"] = True
-                spec["on"] = bool(k) and not manager._ring_pool()
+                spec["on"] = bool(k_max) and not manager._ring_pool()
             if spec["on"]:
                 # draft admits in lockstep (its length must equal the
                 # target's accepted length at every round start); a draft
@@ -791,7 +1167,11 @@ class Server:
                 return False
 
         def admit_ready() -> None:
-            while waiting and len(active) < max_batch:
+            # the admission gate counts chunked prefills in flight: they
+            # hold reserved pages and will join the decode batch, so the
+            # governor's max_batch knob bounds active + prefilling
+            while waiting and (len(active) + len(prefilling)
+                               < int(knobs["max_batch"])):
                 rid = None
                 if manager.prefix_sharing and len(waiting) > 1:
                     # prefix-aware admission: a sharer queued behind a
@@ -827,15 +1207,21 @@ class Server:
                 base = np.asarray(prompts[rid], np.int64).reshape(-1)
                 for cand in [c for c in waiting if np.array_equal(
                         np.asarray(prompts[c], np.int64).reshape(-1), base)]:
-                    if len(active) >= max_batch or not manager.can_admit(
-                            finals[cand], tokens=prompts[cand]):
+                    if (len(active) + len(prefilling)
+                            >= int(knobs["max_batch"])) \
+                            or not manager.can_admit(
+                                finals[cand], tokens=prompts[cand]):
                         break
                     try_admit(cand, reuse_from=rid)
                     waiting.remove(cand)
 
         def _drain_waiting() -> None:
             """Preemption: hand the not-yet-admitted queue back with
-            structured `drained` outcomes — in-flight work is untouched."""
+            structured `drained` outcomes — in-flight work is untouched.
+            Future arrivals (the logical-clock `pending` queue) drain too:
+            a preempted replica will never reach their wave."""
+            while pending:
+                waiting.append(pending.popleft())
             while waiting:
                 rid = waiting.popleft()
                 outcome[rid] = {"status": "drained",
@@ -844,6 +1230,8 @@ class Server:
                 fstats["drained"] += 1
                 actions.append({"point": "drain", "kind": "drained",
                                 "rid": rid})
+                _emit("outcome", rid=rid, status="drained",
+                      reason=outcome[rid]["reason"], tokens=0)
 
         def _admit_or_drain() -> None:
             if preemption is not None and preemption.pending:
@@ -853,35 +1241,75 @@ class Server:
 
         # prompts the cache could never host are rejected up front — the
         # old path crashed the whole serve mid-flight on the first one
-        for r in [r for r in list(waiting)
+        for r in [r for r in list(waiting) + list(pending)
                   if lengths[r] > self.cfg.max_cache_len]:
-            waiting.remove(r)
+            (waiting if r in waiting else pending).remove(r)
             _reject(r, f"prompt ({lengths[r]} tokens) exceeds "
                        f"max_cache_len ({self.cfg.max_cache_len})",
                     status="oversized")
 
         mismatch_rounds = 0
         aborted: Exception | None = None
-        _admit_or_drain()
-        while active or waiting:
+        while active or waiting or prefilling or pending:
+            while evq:
+                yield evq.pop(0)
+            t_wave = time.perf_counter()
+            wavestat["emitted"] = 0
+            wavestat["prefill_tokens"] = 0
+            # logical-clock arrivals land before anything else this wave
+            if pending:
+                arrived = False
+                while pending and arrive_at[pending[0]] <= wave:
+                    r = pending.popleft()
+                    waiting.append(r)
+                    rq[r]["arrive_t"] = time.perf_counter()
+                    rq[r]["arrive_wave"] = wave
+                    arrived = True
+                if arrived:
+                    _admit_or_drain()
+            # the governor re-selects the serving operating point as load
+            # shifts (every reselect_every waves); knob moves only change
+            # scheduling — every emitted token stays a target argmax
+            if gov is not None and wave % gov.reselect_every == 0:
+                op = gov.decide(wave=wave,
+                                waiting=len(waiting) + len(pending),
+                                active=len(active) + len(prefilling))
+                v = op.get("max_batch")
+                knobs["max_batch"] = min(max_batch, int(v)) if v \
+                    else max_batch
+                if chunk_ok and chunk_cfg is None \
+                        and op.get("prefill_chunk") is not None:
+                    knobs["chunk"] = int(op["prefill_chunk"])
+                if op.get("draft_len") is not None:
+                    knobs["k"] = min(k_max, int(op["draft_len"]))
+                if op.get("freq") is not None:
+                    knobs["freq"] = float(op["freq"])
+            if wave == 0:
+                _admit_or_drain()
             # preemption arriving mid-wave drains the queue at the next
             # round boundary; the admitted batch keeps decoding to the end
-            if preemption is not None and preemption.pending and waiting:
+            if preemption is not None and preemption.pending \
+                    and (waiting or pending):
                 _drain_waiting()
-                if not active:
+                if not active and not prefilling:
                     break
             # retire before stepping: requests at their budget free pages
             done = [r for r in active if len(outputs[r]) >= n]
             for rid in done:
                 _retire(rid)
                 del active[rid]
+                _emit("outcome", rid=rid, status=outcome[rid]["status"],
+                      reason=outcome[rid]["reason"],
+                      tokens=len(outputs[rid][:n]))
             # per-request SLO sweep: overdue requests (wall clock past
             # deadline_s, or forced over by an injected `deadline` fault)
-            # retire with partial output and a deadline_exceeded marker
+            # retire with partial output and a deadline_exceeded marker —
+            # chunked admissions still prefilling are swept too (their
+            # clock started at reservation)
             overdue = []
             if deadline_s_eff is not None or forced_deadline:
                 now = time.monotonic()
-                overdue = [r for r in active
+                overdue = [r for r in list(active) + list(prefilling)
                            if r in forced_deadline
                            or (deadline_s_eff is not None
                                and now - start_t[r] > deadline_s_eff)]
@@ -890,15 +1318,44 @@ class Server:
                                 "reason": "request exceeded its deadline"}
                 fstats["deadline_exceeded"] += 1
                 actions.append({"point": "decode_step", "kind": "deadline",
-                                "rid": rid, "emitted": len(outputs[rid])})
-                _retire(rid)
-                active.pop(rid, None)
+                                "rid": rid,
+                                "emitted": len(outputs.get(rid, []))})
+                _emit("outcome", rid=rid, status="deadline_exceeded",
+                      reason=outcome[rid]["reason"],
+                      tokens=len(outputs.get(rid, [])))
+                if rid in prefilling:
+                    # mid-prefill: nothing registered yet — abort the
+                    # reserved pages instead of retiring
+                    del prefilling[rid]
+                    _drop(rid)
+                else:
+                    _retire(rid)
+                    active.pop(rid, None)
                 forced_deadline.discard(rid)
             if done or overdue:
                 _audit()
                 _admit_or_drain()
+            # advance chunked prefills: one page-aligned chunk per request
+            # per wave — in-flight decodes below never wait on a long
+            # admission, the newcomer streams in beside them
+            for rid in list(prefilling):
+                try:
+                    step_r = prefilling[rid]()
+                except (FaultError, PoolExhausted) as e:
+                    outputs.pop(rid, None)
+                    _drop(rid)
+                    _reject(rid, str(e))
+                    _audit()
+                    continue
+                wavestat["prefill_tokens"] += step_r["chunk"]
+                if step_r["tok"] is None:
+                    _emit("prefill_chunk", rid=rid,
+                          resident=step_r["resident"], total=lengths[rid])
+                else:
+                    del prefilling[rid]
+                    _first_token(rid, step_r["tok"])
             if not active:
-                if waiting:
+                if waiting and not prefilling:
                     # pool at its emptiest still can't fit the head
                     # request: reject *it* and keep serving the rest — the
                     # old batch-killing RuntimeError here threw away every
@@ -907,15 +1364,37 @@ class Server:
                     _reject(rid, f"page pool too small: request {rid} "
                                  f"needs more pages than the pool holds")
                     _admit_or_drain()
+                    wave += 1
+                    continue
+                if prefilling or pending:
+                    # nothing to decode this wave: prefill chunks advanced
+                    # above / the clock ticks toward the next arrival
+                    wave += 1
                     continue
                 break
 
             rids = list(active)
-            # a verify round writes k+1 slots per request; past the
+            # a verify round writes k_eff+1 slots per request; past the
             # final_len clamp (cache capacity) fall back to plain rounds —
-            # S stays in {1, k+1} so only two step shapes ever compile
-            S = k + 1 if (spec["on"] and all(
-                active[r]["pos"] + k + 1 <= finals[r] for r in rids)) else 1
+            # S stays within the knob grid so only a few step shapes ever
+            # compile (static serves keep the old {1, k+1} pair)
+            k_eff = int(knobs["k"]) if spec["on"] else 0
+            S = k_eff + 1 if (k_eff and spec["on"] and all(
+                active[r]["pos"] + k_eff + 1 <= finals[r] for r in rids)) \
+                else 1
+
+            if S > 1 and dmanager is not None:
+                # dynamic draft_len: plain waves (k_eff == 0 under the
+                # governor) leave the draft cache behind the target's
+                # accepted length — replay the emitted tokens through the
+                # draft before the round so the lockstep invariant holds.
+                # Static-k serves never enter the replay loop.
+                try:
+                    self._draft_sync(draft_srv, dmanager, rids, active,
+                                     outputs, lengths)
+                except Exception as e:
+                    _degrade(f"draft catch-up fault: {e}")
+                    S = 1
 
             if S > 1:
                 pos0 = {r: active[r]["pos"] for r in rids}
@@ -955,6 +1434,7 @@ class Server:
                     # draft-side fault: no target state was touched this
                     # round — degrade to plain decode and re-run the round
                     _degrade(f"draft fault: {e}")
+                    wave += 1
                     continue
 
                 # ONE widened-q target step scores all S draft positions
@@ -968,7 +1448,7 @@ class Server:
                     ts = time.perf_counter()
                     if watchdog is not None:
                         watchdog.beat()
-                    logits, new_cache = self._verify_step(variant, k)(
+                    logits, new_cache = self._verify_step(variant, k_eff)(
                         self.params,
                         {"tokens": jnp.asarray(fed, jnp.int32),
                          "positions": vpos},
@@ -1007,9 +1487,10 @@ class Server:
                     # token — every emitted token is a target argmax,
                     # so greedy output is bit-identical to plain decode
                     a = 0
-                    while a < k and fed[i, a + 1] == targ[i, a]:
+                    while a < k_eff and fed[i, a + 1] == targ[i, a]:
                         a += 1
                     e = min(a + 1, n - len(outputs[rid]))
+                    idx0 = len(outputs[rid])
                     outputs[rid].extend(int(t) for t in targ[i, :e])
                     new_len = pos0[rid] + e
                     # rejected tail: O(1) refcount rollback, no page copies
@@ -1026,7 +1507,13 @@ class Server:
                         continue
                     active[rid]["tok"] = int(targ[i, e - 1])
                     active[rid]["pos"] = new_len
-                    stats["proposed"] += k
+                    t_tok = time.perf_counter()
+                    for j in range(e):
+                        rq[rid]["tok_t"].append(t_tok)
+                        _emit("token", rid=rid, token=int(targ[i, j]),
+                              index=idx0 + j)
+                    wavestat["emitted"] += e
+                    stats["proposed"] += k_eff
                     stats["accepted"] += a
                     stats["emitted_spec"] += e
                     accepted_round += a
@@ -1082,32 +1569,62 @@ class Server:
                     dt_step = time.perf_counter() - ts
                     self.decode_step_latencies.append(dt_step)
                     self._step_lat_by_batch.setdefault(
-                        len(rids), []).append(dt_step)
+                        len(rids),
+                        deque(maxlen=self.history_window)).append(dt_step)
                 seen_batches.add(len(rids))
                 manager.absorb(rids, new_cache)
                 stats["decode_steps"] += 1
                 hit_nan = False
+                t_tok = time.perf_counter()
                 for i, rid in enumerate(rids):
                     if not finite[i]:
                         _quarantine(rid, "non-finite decode logits")
                         hit_nan = True
                         continue
+                    idx0 = len(outputs[rid])
                     outputs[rid].append(int(nxt[i]))
                     active[rid]["tok"] = int(nxt[i])
                     active[rid]["pos"] += 1
+                    rq[rid]["tok_t"].append(t_tok)
+                    wavestat["emitted"] += 1
+                    _emit("token", rid=rid, token=int(nxt[i]), index=idx0)
                 if hit_nan:
                     _audit()
+
+            # wave boundary: one "wave" event carries the batch shape, the
+            # operating point in force, and this wave's emission/prefill
+            # work; the governor observes the same numbers through its
+            # MAPE-K loop (modeled wave latency → Margot.observe)
+            dt_wave = time.perf_counter() - t_wave
+            _emit("wave", batch=len(rids), dt_s=dt_wave,
+                  emitted=wavestat["emitted"],
+                  prefill_tokens=wavestat["prefill_tokens"],
+                  k=(k_eff if S > 1 else 0),
+                  op=(dict(knobs) if gov is not None else None))
+            if gov is not None:
+                gov.observe_wave(dt_wave, batch=len(rids),
+                                 emitted=wavestat["emitted"],
+                                 prefill_tokens=wavestat["prefill_tokens"],
+                                 wave=wave)
+            wave += 1
 
         if aborted is not None:
             # a step failed past its retry budget: every in-flight request
             # fails *structurally* (partial output kept, pool released) —
             # the exception itself never escapes
-            for rid in list(active):
+            for rid in list(active) + list(prefilling):
                 outcome[rid] = {"status": "failed",
                                 "reason": f"{aborted.point} failed: "
                                           f"{aborted.cause}"}
                 fstats["failed"] += 1
+                if rid in prefilling:
+                    outputs.pop(rid, None)
+                _emit("outcome", rid=rid, status="failed",
+                      reason=outcome[rid]["reason"],
+                      tokens=len(outputs.get(rid, [])))
                 _drop(rid)
+            while pending:
+                waiting.append(pending.popleft())
             while waiting:
                 _reject(waiting.popleft(),
                         f"serve aborted at {aborted.point}",
@@ -1119,7 +1636,7 @@ class Server:
 
         self.last_pool_stats = manager.stats()
         self.last_pool_stats["grouped_admissions"] = grouped["admissions"]
-        if k:
+        if k_max:
             p = stats["proposed"]
             stats["acceptance"] = stats["accepted"] / p if p else 0.0
             stats["mean_tokens_per_verify"] = (
@@ -1154,11 +1671,25 @@ class Server:
                                  "injected_events": injected,
                                  "actions": actions,
                                  "outcomes": by_status, **fstats}
-        self.last_outcomes = [
-            {"rid": r, "status": outcome[r]["status"],
-             "reason": outcome[r]["reason"],
-             "tokens": len(outputs.get(r, [])[:n])}
-            for r in range(len(prompts))]
+        self.last_qos_stats = gov.stats() if gov is not None else None
+
+        def _outcome_row(r):
+            m = rq[r]
+            row = {"rid": r, "status": outcome[r]["status"],
+                   "reason": outcome[r]["reason"],
+                   "tokens": len(outputs.get(r, [])[:n]),
+                   "ttft_s": None, "ttft_waves": None,
+                   "tok_gap_max_s": None}
+            if m["first_t"] is not None:
+                row["ttft_s"] = m["first_t"] - m["arrive_t"]
+                row["ttft_waves"] = m["first_wave"] - m["arrive_wave"]
+            tt = m["tok_t"]
+            if len(tt) > 1:
+                row["tok_gap_max_s"] = max(
+                    b - a for a, b in zip(tt, tt[1:]))
+            return row
+
+        self.last_outcomes = [_outcome_row(r) for r in range(len(prompts))]
         result = [np.asarray(outputs.get(r, [])[:n], np.int64)
                   for r in range(len(prompts))]
         dt = time.perf_counter() - t0
@@ -1167,13 +1698,8 @@ class Server:
         self.broker.publish(f"serve/latency/@host{jax.process_index()}", dt)
         if self.margot is not None:
             self.margot.observe("latency", dt)
-        # fault-shaped results (rejections, quarantines, deadline cuts)
-        # must never be memoized: the memo key carries no pool geometry or
-        # fault schedule, so a later right-sized serve would replay them
-        clean = (memo_ok and not injected and not actions
-                 and all(outcome[r]["status"] == "ok" for r in outcome))
-        if self.memo is not None and clean:
-            self.memo.update(key, result)
+        while evq:
+            yield evq.pop(0)
         return result
 
     def _paged_signature(self, *, batch: int, dtype):
